@@ -1,0 +1,38 @@
+"""Selection-cost scaling: exact matrix vs lazy vs stochastic vs matrix-free
+(§3.2's complexity ladder O(n·r) → O(n)), plus coverage-quality parity.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.craig import CraigConfig, CraigSelector
+
+
+def run() -> None:
+    rng = np.random.RandomState(0)
+    for n in (512, 2048):
+        feats = rng.randn(n, 32).astype(np.float32)
+        base_cov = None
+        for engine in ("matrix", "lazy", "stochastic", "features"):
+            sel = CraigSelector(
+                CraigConfig(fraction=0.05, engine=engine, per_class=False)
+            )
+            t0 = time.perf_counter()
+            cs = sel.select(feats)
+            jax.effects_barrier()
+            dt = time.perf_counter() - t0
+            if engine == "matrix":
+                base_cov = cs.coverage
+            emit(
+                f"selection_{engine}_n{n}",
+                dt * 1e6,
+                f"coverage_ratio={cs.coverage/max(base_cov,1e-9):.3f};r={cs.size}",
+            )
+
+
+if __name__ == "__main__":
+    run()

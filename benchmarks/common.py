@@ -1,0 +1,80 @@
+"""Shared benchmark utilities: timing, CSV emission, convex problem setup."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.craig import CraigConfig, CraigSelector
+from repro.data.synthetic import make_classification
+from repro.optim import ig_run
+
+LAM = 1e-5
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall time (µs) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# Convex experiment substrate (covtype-like synthetic, paper §5.1 scale-down)
+# ---------------------------------------------------------------------------
+
+
+def logreg_problem(n=2000, d=24, seed=0):
+    x, y = make_classification(n, d, 2, seed=seed)
+    x = x / np.abs(x).max()
+    ybin = jnp.asarray(y * 2.0 - 1.0)
+    X = jnp.asarray(x)
+
+    def grad_one(w, i):
+        xi, yi = X[i], ybin[i]
+        s = jax.nn.sigmoid(-yi * (xi @ w))
+        return -s * yi * xi + LAM * w
+
+    def full_loss(w):
+        z = -ybin * (X @ w)
+        return float(jnp.mean(jnp.log1p(jnp.exp(z))) + 0.5 * LAM * w @ w)
+
+    def test_error(w, Xt, yt):
+        pred = jnp.sign(Xt @ w)
+        return float(jnp.mean(pred != yt))
+
+    return X, ybin, y, grad_one, full_loss, test_error
+
+
+def craig_subset(X, labels, fraction, engine="matrix"):
+    sel = CraigSelector(
+        CraigConfig(fraction=fraction, per_class=True, engine=engine)
+    )
+    t0 = time.perf_counter()
+    cs = sel.select(X, labels)
+    return cs, time.perf_counter() - t0
+
+
+def sgd_curve(grad_one, X, ybin, idx, weights, full_loss, epochs, lr0=0.5, b=0.2):
+    """Returns (losses per epoch, grad evals per epoch)."""
+    n = X.shape[0]
+    _, trace = ig_run(
+        grad_one,
+        jnp.zeros(X.shape[1]),
+        jnp.asarray(idx, jnp.int32),
+        jnp.asarray(weights, jnp.float32),
+        lambda k: lr0 / (n * (1 + b * k)),
+        epochs,
+    )
+    return [full_loss(w) for w in trace], len(idx)

@@ -1,0 +1,50 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Roofline numbers come from
+``python -m repro.roofline`` over the dry-run artifacts (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_convex,
+        bench_data_efficiency,
+        bench_grad_error,
+        bench_greedy_order,
+        bench_kernels,
+        bench_lm_pipeline,
+        bench_mlp,
+        bench_selection,
+        bench_subset_size,
+    )
+
+    print("name,us_per_call,derived")
+    modules = [
+        bench_convex,       # Fig 1
+        bench_grad_error,   # Fig 2
+        bench_subset_size,  # Fig 3
+        bench_mlp,          # Fig 4
+        bench_data_efficiency,  # Fig 5
+        bench_greedy_order, # §3.2/Eq. 13 ordering property
+        bench_selection,    # §3.2 complexity ladder
+        bench_kernels,      # Pallas hot-spots
+        bench_lm_pipeline,  # §3.4 non-convex pipeline
+    ]
+    failed = 0
+    for mod in modules:
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001 — report all benches even if one breaks
+            failed += 1
+            print(f"{mod.__name__},nan,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""End-to-end LM training driver with CRAIG per-epoch coreset selection.
+
+Trains a decoder-only transformer on a synthetic topic-structured token
+stream for a few hundred steps, re-selecting a weighted coreset from pooled
+unembed-input gradient proxies (paper §3.4) every epoch, with checkpointing
+and restart support — the full production loop at laptop scale.
+
+Run:  PYTHONPATH=src python examples/lm_coreset_training.py \
+          [--steps 300] [--d-model 256] [--layers 8] [--no-craig]
+
+The default (--d-model 256 --layers 8 --vocab 8192) is a ~12M-param model;
+--d-model 768 --layers 12 --vocab 32768 gives ~100M for real hardware.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.craig import CraigConfig
+from repro.data.synthetic import TokenStream
+from repro.models import ModelConfig, init_params
+from repro.optim import adamw, warmup_cosine
+from repro.train import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--docs", type=int, default=512)
+    ap.add_argument("--fraction", type=float, default=0.3)
+    ap.add_argument("--no-craig", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="example-lm",
+        family="dense",
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=max(4, args.d_model // 64),
+        n_kv_heads=max(2, args.d_model // 128),
+        d_ff=args.d_model * 4,
+        vocab_size=args.vocab,
+        logit_chunk=64,
+    )
+    n_params = cfg.param_count()
+    print(f"model: {n_params/1e6:.1f}M params, {args.layers}L d={args.d_model}")
+
+    ds = TokenStream(
+        n_docs=args.docs, seq_len=args.seq, vocab_size=args.vocab, n_topics=16
+    )
+    tcfg = TrainerConfig(
+        batch_size=args.batch,
+        select_every_epochs=0 if args.no_craig else 1,
+        use_craig=not args.no_craig,
+        craig=CraigConfig(fraction=args.fraction, per_class=False),
+        proxy_pool_batches=args.docs // args.batch,
+        checkpoint_dir=args.ckpt,
+        checkpoint_every=100,
+    )
+    trainer = Trainer(
+        cfg, tcfg, ds, adamw(warmup_cosine(3e-4, 50, args.steps)),
+        lambda: init_params(jax.random.PRNGKey(0), cfg),
+    )
+    trainer.install_signal_handler()
+    if trainer.restore_or_init():
+        print(f"restored from checkpoint at step {trainer.step}")
+
+    t0 = time.time()
+    log = trainer.run(args.steps)
+    dt = time.time() - t0
+
+    steps = [m for m in log if m["event"] == "step"]
+    refreshes = [m for m in log if m["event"] == "craig_refresh"]
+    first = np.mean([s["loss"] for s in steps[:10]])
+    last = np.mean([s["loss"] for s in steps[-10:]])
+    print(f"\n{len(steps)} steps in {dt:.1f}s "
+          f"({dt/max(len(steps),1)*1e3:.0f} ms/step)")
+    print(f"loss: {first:.3f} → {last:.3f}")
+    if refreshes:
+        sel_t = sum(r["select_time_s"] for r in refreshes)
+        print(f"CRAIG: {len(refreshes)} refreshes, coreset "
+              f"{refreshes[-1]['coreset_size']}/{args.docs} docs, "
+              f"selection overhead {sel_t/dt*100:.1f}% of wall time, "
+              f"ε̂={refreshes[-1]['epsilon_hat']:.3f}")
+    print(f"distinct data touched: "
+          f"{trainer.sampler.active_size}/{args.docs} docs per epoch")
+
+
+if __name__ == "__main__":
+    main()

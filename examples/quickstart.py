@@ -1,0 +1,69 @@
+"""Quickstart: CRAIG in 60 seconds (paper Fig 1, miniature).
+
+Selects a 10% weighted coreset of a logistic-regression dataset with the
+greedy facility-location selector, trains with weighted incremental gradient
+descent (paper Eq. 20), and compares against full-data and random-subset
+training.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.craig import CraigConfig, CraigSelector
+from repro.data.synthetic import make_classification
+from repro.optim import ig_run
+
+N, D, LAM, EPOCHS = 1500, 20, 1e-5, 25
+
+
+def main() -> None:
+    x, y = make_classification(N, D, 2, seed=0)
+    x = x / np.abs(x).max()
+    X, ybin = jnp.asarray(x), jnp.asarray(y * 2.0 - 1.0)
+
+    def grad_one(w, i):
+        import jax
+
+        s = jax.nn.sigmoid(-ybin[i] * (X[i] @ w))
+        return -s * ybin[i] * X[i] + LAM * w
+
+    def full_loss(w):
+        z = -ybin * (X @ w)
+        return float(jnp.mean(jnp.log1p(jnp.exp(z))) + 0.5 * LAM * w @ w)
+
+    sched = lambda k: 2.0 / (N * (1 + 0.2 * k))
+
+    # 1) CRAIG selection: per-class facility location over feature proxies
+    t0 = time.time()
+    cs = CraigSelector(CraigConfig(fraction=0.1, per_class=True)).select(X, y)
+    print(f"selected {cs.size}/{N} examples in {time.time()-t0:.2f}s "
+          f"(γ sums to {cs.weights.sum():.0f}, ε̂={cs.epsilon_hat:.2f})")
+
+    # 2) train three ways
+    runs = {
+        "full   ": (np.arange(N), np.ones(N, np.float32)),
+        "craig  ": (cs.indices, cs.weights),
+        "random ": (
+            np.random.RandomState(0).choice(N, cs.size, replace=False),
+            np.full(cs.size, N / cs.size, np.float32),
+        ),
+    }
+    print(f"\n{'arm':8s} {'final loss':>11s} {'grad evals':>11s}")
+    for name, (idx, w) in runs.items():
+        t0 = time.time()
+        wgt, _ = ig_run(
+            grad_one, jnp.zeros(D), jnp.asarray(idx, jnp.int32),
+            jnp.asarray(w), sched, EPOCHS,
+        )
+        print(
+            f"{name:8s} {full_loss(wgt):11.4f} {EPOCHS*len(idx):11d}"
+            f"   ({time.time()-t0:.2f}s)"
+        )
+    print("\nCRAIG ≈ full-data loss at ~10% of the gradient evaluations.")
+
+
+if __name__ == "__main__":
+    main()

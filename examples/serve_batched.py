@@ -1,0 +1,67 @@
+"""Batched serving example: prefill + KV-cache greedy decoding.
+
+Loads (or initializes) a small model, prefills a batch of prompts through
+the decode path, and generates continuations with the jitted one-token
+serve_step — the same program the decode_32k/long_500k dry-run cells lower
+at production scale.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--batch 4] [--new 32]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models import ModelConfig, init_params
+from repro.serve import greedy_generate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new", type=int, default=32)
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window attention (0 = global)")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="serve-demo",
+        family="hybrid" if args.window else "dense",
+        n_layers=4,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab_size=4096,
+        window=args.window or None,
+        block_pattern=("rglru", "local_attn") if args.window else ("attn",),
+        d_rnn=128 if args.window else 0,
+        logit_chunk=64,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    print(f"model: {cfg.param_count()/1e6:.1f}M params "
+          f"({'local window ' + str(args.window) if args.window else 'global attention'})")
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    t0 = time.time()
+    out = greedy_generate(params, cfg, prompts, max_new=args.new)
+    dt = time.time() - t0
+    toks = args.batch * (args.prompt_len + args.new)
+    print(f"generated {args.batch}×{args.new} tokens in {dt:.2f}s "
+          f"({toks/dt:.0f} tok/s incl. prefill+compile)")
+    for b in range(min(args.batch, 2)):
+        seq = np.asarray(out[b])
+        print(f"  req{b}: …{seq[args.prompt_len-4:args.prompt_len].tolist()}"
+              f" → {seq[args.prompt_len:args.prompt_len+12].tolist()}…")
+    # determinism check
+    out2 = greedy_generate(params, cfg, prompts, max_new=args.new)
+    assert np.array_equal(np.asarray(out), np.asarray(out2))
+    print("deterministic: ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Regenerate EXPERIMENTS.md §Roofline tables from the artifact dirs.
+
+Run after a dry-run sweep:
+    PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import roofline  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OPT = os.path.join(ROOT, "artifacts", "dryrun")
+BASE = os.path.join(ROOT, "artifacts", "dryrun_baseline")
+
+
+def main() -> None:
+    cells = roofline.analyze_all(OPT, "16x16")
+    table = roofline.to_markdown(cells)
+    n_probe = sum(1 for c in cells if c.extrapolated)
+    caption = (
+        f"\n*{len(cells)} cells ({n_probe} probe-extrapolated); optimized "
+        "system (post-§Perf). Baseline tables: "
+        "`python -m repro.roofline --out artifacts/dryrun_baseline "
+        "--markdown`.*\n"
+    )
+    compare = roofline.compare_markdown(BASE, OPT, "16x16")
+    notes = """
+
+**Reading the comparison:**
+
+* `decode_32k`: **4.7-65x** on the dominant term (GQA-repeat fix + TP-only
+  serve params); every cell lands memory-bound at the cache/weight streaming
+  floor — the physically correct decode regime.  `long_500k`: 1.1-3.9x
+  (batch-1 keeps ZeRO-3 storage — no replica to amortize replicated weights).
+* `select_pool` (dense archs): **1.8-2.5x** dominant-term reduction from
+  `dp_over_model` (MoE archs intentionally keep expert parallelism — their
+  rows are 1.0x).
+* `prefill_32k` rows showing <1x are an **accounting correction, not a
+  regression**: baseline probes under-counted blockwise-attention tiles
+  (inner `lax.scan` bodies counted once); the optimized sweep unrolls tiles
+  in probes (`unroll_blocks`), so the "after" numbers include the full tile
+  traffic the "before" numbers missed.  The prefill program itself only
+  changed via the global fixes (same or less work).
+* `train_4k` rows are ~1.0x on the dominant memory term — consistent with
+  the §Perf cell-2 verdicts (the metric is dominated by backward elementwise
+  operand counting); train wins landed on FLOPs (1.2x dbrx) and HBM fit.
+"""
+
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    md = open(path).read()
+    block = (
+        "<!-- ROOFLINE_TABLE -->\n\n### Optimized system (full table)\n\n"
+        + table
+        + caption
+        + "\n### Baseline → optimized (paper-faithful vs beyond-paper)\n\n"
+        + compare
+        + notes
+        + "\n<!-- /ROOFLINE_TABLE -->"
+    )
+    if "<!-- /ROOFLINE_TABLE -->" in md:
+        md = re.sub(
+            r"<!-- ROOFLINE_TABLE -->.*?<!-- /ROOFLINE_TABLE -->",
+            block.replace("\\", "\\\\"),
+            md,
+            flags=re.S,
+        )
+    else:
+        md = md.replace("<!-- ROOFLINE_TABLE -->", block)
+    with open(path, "w") as f:
+        f.write(md)
+    print(f"wrote §Roofline: {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

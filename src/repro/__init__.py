@@ -1,0 +1,2 @@
+"""repro: CRAIG coreset-accelerated training framework (JAX, multi-pod)."""
+__version__ = "1.0.0"

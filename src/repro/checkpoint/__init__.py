@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing (atomic, async, keep-k, elastic restore)."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

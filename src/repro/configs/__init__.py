@@ -1,0 +1,4 @@
+"""Architecture configs (one module per assigned arch) + shapes + registry."""
+from repro.configs.shapes import SHAPES, ShapeSpec
+
+__all__ = ["SHAPES", "ShapeSpec"]

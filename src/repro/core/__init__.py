@@ -1,0 +1,32 @@
+"""CRAIG core: facility-location greedy selection over gradient proxies."""
+from repro.core.craig import CoresetSelection, CraigConfig, CraigSelector
+from repro.core.facility_location import (
+    FLResult,
+    facility_location_value,
+    greedy_fl_features,
+    greedy_fl_matrix,
+    lazy_greedy_fl,
+    stochastic_greedy_fl,
+)
+from repro.core.proxy import (
+    classifier_last_layer_proxy,
+    convex_feature_proxy,
+    exact_per_example_grads,
+    lm_unembed_input_proxy,
+)
+
+__all__ = [
+    "CoresetSelection",
+    "CraigConfig",
+    "CraigSelector",
+    "FLResult",
+    "facility_location_value",
+    "greedy_fl_features",
+    "greedy_fl_matrix",
+    "lazy_greedy_fl",
+    "stochastic_greedy_fl",
+    "classifier_last_layer_proxy",
+    "convex_feature_proxy",
+    "exact_per_example_grads",
+    "lm_unembed_input_proxy",
+]

@@ -1,0 +1,250 @@
+"""CRAIG selector (paper Alg. 1 + §3.3 budgeted variant + §5 per-class mode).
+
+Ties together proxy features → pairwise dissimilarity → greedy facility
+location → (indices, γ weights, ε estimate).  Selection operates on *gradient
+proxy features* produced by :mod:`repro.core.proxy`; for convex models these
+are (scaled) input features per paper Eq. 9, for deep nets last-layer
+gradients per Eq. 16.
+
+Two stopping modes:
+  * budget  (paper Eq. 14): |S| ≤ r, greedy (1−1/e) guarantee; ε read off the
+    residual coverage (paper Eq. 15).
+  * cover   (paper Eq. 12): grow S until L(S) ≤ ε_target.
+
+Per-class selection (paper §5): subsets are selected independently per class
+with budgets proportional to class frequency, then unioned — required for the
+Eq. 9 bounds (they hold only for same-label pairs) and empirically better for
+deep nets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import facility_location as fl
+
+__all__ = ["CraigConfig", "CoresetSelection", "CraigSelector", "pairwise_distances"]
+
+
+def pairwise_distances(feats: jax.Array, metric: str = "l2") -> jax.Array:
+    """Dense (n, n) proxy-gradient dissimilarity matrix d_ij (paper Eq. 7/9)."""
+    feats = feats.astype(jnp.float32)
+    if metric == "l2":
+        sq = jnp.sum(feats * feats, axis=-1)
+        d2 = sq[:, None] + sq[None, :] - 2.0 * feats @ feats.T
+        return jnp.sqrt(jnp.maximum(d2, 0.0))
+    if metric == "cosine":
+        nf = feats / (jnp.linalg.norm(feats, axis=-1, keepdims=True) + 1e-12)
+        return 1.0 - nf @ nf.T
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CraigConfig:
+    """Configuration for CRAIG subset selection.
+
+    Attributes:
+      mode: 'budget' (|S| ≤ fraction·n, paper Eq. 14) or 'cover'
+        (grow until L(S) ≤ epsilon, paper Eq. 12).
+      fraction: subset fraction r/n for 'budget' mode.
+      epsilon: target coverage for 'cover' mode (same units as d_ij).
+      metric: dissimilarity in proxy space ('l2' per the paper; 'cosine').
+      engine: 'matrix' (exact greedy, dense d matrix), 'lazy' (host lazy
+        greedy), 'stochastic' (paper's O(n) stochastic greedy), or
+        'features' (matrix-free blocked greedy; Pallas-accelerated on TPU).
+      per_class: stratified per-class selection (paper §5).
+      stochastic_delta: δ for stochastic-greedy sample size (n/r)·ln(1/δ).
+      gains_impl: 'jax' | 'pallas' — only for engine='features'.
+    """
+
+    mode: Literal["budget", "cover"] = "budget"
+    fraction: float = 0.1
+    epsilon: float = 0.0
+    metric: str = "l2"
+    engine: Literal["matrix", "lazy", "stochastic", "features"] = "matrix"
+    per_class: bool = True
+    stochastic_delta: float = 0.01
+    gains_impl: str = "jax"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class CoresetSelection:
+    """A selected weighted coreset.
+
+    indices/weights are aligned; ``order`` is the greedy selection order
+    (paper §3.2: early elements contribute most to the gradient estimate).
+    ``epsilon_hat`` is the data-driven bound on the gradient estimation error
+    from Eq. 15 (residual coverage); ``coverage`` is L(S).
+    """
+
+    indices: np.ndarray  # (r,) int64 into the pool
+    weights: np.ndarray  # (r,) float32, sum == n
+    order: np.ndarray  # (r,) — positions, greedy order
+    coverage: float
+    epsilon_hat: float
+    per_class_sizes: dict[int, int] | None = None
+
+    @property
+    def size(self) -> int:
+        return int(self.indices.shape[0])
+
+    def normalized_weights(self) -> np.ndarray:
+        """Weights scaled to mean 1 (γ_j · r / n) for weighted-loss training."""
+        w = self.weights.astype(np.float64)
+        return (w * (len(w) / max(w.sum(), 1e-12))).astype(np.float32)
+
+
+class CraigSelector:
+    """Selects weighted coresets from gradient-proxy features.
+
+    Usage::
+
+        sel = CraigSelector(CraigConfig(fraction=0.1, engine="matrix"))
+        coreset = sel.select(proxy_feats, labels=labels)
+        # train with per-element stepsizes coreset.weights (paper Eq. 20)
+    """
+
+    def __init__(self, config: CraigConfig):
+        self.config = config
+
+    # -- public API ---------------------------------------------------------
+
+    def select(
+        self, feats: jax.Array | np.ndarray, labels: np.ndarray | None = None
+    ) -> CoresetSelection:
+        cfg = self.config
+        feats = jnp.asarray(feats)
+        n = feats.shape[0]
+        if cfg.per_class and labels is not None:
+            return self._select_per_class(feats, np.asarray(labels))
+        budget = self._budget(n)
+        idx, w, gains, coverage = self._select_flat(feats, budget)
+        eps_hat = float(coverage)
+        return CoresetSelection(
+            indices=np.asarray(idx, np.int64),
+            weights=np.asarray(w, np.float32),
+            order=np.arange(len(np.asarray(idx))),
+            coverage=float(coverage),
+            epsilon_hat=eps_hat,
+        )
+
+    def select_distributed(
+        self, feats, mesh, axis_name: str = "data"
+    ) -> CoresetSelection:
+        """Two-round pod-scale selection (core.distributed) with the same
+        output contract as :meth:`select`.  ``feats`` is the global (n, d)
+        pool; budgets derive from ``config.fraction``."""
+        from repro.core.distributed import distributed_select
+
+        n = feats.shape[0]
+        n_shards = int(mesh.shape[axis_name])
+        r_final = self._budget(n)
+        r_local = max(1, min(n // n_shards, int(r_final * 2 / n_shards) + 1))
+        res = distributed_select(
+            jnp.asarray(feats, jnp.float32), mesh,
+            r_local=r_local, r_final=r_final, axis_name=axis_name,
+        )
+        return CoresetSelection(
+            indices=np.asarray(res.indices, np.int64),
+            weights=np.asarray(res.weights, np.float32),
+            order=np.arange(r_final),
+            coverage=float(res.coverage),
+            epsilon_hat=float(res.coverage),
+        )
+
+    # -- internals ----------------------------------------------------------
+
+    def _budget(self, n: int) -> int:
+        return max(1, int(round(self.config.fraction * n)))
+
+    def _select_flat(self, feats: jax.Array, budget: int):
+        cfg = self.config
+        n = feats.shape[0]
+        budget = min(budget, n)
+        if cfg.engine == "features":
+            res = fl.greedy_fl_features(
+                feats, budget, gains_impl=cfg.gains_impl
+            )
+            return res.indices, res.weights, res.gains, res.coverage
+
+        dist = pairwise_distances(feats, cfg.metric)
+        d_max = jnp.max(dist) + 1e-6
+        sim = d_max - dist  # auxiliary element at distance d_max
+        if cfg.engine == "matrix":
+            if cfg.mode == "cover":
+                return self._cover_from_matrix(dist, sim)
+            res = fl.greedy_fl_matrix(sim, budget)
+        elif cfg.engine == "lazy":
+            res = fl.lazy_greedy_fl(np.asarray(sim), budget)
+        elif cfg.engine == "stochastic":
+            m = max(1, int(np.ceil(n / budget * np.log(1.0 / cfg.stochastic_delta))))
+            m = min(m, n)
+            res = fl.stochastic_greedy_fl(
+                sim, budget, jax.random.PRNGKey(cfg.seed), m
+            )
+        else:
+            raise ValueError(f"unknown engine {cfg.engine!r}")
+        coverage = fl.coverage_l(dist, res.indices)
+        return res.indices, res.weights, res.gains, coverage
+
+    def _cover_from_matrix(self, dist: jax.Array, sim: jax.Array):
+        """Submodular cover (paper Eq. 12): grow until L(S) ≤ ε target."""
+        eps = self.config.epsilon
+        n = dist.shape[0]
+        # Greedy with the full budget, then cut at the first prefix whose
+        # coverage meets eps (greedy order is nested, so prefixes are valid).
+        res = fl.greedy_fl_matrix(sim, n)
+        dist_sel = dist[:, res.indices]  # (n, n) in greedy order
+        run_min = jax.lax.associative_scan(jnp.minimum, dist_sel, axis=1)
+        cov_prefix = jnp.sum(run_min, axis=0)  # (n,) L(S_k) for k=1..n
+        k = int(jnp.argmax(cov_prefix <= eps)) + 1
+        if not bool(cov_prefix[k - 1] <= eps):
+            k = n  # ε unreachable: keep everything
+        idx = res.indices[:k]
+        _, w = fl.assign_and_weights(dist[:, idx])
+        return idx, w, res.gains[:k], cov_prefix[k - 1]
+
+    def _select_per_class(
+        self, feats: jax.Array, labels: np.ndarray
+    ) -> CoresetSelection:
+        """Paper §5: select within each class, budgets ∝ class frequency."""
+        n = feats.shape[0]
+        classes = np.unique(labels)
+        total_budget = self._budget(n)
+        all_idx: list[np.ndarray] = []
+        all_w: list[np.ndarray] = []
+        coverage = 0.0
+        sizes: dict[int, int] = {}
+        # Largest-remainder apportionment of the budget across classes.
+        counts = np.array([(labels == c).sum() for c in classes], np.int64)
+        raw = counts / counts.sum() * total_budget
+        budgets = np.floor(raw).astype(np.int64)
+        budgets = np.maximum(budgets, 1)
+        short = total_budget - budgets.sum()
+        if short > 0:
+            order = np.argsort(-(raw - np.floor(raw)))
+            budgets[order[: int(short)]] += 1
+        for c, b in zip(classes, budgets):
+            mask = labels == c
+            pool = np.nonzero(mask)[0]
+            sub_feats = feats[pool]
+            idx, w, _, cov = self._select_flat(sub_feats, int(b))
+            all_idx.append(pool[np.asarray(idx, np.int64)])
+            all_w.append(np.asarray(w, np.float32))
+            coverage += float(cov)
+            sizes[int(c)] = int(np.asarray(idx).shape[0])
+        indices = np.concatenate(all_idx)
+        weights = np.concatenate(all_w)
+        return CoresetSelection(
+            indices=indices,
+            weights=weights,
+            order=np.arange(len(indices)),
+            coverage=coverage,
+            epsilon_hat=coverage,
+            per_class_sizes=sizes,
+        )

@@ -1,0 +1,142 @@
+"""Two-round distributed CRAIG selection (GreeDi-style, shard_map).
+
+Pod-scale training cannot ship the whole candidate pool's proxy features to
+one host.  Following the paper's own scaling references (Mirzasoleiman et al.
+2015b, 2016 — distributed submodular cover/maximization), selection runs in
+two rounds over the data-parallel mesh axis:
+
+  Round 1 (local):  every data shard runs greedy facility location over its
+      local partition of the pool, selecting ``r_local`` candidates with local
+      γ weights.  (Per-class partitioning composes with this: the trainer
+      shards each class across hosts.)
+
+  Round 2 (merge):  candidate features and γ weights are all-gathered
+      (r_total = shards·r_local ≪ n), and a *weighted* greedy FL — each
+      candidate counts γ_c points — selects the final ``r_final`` medoids.
+      This runs replicated on every shard (deterministic → identical result).
+
+  Re-weighting:     every shard assigns its local points to the final medoids
+      and the per-medoid counts are ``psum``-reduced, so the final γ weights
+      cover the *entire* pool exactly (Σγ = n globally).
+
+The approximation factor of the two-round scheme is (1−1/e)²/2-ish in the
+worst case but empirically near-exact (GreeDi); tests verify parity with the
+centralized selection on clustered data.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import facility_location as fl
+
+__all__ = ["DistributedSelection", "distributed_select", "local_then_merge"]
+
+
+class DistributedSelection(NamedTuple):
+    indices: jax.Array  # (r_final,) int32 — *global* pool indices
+    weights: jax.Array  # (r_final,) float32 — Σ == n_global
+    coverage: jax.Array  # () float32 — global L(S)
+
+
+def _local_round(feats: jax.Array, r_local: int):
+    """Round 1 on one shard: greedy FL over local features."""
+    sq = jnp.sum(feats * feats, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * feats @ feats.T
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    d_max = jnp.max(dist) + 1e-6
+    res = fl.greedy_fl_matrix(d_max - dist, r_local)
+    return res.indices, res.weights
+
+
+def _merge_round(
+    cand_feats: jax.Array, cand_w: jax.Array, r_final: int
+) -> jax.Array:
+    """Round 2: weighted greedy FL over the gathered candidate union.
+
+    Returns positions (r_final,) into the candidate union.
+    """
+    sq = jnp.sum(cand_feats * cand_feats, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * cand_feats @ cand_feats.T
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    d_max = jnp.max(dist) + 1e-6
+    res = fl.greedy_fl_matrix(d_max - dist, r_final, point_weights=cand_w)
+    return res.indices
+
+
+def local_then_merge(
+    feats_sharded: jax.Array,
+    r_local: int,
+    r_final: int,
+    axis_name: str = "data",
+):
+    """shard_map body: runs on one shard with a mapped ``axis_name``.
+
+    Args:
+      feats_sharded: (n_local, d) this shard's proxy features (fp32).
+      r_local: round-1 budget per shard.
+      r_final: final global budget.
+    Returns:
+      (global_indices (r_final,), weights (r_final,), coverage ()).
+    """
+    n_local, _ = feats_sharded.shape
+    shard_id = jax.lax.axis_index(axis_name)
+    n_shards = jax.lax.axis_size(axis_name)
+
+    local_idx, local_w = _local_round(feats_sharded, r_local)
+    local_global_idx = shard_id * n_local + local_idx
+
+    # Gather candidate features / weights / global ids from all shards.
+    cand_feats = jax.lax.all_gather(
+        feats_sharded[local_idx], axis_name, tiled=True
+    )  # (n_shards·r_local, d)
+    cand_w = jax.lax.all_gather(local_w, axis_name, tiled=True)
+    cand_gidx = jax.lax.all_gather(local_global_idx, axis_name, tiled=True)
+
+    sel_pos = _merge_round(cand_feats, cand_w, r_final)  # replicated
+    sel_feats = cand_feats[sel_pos]  # (r_final, d)
+    sel_gidx = cand_gidx[sel_pos]
+
+    # Exact global re-weighting: assign local points to final medoids.
+    sqx = jnp.sum(feats_sharded * feats_sharded, axis=-1)
+    sqm = jnp.sum(sel_feats * sel_feats, axis=-1)
+    d2 = sqx[:, None] + sqm[None, :] - 2.0 * feats_sharded @ sel_feats.T
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))  # (n_local, r_final)
+    assign = jnp.argmin(dist, axis=1)
+    local_counts = jnp.zeros((r_final,), jnp.float32).at[assign].add(1.0)
+    weights = jax.lax.psum(local_counts, axis_name)
+    coverage = jax.lax.psum(jnp.sum(jnp.min(dist, axis=1)), axis_name)
+    return sel_gidx.astype(jnp.int32), weights, coverage
+
+
+def distributed_select(
+    feats: jax.Array,
+    mesh: Mesh,
+    r_local: int,
+    r_final: int,
+    axis_name: str = "data",
+) -> DistributedSelection:
+    """Run two-round distributed selection over ``mesh[axis_name]``.
+
+    ``feats`` is (n, d) with n divisible by the axis size; it is sharded over
+    the first dimension.  Output indices/weights are fully replicated.
+    """
+    body = partial(
+        local_then_merge, r_local=r_local, r_final=r_final, axis_name=axis_name
+    )
+    spec_in = P(axis_name, None)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec_in,),
+        out_specs=(P(), P(), P()),
+        # The greedy scan's carry is initialized from constants inside the
+        # mapped body; skip the varying-manual-axes type check (JAX ≥0.7).
+        check_vma=False,
+    )
+    idx, w, cov = fn(feats.astype(jnp.float32))
+    return DistributedSelection(idx, w, cov)

@@ -1,0 +1,167 @@
+"""Gradient-proxy feature extraction for CRAIG (paper Eq. 9 and Eq. 16).
+
+The dissimilarity CRAIG needs is d_ij = max_w ‖∇f_i(w) − ∇f_j(w)‖ (Eq. 7).
+The paper bounds it by quantities that never require full per-example
+gradients:
+
+* Convex models (Appendix B.1, Eq. 9):  d_ij ≤ const · ‖x_i − x_j‖ for
+  same-label pairs → proxy feature = x_i, selection per class, as a
+  *pre-processing* step (w-independent).
+
+* Deep nets (§3.4, Eq. 16, Appendix B.2): d_ij is captured by the gradient of
+  the loss w.r.t. the input of the last layer.  For softmax+CE the last-layer
+  gradient is (p_i − y_i) — "no backward pass or extra storage".
+
+* LMs (this framework's adaptation, DESIGN.md §2): per-token (p − y) is
+  vocab-sized; the gradient w.r.t. the *input of the unembedding* is
+  g_t = (p_t − y_t) @ W_unembedᵀ ∈ R^{d_model}; the per-sequence proxy is the
+  mean over (non-padding) tokens.  Computed chunked over the sequence so the
+  (T, V) softmax is never resident; on TPU the fused Pallas `ce_proxy` kernel
+  performs (softmax(z)−y)@Wᵀ blockwise over the vocab.
+
+Also provides exact per-example gradients (vmap(grad)) as the test oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "convex_feature_proxy",
+    "classifier_last_layer_proxy",
+    "lm_unembed_input_proxy",
+    "exact_per_example_grads",
+]
+
+
+def convex_feature_proxy(x: jax.Array, normalize: bool = False) -> jax.Array:
+    """Proxy for convex losses (Eq. 9): the raw feature vectors.
+
+    ‖∇f_i(w) − ∇f_j(w)‖ ≤ O(‖w‖)·‖x_i − x_j‖ for same-label pairs, so
+    selection on x-space distances upper-bounds gradient distances up to a
+    constant that scales ε but not the argmin subset.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if normalize:
+        x = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+    return x
+
+
+def classifier_last_layer_proxy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Softmax+CE last-layer gradient proxy (§3.4): p − y, per example.
+
+    Args:
+      logits: (n, num_classes).
+      labels: (n,) int class ids.
+    Returns:
+      (n, num_classes) float32 proxy features.
+    """
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    y = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    return p - y
+
+
+@partial(jax.jit, static_argnames=("chunk", "valid_v", "compute_dtype"))
+def lm_unembed_input_proxy(
+    hidden: jax.Array,
+    unembed: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array | None = None,
+    chunk: int = 512,
+    valid_v: int | None = None,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Pooled gradient w.r.t. the unembedding input, per sequence.
+
+    g_{b} = mean_t  (softmax(h_{b,t} Wᵀ) − onehot(y_{b,t})) @ W     ∈ R^{d}
+
+    computed by scanning over sequence chunks so that logits (chunk, V) are
+    transient.  This is exactly d loss_b / d h_{b,t} pooled over t (for mean-
+    reduced CE), i.e. the paper's "gradient of the loss w.r.t. the input to
+    the last layer" (Eq. 16) adapted to token streams.
+
+    Args:
+      hidden: (B, T, D) final hidden states (pre-unembedding).
+      unembed: (D, V) unembedding matrix.
+      labels: (B, T) int32 targets.
+      mask: optional (B, T) {0,1} validity mask.
+      chunk: sequence chunk length (static).
+    Returns:
+      (B, D) float32 proxy features.
+    """
+    B, T, D = hidden.shape
+    V = unembed.shape[1]
+    if mask is None:
+        mask = jnp.ones((B, T), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    n_chunks = (T + chunk - 1) // chunk
+    pad = n_chunks * chunk - T
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hidden = hidden.reshape(B, n_chunks, chunk, D)
+    labels = labels.reshape(B, n_chunks, chunk)
+    mask = mask.reshape(B, n_chunks, chunk)
+
+    pad_bias = None
+    if valid_v is not None and valid_v < V:
+        pad_bias = jnp.where(jnp.arange(V) < valid_v, 0.0, -1e30)
+
+    def body(acc, xs):
+        # the two big (c, V) matmuls run in compute_dtype (bf16 in the
+        # production select path — §Perf iteration 3b); softmax and the
+        # pooled accumulator stay fp32
+        h, y, m = xs  # (B, c, D), (B, c), (B, c)
+        logits = jnp.einsum(
+            "bcd,dv->bcv", h.astype(compute_dtype), unembed.astype(compute_dtype)
+        ).astype(jnp.float32)
+        if pad_bias is not None:
+            logits = logits + pad_bias
+        p = jax.nn.softmax(logits, axis=-1)
+        delta = p - jax.nn.one_hot(y, V, dtype=jnp.float32)  # (B, c, V)
+        g = jnp.einsum(
+            "bcv,dv->bcd", delta.astype(compute_dtype), unembed.astype(compute_dtype)
+        ).astype(jnp.float32)
+        acc = acc + jnp.einsum("bcd,bc->bd", g, m)
+        return acc, None
+
+    acc0 = jnp.zeros((B, D), jnp.float32)
+    acc, _ = jax.lax.scan(
+        body,
+        acc0,
+        (
+            jnp.moveaxis(hidden, 1, 0),
+            jnp.moveaxis(labels, 1, 0),
+            jnp.moveaxis(mask, 1, 0),
+        ),
+    )
+    denom = jnp.maximum(jnp.sum(mask, axis=(1, 2)), 1.0)
+    return acc / denom[:, None]
+
+
+def exact_per_example_grads(
+    loss_fn: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
+    params: jax.Array,
+    xs: jax.Array,
+    ys: jax.Array,
+) -> jax.Array:
+    """Oracle: exact flattened per-example gradients via vmap(grad).
+
+    Args:
+      loss_fn: (params, x_i, y_i) → scalar loss for one example.
+      params: pytree of parameters.
+      xs, ys: batched examples.
+    Returns:
+      (n, P) float32 matrix of flattened per-example gradients.
+    """
+
+    def flat_grad(x, y):
+        g = jax.grad(loss_fn)(params, x, y)
+        leaves = jax.tree_util.tree_leaves(g)
+        return jnp.concatenate([jnp.ravel(l) for l in leaves]).astype(jnp.float32)
+
+    return jax.vmap(flat_grad)(xs, ys)

@@ -1,0 +1,8 @@
+"""Data substrate: synthetic corpora, coreset sampler, prefetch pipeline."""
+from repro.data.pipeline import CoresetSampler, GlobalBatcher, Prefetcher
+from repro.data.synthetic import GaussianMixture, TokenStream, make_classification
+
+__all__ = [
+    "CoresetSampler", "GlobalBatcher", "Prefetcher",
+    "GaussianMixture", "TokenStream", "make_classification",
+]

@@ -1,0 +1,170 @@
+"""Data pipeline: coreset-aware sampling, global-batch assembly, host
+sharding, and background prefetch.
+
+The pipeline composes three layers:
+
+  CoresetSampler   — yields (indices, γ weights) per step.  In `full` mode it
+                     is a plain shuffled epoch iterator (γ=1); after a CRAIG
+                     refresh it iterates the weighted coreset (paper Eq. 20:
+                     every epoch visits each selected element once, with its
+                     per-element stepsize γ_j).
+  GlobalBatcher    — materializes {tokens, labels, weights} numpy batches
+                     from an index-addressable dataset.
+  Prefetcher       — background thread, depth-k queue (overlaps host data
+                     work with device compute).
+
+Determinism/fault-tolerance contract: state = (epoch, step_in_epoch,
+coreset snapshot).  `state_dict()`/`load_state_dict()` round-trip exactly;
+a restarted trainer sees the identical stream (tests/test_data.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["CoresetSampler", "GlobalBatcher", "Prefetcher"]
+
+
+class CoresetSampler:
+    """Per-epoch index/weight sampler with optional active coreset."""
+
+    def __init__(self, n: int, batch: int, seed: int = 0):
+        self.n = n
+        self.batch = batch
+        self.seed = seed
+        self.epoch = 0
+        self.step_in_epoch = 0
+        self._indices: np.ndarray | None = None  # active coreset (None=full)
+        self._weights: np.ndarray | None = None
+
+    # -- coreset management ---------------------------------------------
+
+    def set_coreset(
+        self,
+        indices: np.ndarray,
+        weights: np.ndarray,
+        keep_order: bool = False,
+    ) -> None:
+        """keep_order=True preserves the greedy selection order (paper §3.2:
+        early elements carry most of the gradient approximation — useful for
+        curriculum-style first epochs); default canonicalizes by index."""
+        if keep_order:
+            self._indices = np.asarray(indices)
+            self._weights = np.asarray(weights, np.float32)
+        else:
+            order = np.argsort(indices)
+            self._indices = np.asarray(indices)[order]
+            self._weights = np.asarray(weights, np.float32)[order]
+
+    def clear_coreset(self) -> None:
+        self._indices = self._weights = None
+
+    @property
+    def active_size(self) -> int:
+        return self.n if self._indices is None else len(self._indices)
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return max(1, self.active_size // self.batch)
+
+    # -- iteration --------------------------------------------------------
+
+    def _epoch_perm(self) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, self.epoch))
+        return rng.permutation(self.active_size)
+
+    def next_batch(self) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (pool indices (B,), γ weights (B,)) and advances."""
+        perm = self._epoch_perm()
+        lo = self.step_in_epoch * self.batch
+        sel = perm[lo : lo + self.batch]
+        if len(sel) < self.batch:  # wrap within epoch (drop-last semantics)
+            sel = np.concatenate([sel, perm[: self.batch - len(sel)]])
+        if self._indices is None:
+            idx = sel
+            w = np.ones((self.batch,), np.float32)
+        else:
+            idx = self._indices[sel]
+            w = self._weights[sel]
+            # normalize weights to mean≈1 so the lr scale is comparable to
+            # full-data training (γ sums to n over the coreset's r elements)
+            w = w * (len(self._indices) / max(self._weights.sum(), 1e-9))
+        self.step_in_epoch += 1
+        if self.step_in_epoch >= self.steps_per_epoch:
+            self.step_in_epoch = 0
+            self.epoch += 1
+        return idx, w.astype(np.float32)
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "epoch": self.epoch,
+            "step_in_epoch": self.step_in_epoch,
+            "indices": None if self._indices is None else self._indices.tolist(),
+            "weights": None if self._weights is None else self._weights.tolist(),
+        }
+
+    def load_state_dict(self, s: dict) -> None:
+        self.epoch = int(s["epoch"])
+        self.step_in_epoch = int(s["step_in_epoch"])
+        if s["indices"] is None:
+            self.clear_coreset()
+        else:
+            self._indices = np.asarray(s["indices"], np.int64)
+            self._weights = np.asarray(s["weights"], np.float32)
+
+    def skip_to(self, epoch: int, step_in_epoch: int) -> None:
+        """Straggler/restart skip-ahead: O(1), no data regeneration."""
+        self.epoch = epoch
+        self.step_in_epoch = step_in_epoch
+
+
+class GlobalBatcher:
+    """Assembles model-ready global batches from an indexable dataset."""
+
+    def __init__(self, dataset, sampler: CoresetSampler):
+        self.dataset = dataset
+        self.sampler = sampler
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        while True:
+            yield self.next()
+
+    def next(self) -> dict[str, np.ndarray]:
+        idx, w = self.sampler.next_batch()
+        batch = self.dataset.batch(idx)
+        batch["weights"] = w
+        batch["indices"] = idx.astype(np.int64)
+        return batch
+
+
+class Prefetcher:
+    """Depth-k background prefetch of host batches."""
+
+    def __init__(self, it, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            for item in it:
+                if self._stop.is_set():
+                    return
+                self._q.put(item)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def next(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,4 @@
+"""Distribution substrate: sharding rules, collectives, compression."""
+from repro.distributed import collectives, compression, sharding
+
+__all__ = ["collectives", "compression", "sharding"]

@@ -1,0 +1,38 @@
+"""Collective helpers: manual reduce-scatter/all-gather gradient sync.
+
+Under plain pjit, gradient synchronization is implicit (GSPMD inserts
+all-reduces).  For §Perf iterations we also provide an explicit shard_map
+path that replaces `all-reduce` with `reduce-scatter + all-gather` so the
+optimizer update runs on 1/|axis| of each gradient (ZeRO-2 style update
+sharding) — halving the collective bytes on the critical path and letting
+XLA overlap the all-gather of updated params with the next microbatch.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["reduce_scatter_mean", "all_gather_params", "psum_mean"]
+
+
+def psum_mean(tree: Any, axis_name: str) -> Any:
+    n = jax.lax.psum(1, axis_name)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, tree)
+
+
+def reduce_scatter_mean(x: jax.Array, axis_name: str) -> jax.Array:
+    """Reduce-scatter over dim 0 (padded to the axis size), mean semantics."""
+    n = jax.lax.axis_size(axis_name)
+    pad = (-x.shape[0]) % n
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    out = jax.lax.psum_scatter(x, axis_name, scatter_dimension=0, tiled=True)
+    return out / n
+
+
+def all_gather_params(x: jax.Array, axis_name: str, orig_dim0: int) -> jax.Array:
+    """Inverse of reduce_scatter_mean's sharding (drops dim-0 padding)."""
+    full = jax.lax.all_gather(x, axis_name, tiled=True)
+    return full[:orig_dim0]

@@ -1,0 +1,99 @@
+"""Gradient compression for the cross-pod (DCN) data-parallel axis.
+
+Int8 block-quantized gradient sync with error feedback (1-bit-Adam-family
+technique adapted to jax collectives):
+
+  * quantize: per-block (256) absmax scaling to int8;
+  * sync: ``all_gather`` of the int8 payload (+fp32 scales, ~0.4% overhead)
+    keeps int8 *on the wire*; the weighted sum is reconstructed locally and
+    exactly equals the sum of per-peer dequantized gradients;
+  * error feedback: each peer's quantization residual is carried into its
+    next step's gradient (preserves convergence — Karimireddy et al. 2019).
+
+DCN bytes per sync drop ~4x vs fp32 ring all-reduce at pod-count 2.
+Used via the ``grad_transform`` hook of train_step inside shard_map, or
+standalone through ``compressed_psum``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_psum",
+    "make_error_feedback",
+]
+
+_BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> jax.Array:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (any shape) → (int8 payload (n_blocks, B), fp32 scales (n_blocks,))."""
+    blocks = _pad_to_block(x.astype(jnp.float32)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(
+    q: jax.Array, scale: jax.Array, shape: tuple[int, ...]
+) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean over ``axis_name`` with int8 on-the-wire payload."""
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)  # (P, nb, B) — int8 wire bytes
+    ss = jax.lax.all_gather(scale, axis_name)  # (P, nb)
+    total = jnp.sum(qs.astype(jnp.float32) * ss[..., None], axis=0)
+    n = jax.lax.psum(1, axis_name)
+    flat = total.reshape(-1)
+    size = 1
+    for s in x.shape:
+        size *= s
+    return flat[:size].reshape(x.shape) / n
+
+
+def make_error_feedback(grad_like: Any):
+    """Returns (init_residual(), apply(grads, residual) → (delivered, res')).
+
+    ``apply`` adds the carried residual, quantize→dequantize (what the wire
+    delivers), and stores the new residual = input − delivered.
+    """
+
+    def init_residual():
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grad_like)
+
+    def apply(grads, residual):
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_r = jax.tree_util.tree_leaves(residual)
+        delivered, new_res = [], []
+        for g, r in zip(flat_g, flat_r):
+            total = g.astype(jnp.float32) + r
+            q, s = quantize_int8(total)
+            d = dequantize_int8(q, s, total.shape)
+            delivered.append(d)
+            new_res.append(total - d)
+        return (
+            jax.tree_util.tree_unflatten(treedef, delivered),
+            jax.tree_util.tree_unflatten(treedef, new_res),
+        )
+
+    return init_residual, apply

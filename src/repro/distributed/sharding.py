@@ -1,0 +1,305 @@
+"""Sharding rules: parameter-path patterns → PartitionSpec.
+
+Mesh axes (launch/mesh.py):
+  single-pod:  ("data", "model")           = (16, 16)
+  multi-pod:   ("pod", "data", "model")    = (2, 16, 16)
+
+Policy (DESIGN.md §4):
+  * 2-D "fsdp × tensor" parameter sharding: the d_model-like dimension of
+    every large matrix shards over ``data`` (ZeRO-3), the ffn/head/vocab/
+    expert dimension over ``model`` (tensor/expert parallelism).
+  * ``pod`` is pure data parallelism (DCN): params replicated across pods,
+    gradients all-reduced over (pod, data).
+  * Activations: batch over (pod, data); sequence-parallel fallback for
+    batch < |data| cells (long_500k) is handled by the batch specs below.
+  * Optimizer state shards exactly like its parameter.
+
+Rules are (regex, spec-builder) pairs matched against "path/like/this"
+parameter paths; first match wins.  ``spec(mesh)`` drops axes the mesh does
+not have, so one rule set serves both meshes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_specs",
+    "param_shardings",
+    "batch_specs",
+    "state_shardings",
+    "serve_param_specs",
+    "serve_state_specs",
+    "logical_to_sharding",
+]
+
+# dimension-name → mesh-axis mapping
+_FSDP = "data"  # ZeRO-3 axis
+_TP = "model"  # tensor/expert axis
+
+
+def _spec(*axes):
+    return P(*axes)
+
+
+# (regex over param path, PartitionSpec with logical names). Paths use '/'.
+# Order matters: first full match wins (unembed before embed!).
+_RULES: list[tuple[str, P]] = [
+    # unembedding: d_model over data, vocab over model (plain matmul)
+    (r".*unembed$", P(_FSDP, _TP)),  # (D, V) [(C, D, V) rank-aligns]
+    # embedding: vocab replicated — a vocab-sharded gather forces SPMD full
+    # rematerialization; d_model over both axes instead
+    (r".*embed$", P(None, (_FSDP, _TP))),  # (V, D)
+    # attention
+    (r".*mixer/wq$", P(_FSDP, _TP, None)),  # (D, H, hd)
+    (r".*mixer/wk$", P(_FSDP, _TP, None)),
+    (r".*mixer/wv$", P(_FSDP, _TP, None)),
+    (r".*mixer/wo$", P(_TP, None, _FSDP)),  # (H, hd, D)
+    (r".*mixer/b[qkv]$", P(_TP, None)),  # (H, hd)
+    # griffin / rg-lru
+    (r".*mixer/w_(x|gate)$", P(_FSDP, _TP)),  # (D, R)
+    (r".*mixer/w_out$", P(_TP, _FSDP)),  # (R, D)
+    (r".*mixer/w_(a|i)$", P(_TP, None)),  # (R, R) diag-ish gates
+    (r".*mixer/conv$", P(None, _TP)),  # (K, R)
+    (r".*mixer/(lam|b_a|b_i)$", P(_TP)),  # (R,)
+    # mlstm / slstm
+    (r".*mixer/w_up$", P(_FSDP, _TP)),
+    (r".*mixer/w_down$", P(_TP, _FSDP)),
+    (r".*mixer/w(q|k|v)$", P(_TP, None, None)),  # (di, H, hd) — di over model
+    (r".*mixer/w_if$", P(_TP, None)),
+    (r".*mixer/w_in$", P(_FSDP, _TP)),  # slstm (D, 4di)
+    (r".*mixer/r_in$", P(None, None, _TP, None)),  # (4, H, hd, hd) — hd
+    # over model (H is tiny for xLSTM's 4-head sLSTM)
+    (r".*mixer/(skip_scale|b)$", P(_TP)),
+    # MoE: experts over model, fsdp over d_model dim
+    (r".*ffn/router$", P(_FSDP, None)),  # (D, E) — small
+    (r".*ffn/experts_in$", P(_TP, _FSDP, None)),  # (E, D, F)
+    (r".*ffn/experts_out$", P(_TP, None, _FSDP)),  # (E, F, D)
+    (r".*ffn/shared_in$", P(_FSDP, _TP)),
+    (r".*ffn/shared_out$", P(_TP, _FSDP)),
+    # dense FFN
+    (r".*ffn/w_in$", P(_FSDP, _TP)),  # (D, 2F)
+    (r".*ffn/w_out$", P(_TP, _FSDP)),  # (F, D)
+    # norms and anything 1-D: replicate
+    (r".*scale$", P()),
+    (r".*", P()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _mesh_axes(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def _filter_spec(spec: P, mesh: Mesh, ndim: int, shape=None) -> P:
+    """Drop axes the mesh lacks; align rank; drop non-divisible shardings.
+
+    pjit *argument* shardings require exact divisibility (unlike activation
+    constraints, where GSPMD pads unevenly), so non-divisible dims replicate.
+    """
+    axes = list(spec)
+    # rank-align: stacked (scan) params gain a leading layer axis — prepend
+    # None.  A rule with MORE axes than the leaf is a mismatch: replicate.
+    while len(axes) < ndim:
+        axes = [None] + axes
+    if len(axes) > ndim:
+        return P()
+    names = _mesh_axes(mesh)
+    out = []
+    for i, a in enumerate(axes):
+        group = a if isinstance(a, tuple) else (a,) if a is not None else ()
+        group = tuple(g for g in group if g in names)
+        if group and shape is not None:
+            if shape[i] % int(np.prod([mesh.shape[g] for g in group])) != 0:
+                group = ()  # non-divisible: replicate this dim
+        out.append(group if len(group) > 1 else (group[0] if group else None))
+    return P(*out)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        for pat, spec in _RULES:
+            if re.fullmatch(pat, ps):
+                return _filter_spec(spec, mesh, leaf.ndim, leaf.shape)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh)
+    )
+
+
+def serve_param_specs(params: Any, mesh: Mesh) -> Any:
+    """Inference-time parameter specs: TP/expert sharding only, NO ZeRO-3.
+
+    At serve time there is no optimizer state, so per-layer fsdp weight
+    all-gathers are pure overhead on the decode critical path (§Perf
+    iteration 1c): drop the `data` axis from every param spec — weights are
+    replicated across data-parallel replicas like every serving system does,
+    and per-device memory is params_bytes/|model| with no optimizer.
+    """
+
+    def strip(spec: P) -> P:
+        out = []
+        for a in spec:
+            group = a if isinstance(a, tuple) else (a,) if a else ()
+            group = tuple(g for g in group if g != _FSDP)
+            out.append(group if len(group) > 1 else (group[0] if group else None))
+        return P(*out)
+
+    return jax.tree.map(
+        strip, param_specs(params, mesh), is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def state_shardings(opt_state: Any, params_specs: Any, mesh: Mesh) -> Any:
+    """Optimizer state shards like its parameter; scalars replicate."""
+
+    def one(leaf):
+        return NamedSharding(mesh, P())
+
+    # OptState = (step, inner) where inner mirrors params (m/v dicts)
+    import jax.tree_util as jtu
+
+    def map_state(state):
+        step, inner = state
+        step_s = NamedSharding(mesh, P())
+        if isinstance(inner, dict):  # adamw {m, v}
+            inner_s = {
+                k: jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), params_specs
+                )
+                for k in inner
+            }
+        elif inner == ():
+            inner_s = ()
+        else:  # momentum: tree like params
+            inner_s = jax.tree.map(lambda s: NamedSharding(mesh, s), params_specs)
+        return type(state)(step_s, inner_s)
+
+    return map_state(opt_state)
+
+
+def batch_specs(
+    mesh: Mesh,
+    batch_shape_tree: dict,
+    seq_shard: bool = False,
+    dp_over_model: bool = False,
+) -> dict:
+    """Input batch specs: batch dim over (pod, data) — plus `model` in
+    dp_over_model mode (forward-only throughput programs); optionally shard
+    the sequence dim over data instead (long-context, batch=1 cells)."""
+    names = _mesh_axes(mesh)
+    dp_names = ("pod", "data", "model") if dp_over_model else ("pod", "data")
+    dp = tuple(a for a in dp_names if a in names)
+
+    def one(name, arr):
+        ndim = len(arr.shape)
+        b = arr.shape[0]
+        dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+        if name == "weights":
+            return P(dp if b % dp_size == 0 else None)
+        if b % dp_size != 0:
+            # batch not shardable (e.g. long_500k batch=1): shard sequence
+            if seq_shard and ndim >= 2 and arr.shape[1] % mesh.shape.get("data", 1) == 0:
+                return P(None, "data") if ndim == 2 else P(None, "data", *(None,) * (ndim - 2))
+            # greedy prefix of dp axes whose cumulative product divides b
+            dp_fit: list = []
+            prod = 1
+            for a in dp:
+                if b % (prod * mesh.shape[a]) == 0:
+                    dp_fit.append(a)
+                    prod *= mesh.shape[a]
+            dp_fit = tuple(dp_fit)
+            return P(dp_fit if dp_fit else None, *(None,) * (ndim - 1))
+        return P(dp, *(None,) * (ndim - 1))
+
+    return {k: one(k, v) for k, v in batch_shape_tree.items()}
+
+
+def serve_state_specs(state_tree: Any, mesh: Mesh, batch: int) -> Any:
+    """Sharding for decode caches/recurrent states (heuristic, shape-driven).
+
+    Per leaf:
+      * the dim whose size == ``batch`` shards over (pod, data) when
+        divisible (synchronized batched decode);
+      * the *last* remaining divisible dim shards over ``model`` — head_dim
+        for KV caches, value dim for mLSTM memories, recurrence width for
+        RG-LRU.  Sharding the *sequence* dim (split-KV) is tempting but
+        GSPMD cannot partition the per-step dynamic_update_slice into a
+        sharded dim: it all-gathers the cache every layer (measured 135x
+        collective blow-up — §Perf iteration 1); contraction-dim sharding
+        keeps cache updates local and costs only a small partial-sum
+        all-reduce of the scores;
+      * if the batch dim could not shard (long_500k batch=1), the largest
+        remaining divisible dim additionally takes ``data``.
+    """
+    names = _mesh_axes(mesh)
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tp_size = mesh.shape.get(_TP, 1)
+    data_size = mesh.shape.get("data", 1)
+
+    def one(leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        axes: list = [None] * ndim
+        used = set()
+        # batch dim
+        b_dim = None
+        for i, s in enumerate(shape):
+            if s == batch and batch % dp_size == 0 and batch >= dp_size:
+                axes[i] = dp
+                b_dim = i
+                used.add(i)
+                break
+        # model dim: last remaining divisible dim (see docstring)
+        cand = [
+            i
+            for i in range(ndim)
+            if i not in used and shape[i] % tp_size == 0 and shape[i] >= tp_size
+        ]
+        if cand and tp_size > 1:
+            mi = cand[-1]
+            axes[mi] = _TP
+            used.add(mi)
+        # orphaned data axis (batch unshardable): next largest divisible dim
+        if b_dim is None and data_size > 1:
+            cand = [
+                (shape[i], i)
+                for i in range(ndim)
+                if i not in used
+                and shape[i] % data_size == 0
+                and shape[i] >= data_size
+            ]
+            if cand:
+                _, di = max(cand)
+                axes[di] = "data"
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(one, state_tree)
+
+
+def logical_to_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

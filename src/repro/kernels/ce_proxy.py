@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused CRAIG gradient-proxy for token streams.
+
+Computes, for a chunk of T tokens with hidden states h_t ∈ R^d, labels y_t and
+unembedding W ∈ R^{d×V}, the gradient of per-token CE w.r.t. the unembedding
+input:
+
+    g_t = (softmax(h_t W) − onehot(y_t)) @ Wᵀ      ∈ R^d
+
+without ever materializing the (T, V) logits/softmax: the vocab axis is
+blocked and reduced online flash-style.  Per vocab block v:
+
+    z = h W_v                        (MXU, (bt, bv))
+    m' = max(m, rowmax(z)); c = exp(m − m')
+    l  = l·c + rowsum(exp(z − m'))
+    acc  = acc·c + exp(z − m') @ W_vᵀ           (MXU)
+    accy += onehot_v(y) @ W_vᵀ  (label column, unscaled)
+
+final:  g = acc / l − accy.
+
+This is the paper's §3.4 "gradient of the loss w.r.t. the input to the last
+layer" (Eq. 16) for LMs (DESIGN.md §2): the only extra work on top of a
+forward pass, fused so CRAIG's proxy extraction is bandwidth-, not
+memory-capacity-, limited even at V = 256k.
+
+Grid = (t_blocks, v_blocks), v inner; running (m, l, acc, accy) live in VMEM
+scratch across the v sweep of each t block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _TPU_PARAMS = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "arbitrary")
+    )
+except Exception:  # pragma: no cover - non-TPU builds
+    pltpu = None
+    _TPU_PARAMS = None
+
+__all__ = ["ce_proxy_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _ce_proxy_kernel(
+    h_ref, w_ref, y_ref, out_ref, m_scr, l_scr, acc_scr, accy_scr, *, block_v
+):
+    vi = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        accy_scr[...] = jnp.zeros_like(accy_scr)
+
+    h = h_ref[...]  # (bt, d)
+    w = w_ref[...]  # (d, bv)
+    z = jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bt, bv)
+
+    m_prev = m_scr[...]  # (bt, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(z, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)  # (bt, 1)
+    p = jnp.exp(z - m_new)  # (bt, bv) unnormalized
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    # acc ← acc·c + p @ Wᵀ
+    pw = jax.lax.dot_general(
+        p, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bt, d)
+    acc_scr[...] = acc_scr[...] * corr + pw
+    m_scr[...] = m_new
+
+    # Label columns: onehot within this vocab block.
+    y = y_ref[...]  # (bt, 1) int32 global vocab ids
+    local = y - vi * block_v  # (bt, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)  # (bt, bv)
+    onehot = (cols == local).astype(jnp.float32)  # rows w/ label elsewhere: 0
+    yw = jax.lax.dot_general(
+        onehot, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    accy_scr[...] += yw
+
+    @pl.when(vi == nv - 1)
+    def _finalize():
+        out_ref[...] = acc_scr[...] / l_scr[...] - accy_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_v", "interpret")
+)
+def ce_proxy_pallas(
+    hidden: jax.Array,
+    unembed: jax.Array,
+    labels: jax.Array,
+    *,
+    block_t: int = 128,
+    block_v: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused (softmax(hW) − onehot(y)) @ Wᵀ over vocab blocks.
+
+    Args:
+      hidden: (T, D), T % block_t == 0, D % 128 == 0.
+      unembed: (D, V), V % block_v == 0.
+      labels: (T,) int32 in [0, V).
+    Returns:
+      (T, D) fp32 per-token proxy gradients.
+    """
+    T, D = hidden.shape
+    V = unembed.shape[1]
+    assert T % block_t == 0 and V % block_v == 0, (T, V, block_t, block_v)
+    grid = (T // block_t, V // block_v)
+    kernel = functools.partial(_ce_proxy_kernel, block_v=block_v)
+    scratch_shapes = [
+        pltpu.VMEM((block_t, 1), jnp.float32),  # running max m
+        pltpu.VMEM((block_t, 1), jnp.float32),  # running denom l
+        pltpu.VMEM((block_t, D), jnp.float32),  # softmax@Wᵀ accumulator
+        pltpu.VMEM((block_t, D), jnp.float32),  # label-column accumulator
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, D), lambda ti, vi: (ti, 0)),
+            pl.BlockSpec((D, block_v), lambda ti, vi: (0, vi)),
+            pl.BlockSpec((block_t, 1), lambda ti, vi: (ti, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, D), lambda ti, vi: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), jnp.float32),
+        scratch_shapes=scratch_shapes,
+        compiler_params=_TPU_PARAMS,
+        interpret=interpret,
+    )(
+        hidden.astype(jnp.float32),
+        unembed.astype(jnp.float32),
+        labels.astype(jnp.int32).reshape(T, 1),
+    )

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused facility-location marginal gains (CRAIG hot-spot).
+
+One greedy step of CRAIG (paper Alg. 1 line 3) evaluates, for every candidate
+e, the marginal gain
+
+    gain(e) = Σ_i relu( s_ie − cur_max_i ),     s_ie = d_max − ‖x_i − x_e‖
+
+over the whole pool i ∈ V.  Done naively this materializes an (n, m)
+similarity matrix in HBM per step.  This kernel fuses
+
+    pairwise-distance (MXU matmul x·eᵀ + rank-1 squared-norm terms)
+      → similarity → subtract running max → relu → reduce over n
+
+entirely in VMEM, tiled (block_n × block_m), accumulating the n-reduction
+across grid steps into the (1, block_m) output tile.  Arithmetic intensity is
+that of a matmul with a free epilogue — the MXU term dominates.
+
+Inputs are pre-arranged by :mod:`repro.kernels.ops`:
+  x      (n, d)   pool proxy features (fp32), d padded to a lane multiple
+  e      (m, d)   candidate features
+  madj   (n, 1)   d_max − cur_max_i   (similarity headroom per point)
+  sqx    (n, 1)   ‖x_i‖²
+  sqe    (1, m)   ‖x_e‖²
+Output:
+  gains  (1, m)   fp32
+
+TPU mapping notes (DESIGN.md §2): block shapes default to (512, 256) with the
+full proxy dim d resident (d ≤ 8·128 after padding); all matmul dims are
+multiples of 128 so the 128×128 MXU tiles are dense.  The n-grid axis is the
+inner (fastest) axis so the output tile stays resident while the reduction
+accumulates ("revisiting" accumulation pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params (ignored by the interpreter)
+    from jax.experimental.pallas import tpu as pltpu
+
+    _TPU_PARAMS = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "arbitrary")
+    )
+except Exception:  # pragma: no cover - non-TPU builds
+    _TPU_PARAMS = None
+
+__all__ = ["fl_gains_pallas"]
+
+
+def _fl_gains_kernel(x_ref, e_ref, madj_ref, sqx_ref, sqe_ref, out_ref):
+    """Grid = (m_blocks, n_blocks); n is the inner reduction axis."""
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # (bn, d)
+    e = e_ref[...]  # (bm, d)
+    # Squared distance via the MXU: ‖x−e‖² = ‖x‖² + ‖e‖² − 2 x·e
+    dots = jax.lax.dot_general(
+        x,
+        e,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bn, bm)
+    d2 = sqx_ref[...] + sqe_ref[...] - 2.0 * dots
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    # gain contribution: relu((d_max − cur_max) − dist)
+    contrib = jnp.maximum(madj_ref[...] - dist, 0.0)  # (bn, bm)
+    out_ref[...] += jnp.sum(contrib, axis=0, keepdims=True)  # (1, bm)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def fl_gains_pallas(
+    x: jax.Array,
+    e: jax.Array,
+    madj: jax.Array,
+    sqx: jax.Array,
+    sqe: jax.Array,
+    *,
+    block_n: int = 512,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked fused FL gains. Shapes must already be block-aligned.
+
+    Args:
+      x: (n, d) fp32, n % block_n == 0, d % 128 == 0.
+      e: (m, d) fp32, m % block_m == 0.
+      madj: (n, 1) fp32 = d_max − cur_max.
+      sqx: (n, 1) fp32 squared norms of x.
+      sqe: (1, m) fp32 squared norms of e.
+    Returns:
+      (m,) fp32 gains.
+    """
+    n, d = x.shape
+    m = e.shape[0]
+    assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
+    grid = (m // block_m, n // block_n)
+    out = pl.pallas_call(
+        _fl_gains_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda mi, ni: (ni, 0)),
+            pl.BlockSpec((block_m, d), lambda mi, ni: (mi, 0)),
+            pl.BlockSpec((block_n, 1), lambda mi, ni: (ni, 0)),
+            pl.BlockSpec((block_n, 1), lambda mi, ni: (ni, 0)),
+            pl.BlockSpec((1, block_m), lambda mi, ni: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda mi, ni: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
+        compiler_params=_TPU_PARAMS,
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32),
+        e.astype(jnp.float32),
+        madj.astype(jnp.float32),
+        sqx.astype(jnp.float32),
+        sqe.astype(jnp.float32),
+    )
+    return out[0]

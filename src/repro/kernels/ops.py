@@ -1,0 +1,143 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles shape padding to block/lane multiples, backend selection (interpret
+mode on CPU so the kernels are CI-testable without a TPU), and the
+feature-space bookkeeping CRAIG's greedy loop needs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ce_proxy as _ce
+from repro.kernels import fl_gains as _fl
+from repro.kernels import pairwise_l2 as _pw
+
+__all__ = ["fl_gains", "pairwise_l2", "ce_proxy", "interpret_default"]
+
+_LANE = 128
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode unless running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_dim(a: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def fl_gains(
+    x: jax.Array,
+    e: jax.Array,
+    cur_max: jax.Array,
+    sqx: jax.Array,
+    sqe: jax.Array,
+    d_max: jax.Array,
+    *,
+    block_n: int = 512,
+    block_m: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Marginal FL gains of candidates ``e`` against pool ``x``.
+
+    gains[c] = Σ_i relu((d_max − ‖x_i − e_c‖) − cur_max_i).
+
+    Padding: pool rows are padded with duplicates of row 0 but their
+    contribution is cancelled by setting padded madj = −inf → relu 0.
+    Candidate padding produces garbage gains that the caller slices off.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n, d = x.shape
+    m = e.shape[0]
+    bn = min(block_n, max(_LANE, 1 << (n - 1).bit_length()))
+    bm = min(block_m, max(_LANE, 1 << (m - 1).bit_length()))
+    xp = _pad_dim(_pad_dim(x, 0, bn), 1, _LANE)
+    ep = _pad_dim(_pad_dim(e, 0, bm), 1, _LANE)
+    madj = d_max - cur_max.astype(jnp.float32)
+    madj = _pad_dim(madj.reshape(n, 1), 0, bn, value=-1e30)
+    sqxp = _pad_dim(sqx.astype(jnp.float32).reshape(n, 1), 0, bn)
+    sqep = _pad_dim(sqe.astype(jnp.float32).reshape(1, m), 1, bm)
+    out = _fl.fl_gains_pallas(
+        xp, ep, madj, sqxp, sqep, block_n=bn, block_m=bm, interpret=interpret
+    )
+    return out[:m]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def pairwise_l2(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_n: int = 256,
+    block_m: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(n, m) pairwise L2 distances via the blocked Pallas kernel."""
+    if interpret is None:
+        interpret = interpret_default()
+    n = x.shape[0]
+    m = y.shape[0]
+    bn = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    bm = min(block_m, max(_LANE, 1 << (m - 1).bit_length()))
+    xp = _pad_dim(_pad_dim(x, 0, bn), 1, _LANE)
+    yp = _pad_dim(_pad_dim(y, 0, bm), 1, _LANE)
+    out = _pw.pairwise_l2_pallas(
+        xp, yp, block_n=bn, block_m=bm, interpret=interpret
+    )
+    return out[:n, :m]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_v", "interpret")
+)
+def ce_proxy(
+    hidden: jax.Array,
+    unembed: jax.Array,
+    labels: jax.Array,
+    *,
+    block_t: int = 128,
+    block_v: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused per-token CRAIG proxy (softmax(hW) − y) @ Wᵀ → (T, D) fp32.
+
+    Vocab padding uses −inf-free masking: padded logit columns come from
+    zero-padded W columns → logits 0; to keep softmax exact we pad W with
+    a large negative bias trick instead: extra columns of W are zero but we
+    clamp their probability by appending labels never pointing there and
+    subtracting their contribution is ≈ uniform-noise; to stay *exact* we
+    require V % block_v == 0 here and pad T only.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    T, D = hidden.shape
+    V = unembed.shape[1]
+    if V % block_v != 0:
+        # fall back to a block size that divides V
+        for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+            if V % cand == 0:
+                block_v = cand
+                break
+    bt = min(block_t, max(8, 1 << (T - 1).bit_length()))
+    hp = _pad_dim(_pad_dim(hidden, 0, bt), 1, _LANE)
+    wp = _pad_dim(unembed, 0, _LANE)
+    lp = _pad_dim(labels.reshape(T), 0, bt)
+    out = _ce.ce_proxy_pallas(
+        hp, wp, lp, block_t=bt, block_v=block_v, interpret=interpret
+    )
+    return out[:T, :D]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fl_gains_ref", "pairwise_l2_ref", "ce_proxy_ref"]
+
+
+def pairwise_l2_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(n, m) pairwise Euclidean distances, fp32."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    sqx = jnp.sum(x * x, axis=1)[:, None]
+    sqy = jnp.sum(y * y, axis=1)[None, :]
+    d2 = sqx + sqy - 2.0 * x @ y.T
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def fl_gains_ref(
+    x: jax.Array, e: jax.Array, cur_max: jax.Array, d_max: jax.Array
+) -> jax.Array:
+    """gains[c] = Σ_i relu((d_max − ‖x_i − e_c‖) − cur_max_i), fp32 (m,)."""
+    dist = pairwise_l2_ref(x, e)  # (n, m)
+    sim = d_max - dist
+    return jnp.sum(
+        jnp.maximum(sim - cur_max.astype(jnp.float32)[:, None], 0.0), axis=0
+    )
+
+
+def ce_proxy_ref(
+    hidden: jax.Array, unembed: jax.Array, labels: jax.Array
+) -> jax.Array:
+    """g_t = (softmax(h_t W) − onehot(y_t)) @ Wᵀ, fp32 (T, D)."""
+    h = hidden.astype(jnp.float32)
+    w = unembed.astype(jnp.float32)
+    logits = h @ w  # (T, V)
+    p = jax.nn.softmax(logits, axis=-1)
+    delta = p - jax.nn.one_hot(labels, w.shape[1], dtype=jnp.float32)
+    return delta @ w.T

@@ -1,0 +1,435 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the real SPMD program — γ-weighted
+train_step (AdamW, microbatched), prefill_step, or serve_step with a
+seq_len-deep cache — against ShapeDtypeStruct inputs (no allocation),
+compiles it for the 256-chip single-pod / 512-chip two-pod mesh, and
+records:
+
+  * ``memory_analysis``  — bytes per device (proves the cell fits HBM),
+  * ``cost_analysis``    — HLO FLOPs / bytes-accessed (roofline numerator),
+  * collective byte census parsed from the post-SPMD optimized HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute) — the roofline's collective term,
+  * analytic MODEL_FLOPS (6·N·D; 6·N_active·D for MoE) for the
+    useful-compute ratio.
+
+Artifacts go to ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``; the
+roofline report (repro/roofline.py, EXPERIMENTS.md §Roofline) reads them.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape select_pool --mesh single     # CRAIG select_step cell
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.distributed import annotate
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_params, init_serve_state
+from repro.models.config import ModelConfig
+from repro.optim import adamw, warmup_cosine
+from repro.serve import make_prefill_step, make_serve_step
+from repro.train import make_select_step, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+# Collective opcode census over post-SPMD optimized HLO.
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Sum payload bytes per collective kind from optimized HLO text."""
+    out: dict[str, dict] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        b = size * _DTYPE_BYTES[dtype]
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+def microbatches_for(shape: ShapeSpec, cfg: ModelConfig) -> int:
+    if shape.kind != "train":
+        return 1
+    # keep per-microbatch tokens small enough that the layer-scan activation
+    # carry + MoE dispatch buffers fit HBM; wide-MoE models halve again
+    # NB: global_batch/mb must stay divisible by the 16..32-way dp axis —
+    # smaller microbatches REPLICATE the batch dim and blow memory up
+    per_mb_target = 16 if (cfg.d_model >= 6144 and cfg.n_experts) else 32
+    return max(1, shape.global_batch // per_mb_target)
+
+
+def train_batch_struct(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, T = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    if cfg.frontend == "tokens":
+        batch["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    else:
+        batch["embeddings"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16)
+    if cfg.n_codebooks > 1:
+        batch["labels"] = jax.ShapeDtypeStruct((B, T, cfg.n_codebooks), jnp.int32)
+    else:
+        batch["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    if cfg.mrope_sections is not None:
+        batch["positions"] = jax.ShapeDtypeStruct((B, 3, T), jnp.int32)
+    batch["weights"] = jax.ShapeDtypeStruct((B,), jnp.float32)
+    return batch
+
+
+def infer_batch_struct(cfg: ModelConfig, shape: ShapeSpec, decode: bool) -> dict:
+    B = shape.global_batch
+    T = 1 if decode else shape.seq_len
+    batch: dict = {}
+    if cfg.frontend == "tokens":
+        batch["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    else:
+        batch["embeddings"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16)
+    if cfg.mrope_sections is not None and not decode:
+        batch["positions"] = jax.ShapeDtypeStruct((B, 3, T), jnp.int32)
+    return batch
+
+
+def _struct_tree(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh, probe: int = 0):
+    """Returns (fn, in_shardings, out_shardings, args_struct, donate, meta).
+
+    probe > 0 builds a reduced-depth UNROLLED variant (probe = number of
+    pattern periods, scan_layers=False, microbatches=1) whose cost_analysis
+    is exact — XLA counts ``lax.scan``/while bodies once, so the production
+    scanned program underreports FLOPs/collectives.  The roofline combines
+    probe1/probe2 deltas with the full-depth compile (repro/roofline.py).
+    """
+    cfg = get_config(arch)
+    if probe:
+        cfg = dataclasses.replace(
+            cfg,
+            n_layers=probe * len(cfg.block_pattern),
+            scan_layers=False,
+        )
+    if shape_name == "select_pool":
+        shape = ShapeSpec("select_pool", 4096, 256, "select")
+    else:
+        shape = SHAPES[shape_name]
+
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        raise SkipCell(
+            f"{arch} is full-attention; long_500k requires sub-quadratic "
+            "architecture (DESIGN.md §Arch-applicability)"
+        )
+
+    # abstract params + shardings
+    params_struct = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg)
+    )
+    pspecs = shd.param_specs(params_struct, mesh)
+    psh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), pspecs)
+
+    if shape.kind == "train":
+        opt = adamw(warmup_cosine(3e-4, 2000, 100_000))
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        osh = shd.state_shardings(opt_struct, pspecs, mesh)
+        mb = 1 if probe else microbatches_for(shape, cfg)
+        fn = make_train_step(cfg, opt, microbatches=mb)
+        batch = train_batch_struct(cfg, shape)
+        bsh = {
+            k: jax.NamedSharding(mesh, s)
+            for k, s in shd.batch_specs(mesh, batch).items()
+        }
+        return dict(
+            fn=fn,
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, None),
+            args=(params_struct, opt_struct, batch),
+            donate=(0, 1),
+            meta={"microbatches": mb, "step": "train_step"},
+            cfg=cfg,
+            shape=shape,
+        )
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        batch = infer_batch_struct(cfg, shape, decode=False)
+        bsh = {
+            k: jax.NamedSharding(mesh, s)
+            for k, s in shd.batch_specs(mesh, batch).items()
+        }
+        return dict(
+            fn=fn,
+            in_shardings=(psh, bsh),
+            out_shardings=None,
+            args=(params_struct, batch),
+            donate=(),
+            meta={"step": "prefill_step"},
+            cfg=cfg,
+            shape=shape,
+        )
+
+    if shape.kind == "decode":
+        # Serving params: TP-only sharding (no ZeRO-3 — no optimizer state
+        # to amortize; per-layer weight gathers would sit on the decode
+        # critical path: §Perf iteration 1c).  Exception: batch < |data|
+        # (long_500k batch=1) — there is no data-parallel replica to
+        # amortize replicated weights, so ZeRO-3 storage stays cheaper.
+        B = shape.global_batch
+        if B >= mesh.shape.get("data", 1):
+            pspecs = shd.serve_param_specs(params_struct, mesh)
+            psh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), pspecs)
+        fn = make_serve_step(cfg)
+        state_struct = jax.eval_shape(
+            lambda: init_serve_state(cfg, B, shape.seq_len)
+        )
+        ssh = shd.serve_state_specs(state_struct, mesh, B)
+        batch = infer_batch_struct(cfg, shape, decode=True)
+        bsh = {
+            k: jax.NamedSharding(mesh, s)
+            for k, s in shd.batch_specs(mesh, batch).items()
+        }
+        return dict(
+            fn=fn,
+            in_shardings=(psh, ssh, bsh),
+            out_shardings=(None, ssh),
+            args=(params_struct, state_struct, batch),
+            donate=(1,),
+            meta={"step": "serve_step", "cache_len": shape.seq_len},
+            cfg=cfg,
+            shape=shape,
+        )
+
+    if shape.kind == "select":
+        # CRAIG selection forward: proxy features over a candidate pool.
+        # Dense archs run in dp_over_model mode: the whole mesh acts as data
+        # parallelism with ZeRO-3 weight gathers — for a forward-only
+        # throughput program this beats TP by ~4x on collective bytes
+        # (§Perf iteration 3).  MoE archs keep expert parallelism (gathering
+        # E experts/layer/device would dwarf the activation traffic).
+        dp_mode = cfg.n_experts == 0
+        fn = make_select_step(cfg)
+        batch = train_batch_struct(cfg, shape)
+        batch.pop("weights")
+        bsh = {
+            k: jax.NamedSharding(mesh, s)
+            for k, s in shd.batch_specs(
+                mesh, batch, dp_over_model=dp_mode
+            ).items()
+        }
+        return dict(
+            fn=fn,
+            in_shardings=(psh, bsh),
+            out_shardings=None,
+            args=(params_struct, batch),
+            donate=(),
+            meta={
+                "step": "select_step",
+                "mode": "dp_over_model" if dp_mode else "tp",
+            },
+            cfg=cfg,
+            shape=shape,
+            dp_over_model=dp_mode,
+        )
+    raise ValueError(shape.kind)
+
+
+class SkipCell(Exception):
+    pass
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Analytic MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference)."""
+    n = cfg.active_param_count()
+    d = shape.tokens_per_step
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * d
+
+
+def run_cell(
+    arch: str, shape_name: str, mesh_kind: str, out_dir: str, probe: int = 0
+) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": f"{'2x16x16' if multi else '16x16'}",
+        "probe": probe,
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "status": "unknown",
+    }
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh, probe=probe)
+        annotate.set_mesh(mesh, dp_over_model=cell.get("dp_over_model", False))
+        with mesh:
+            jitted = jax.jit(
+                cell["fn"],
+                in_shardings=cell["in_shardings"],
+                out_shardings=cell["out_shardings"],
+                donate_argnums=cell["donate"],
+            )
+            lowered = jitted.lower(*cell["args"])
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        annotate.set_mesh(None)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_census(hlo)
+        cfg, shape = cell["cfg"], cell["shape"]
+        rec.update(
+            status="ok",
+            meta=cell["meta"],
+            lower_s=round(t_lower - t0, 1),
+            compile_s=round(t_compile - t_lower, 1),
+            memory={
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            },
+            cost={
+                k: float(cost.get(k, 0.0))
+                for k in ("flops", "bytes accessed", "transcendentals")
+                if cost
+            },
+            collectives=coll,
+            collective_bytes_total=int(sum(c["bytes"] for c in coll.values())),
+            model_flops=model_flops(cfg, shape),
+            params=cfg.param_count(),
+            active_params=cfg.active_param_count(),
+            tokens_per_step=shape.tokens_per_step,
+            hlo_lines=hlo.count("\n"),
+        )
+    except SkipCell as e:
+        rec.update(status="skip", reason=str(e))
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash the sweep
+        rec.update(
+            status="error",
+            error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-4000:],
+        )
+    finally:
+        annotate.set_mesh(None)
+    rec["wall_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__p{probe}" if probe else ""
+    path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{rec['mesh']}{suffix}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS) + ["all"], default="all")
+    ap.add_argument(
+        "--shape", choices=list(SHAPES) + ["select_pool", "all"], default="all"
+    )
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default=os.path.normpath(ARTIFACT_DIR))
+    ap.add_argument("--force", action="store_true", help="recompute existing")
+    ap.add_argument(
+        "--probes",
+        action="store_true",
+        help="also build 1- and 2-period unrolled probe cells (single mesh)",
+    )
+    ap.add_argument("--probes-only", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                mesh_tag = "2x16x16" if mesh_kind == "multi" else "16x16"
+                probes = [0]
+                if args.probes and mesh_kind == "single":
+                    probes = [0, 1, 2]
+                if args.probes_only:
+                    probes = [1, 2] if mesh_kind == "single" else []
+                for probe in probes:
+                    suffix = f"__p{probe}" if probe else ""
+                    path = os.path.join(
+                        args.out, f"{arch}__{shape}__{mesh_tag}{suffix}.json"
+                    )
+                    if os.path.exists(path) and not args.force:
+                        with open(path) as f:
+                            prev = json.load(f)
+                        if prev.get("status") in ("ok", "skip"):
+                            print(
+                                f"[cached] {arch} {shape} {mesh_tag}"
+                                f"{suffix}: {prev['status']}",
+                                flush=True,
+                            )
+                            continue
+                    rec = run_cell(arch, shape, mesh_kind, args.out, probe=probe)
+                    line = (
+                        f"[{rec['status']:5s}] {arch} {shape} {mesh_tag}"
+                        f"{suffix} wall={rec['wall_s']}s"
+                    )
+                    if rec["status"] == "ok":
+                        line += (
+                            f" flops={rec['cost'].get('flops', 0):.3g}"
+                            f" coll={rec['collective_bytes_total']:.3g}B"
+                            f" hlo={rec['hlo_lines']}"
+                        )
+                    elif rec["status"] == "error":
+                        line += f" {rec['error'][:160]}"
+                        failures += 1
+                    print(line, flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Model zoo: unified decoder stack covering all 10 assigned architectures."""
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_params,
+    init_serve_state,
+    loss_fn,
+    prefill,
+    proxy_features,
+)
+
+__all__ = [
+    "ModelConfig",
+    "decode_step",
+    "forward",
+    "init_params",
+    "init_serve_state",
+    "loss_fn",
+    "prefill",
+    "proxy_features",
+]

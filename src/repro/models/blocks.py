@@ -1,0 +1,352 @@
+"""Layer-stack wiring: pattern periods, scan-over-layers, remat policies.
+
+The layer stack is tiled from ``cfg.block_pattern`` (e.g. recurrentgemma's
+('rglru', 'rglru', 'local_attn')).  All full periods share one *stacked*
+parameter pytree and run under a single ``lax.scan`` — this keeps the HLO
+(and compile time) independent of depth, which is what makes the 512-device
+dry-run of 40-layer models tractable and is the production idiom (MaxText).
+Remainder layers (n_layers % period) get their own params and run unrolled.
+
+Remat: the per-period body is wrapped in ``jax.checkpoint`` with a
+configurable policy, so backward recompute cost/memory is a config knob
+(§Perf iterates on it).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    AttentionConfig,
+    attention,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+)
+from repro.distributed.annotate import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import activation_fn, dense_init, init_norm, layer_norm, rms_norm
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
+from repro.models import recurrent as rec
+
+__all__ = ["init_stack", "stack_forward", "init_decode_state", "stack_decode"]
+
+
+# ---------------------------------------------------------------------------
+# sub-config builders
+# ---------------------------------------------------------------------------
+
+
+def _attn_cfg(cfg: ModelConfig, kind: str) -> AttentionConfig:
+    return AttentionConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias,
+        qk_norm=cfg.qk_norm,
+        rope_theta=cfg.rope_theta,
+        mrope_sections=cfg.mrope_sections,
+        window=cfg.window if kind == "local_attn" else None,
+        blockwise_threshold=cfg.blockwise_threshold,
+        chunk_q=cfg.attn_chunk_q,
+        chunk_kv=cfg.attn_chunk_kv,
+        unroll_blocks=not cfg.scan_layers,  # probes: exact tile accounting
+    )
+
+
+def _moe_cfg(cfg: ModelConfig) -> MoEConfig:
+    return MoEConfig(
+        d_model=cfg.d_model,
+        d_ff_expert=cfg.d_ff,
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        n_shared_experts=cfg.n_shared_experts,
+        capacity_factor=cfg.capacity_factor,
+        activation=cfg.activation,
+        gated=cfg.gated_ffn,
+    )
+
+
+def _rnn_cfg(cfg: ModelConfig) -> rec.RGLRUConfig:
+    return rec.RGLRUConfig(
+        d_model=cfg.d_model, d_rnn=cfg.d_rnn or cfg.d_model,
+        conv_width=cfg.conv_width,
+    )
+
+
+def _mlstm_cfg(cfg: ModelConfig) -> rec.MLSTMConfig:
+    return rec.MLSTMConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, d_head=cfg.head_dim,
+        chunk=cfg.mlstm_chunk, conv_width=cfg.conv_width,
+    )
+
+
+def _slstm_cfg(cfg: ModelConfig) -> rec.SLSTMConfig:
+    return rec.SLSTMConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, d_head=cfg.head_dim
+    )
+
+
+def _norm_fn(cfg: ModelConfig):
+    return rms_norm if cfg.norm == "rmsnorm" else layer_norm
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+
+
+def _init_ffn(key: jax.Array, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    mult = 2 if cfg.gated_ffn else 1
+    return {
+        "w_in": dense_init(k1, (cfg.d_model, mult * cfg.d_ff)),
+        "w_out": dense_init(k2, (cfg.d_ff, cfg.d_model)),
+    }
+
+
+def _ffn(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    act = activation_fn(cfg.activation)
+    h = x @ params["w_in"].astype(x.dtype)
+    h = constrain(h, "batch", None, "tp")
+    if cfg.gated_ffn:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = act(g) * u
+    else:
+        h = act(h)
+    return h @ params["w_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# one layer
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key: jax.Array, cfg: ModelConfig, kind: str) -> dict:
+    km, kf, kn = jax.random.split(key, 3)
+    p: dict[str, Any] = {"norm1": init_norm(cfg.d_model)}
+    if kind in ("attn", "local_attn"):
+        p["mixer"] = init_attention(km, _attn_cfg(cfg, kind))
+    elif kind == "rglru":
+        p["mixer"] = rec.init_griffin_block(km, _rnn_cfg(cfg))
+    elif kind == "mlstm":
+        p["mixer"] = rec.init_mlstm(km, _mlstm_cfg(cfg))
+    elif kind == "slstm":
+        p["mixer"] = rec.init_slstm(km, _slstm_cfg(cfg))
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if cfg.d_ff and kind not in ("mlstm", "slstm"):
+        p["norm2"] = init_norm(cfg.d_model)
+        p["ffn"] = init_moe(kf, _moe_cfg(cfg)) if cfg.n_experts else _init_ffn(kf, cfg)
+    return p
+
+
+def _layer_forward(
+    params: dict, cfg: ModelConfig, kind: str, x: jax.Array, positions: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (x', aux_loss)."""
+    norm = _norm_fn(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    x = constrain(x, "batch", None, None)
+    h = norm(params["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local_attn"):
+        mixed = attention(params["mixer"], _attn_cfg(cfg, kind), h, positions)
+    elif kind == "rglru":
+        mixed = rec.griffin_block(params["mixer"], _rnn_cfg(cfg), h)
+    elif kind == "mlstm":
+        mixed = rec.mlstm(params["mixer"], _mlstm_cfg(cfg), h)
+    elif kind == "slstm":
+        mixed = rec.slstm(params["mixer"], _slstm_cfg(cfg), h)
+    else:
+        raise ValueError(kind)
+    x = x + mixed
+    if "ffn" in params:
+        h = norm(params["norm2"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            B, T, D = h.shape
+            y, aux = moe_ffn(params["ffn"], _moe_cfg(cfg), h.reshape(B, T, D))
+            x = x + y
+        else:
+            x = x + _ffn(params["ffn"], cfg, h)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# stack = scan over periods + remainder
+# ---------------------------------------------------------------------------
+
+
+def _remat_policy(name: str):
+    if name == "nothing":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    if name == "full":
+        return jax.checkpoint_policies.everything_saveable
+    raise ValueError(f"unknown remat policy {name!r}")
+
+
+def init_stack(key: jax.Array, cfg: ModelConfig) -> dict:
+    """Params: {'scanned': stacked-period pytree, 'remainder': [per-layer]}
+
+    ``cfg.scan_layers=False`` places every layer in ``remainder`` (unrolled
+    stack) — used by the roofline probes, where ``lax.scan`` bodies would be
+    counted once by XLA cost analysis.
+    """
+    period = cfg.block_pattern
+    n_full = (cfg.n_layers // len(period)) if cfg.scan_layers else 0
+    n_rem = cfg.n_layers - n_full * len(period)
+    keys = jax.random.split(key, n_full + 1)
+
+    def init_period(k):
+        ks = jax.random.split(k, len(period))
+        return tuple(_init_layer(ks[i], cfg, kind) for i, kind in enumerate(period))
+
+    scanned = jax.vmap(init_period)(keys[:n_full]) if n_full else None
+    rem_keys = jax.random.split(keys[-1], max(n_rem, 1))
+    remainder = [
+        _init_layer(rem_keys[i], cfg, period[i % len(period)]) for i in range(n_rem)
+    ]
+    return {"scanned": scanned, "remainder": remainder}
+
+
+def _period_forward(cfg: ModelConfig):
+    period = cfg.block_pattern
+
+    def fwd(carry, period_params, positions):
+        x, aux = carry
+        for i, kind in enumerate(period):
+            x, a = _layer_forward(period_params[i], cfg, kind, x, positions)
+            aux = aux + a
+        return x, aux
+
+    return fwd
+
+
+def stack_forward(
+    params: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Run the full layer stack. x (B, T, D) → (x', total_aux)."""
+    fwd = _period_forward(cfg)
+    body = jax.checkpoint(
+        lambda carry, pp: (fwd(carry, pp, positions), None),
+        policy=_remat_policy(cfg.remat_policy),
+        prevent_cse=True,
+    )
+    aux0 = jnp.zeros((), jnp.float32)
+    carry = (x, aux0)
+    if params["scanned"] is not None:
+        carry, _ = jax.lax.scan(body, carry, params["scanned"])
+    for i, p in enumerate(params["remainder"]):
+        kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+        layer = jax.checkpoint(
+            lambda p_, x_, pos_, _kind=kind: _layer_forward(
+                p_, cfg, _kind, x_, pos_
+            ),
+            policy=_remat_policy(cfg.remat_policy),
+            prevent_cse=True,
+        )
+        x, a = layer(p, carry[0], positions)
+        carry = (x, carry[1] + a)
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# decode: per-layer state threading
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "local_attn"):
+        return init_kv_cache(_attn_cfg(cfg, kind), batch, max_len)
+    if kind == "rglru":
+        return rec.init_griffin_state(_rnn_cfg(cfg), batch)
+    if kind == "mlstm":
+        return rec.init_mlstm_state(_mlstm_cfg(cfg), batch)
+    if kind == "slstm":
+        return rec.init_slstm_state(_slstm_cfg(cfg), batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    period = cfg.block_pattern
+    n_full = (cfg.n_layers // len(period)) if cfg.scan_layers else 0
+    n_rem = cfg.n_layers - n_full * len(period)
+
+    def one_period(_):
+        return tuple(
+            _init_layer_state(cfg, kind, batch, max_len) for kind in period
+        )
+
+    scanned = (
+        jax.tree.map(
+            lambda *leaves: jnp.stack(leaves),
+            *[one_period(i) for i in range(n_full)],
+        )
+        if n_full
+        else None
+    )
+    remainder = [
+        _init_layer_state(cfg, period[i % len(period)], batch, max_len)
+        for i in range(n_rem)
+    ]
+    return {"scanned": scanned, "remainder": remainder}
+
+
+def _layer_decode(params, cfg: ModelConfig, kind: str, x, state, pos):
+    norm = _norm_fn(cfg)
+    h = norm(params["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local_attn"):
+        mixed, state = decode_attention(
+            params["mixer"], _attn_cfg(cfg, kind), h, state, pos
+        )
+    elif kind == "rglru":
+        mixed, state = rec.griffin_decode(params["mixer"], _rnn_cfg(cfg), h, state)
+    elif kind == "mlstm":
+        mixed, state = rec.mlstm_decode(params["mixer"], _mlstm_cfg(cfg), h, state)
+    elif kind == "slstm":
+        mixed, state = rec.slstm_decode(params["mixer"], _slstm_cfg(cfg), h, state)
+    else:
+        raise ValueError(kind)
+    x = x + mixed
+    if "ffn" in params:
+        h = norm(params["norm2"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_ffn(params["ffn"], _moe_cfg(cfg), h)
+            x = x + y
+        else:
+            x = x + _ffn(params["ffn"], cfg, h)
+    return x, state
+
+
+def stack_decode(
+    params: dict, cfg: ModelConfig, state: dict, x: jax.Array, pos: jax.Array
+) -> tuple[jax.Array, dict]:
+    """One-token decode through the stack. x (B, 1, D)."""
+    period = cfg.block_pattern
+
+    def body(x, inputs):
+        period_params, period_state = inputs
+        new_states = []
+        for i, kind in enumerate(period):
+            x, s = _layer_decode(
+                period_params[i], cfg, kind, x, period_state[i], pos
+            )
+            new_states.append(s)
+        return x, tuple(new_states)
+
+    new_scanned = None
+    if params["scanned"] is not None:
+        x, new_scanned = jax.lax.scan(
+            body, x, (params["scanned"], state["scanned"])
+        )
+    new_rem = []
+    for i, p in enumerate(params["remainder"]):
+        kind = period[i % len(period)]
+        x, s = _layer_decode(p, cfg, kind, x, state["remainder"][i], pos)
+        new_rem.append(s)
+    return x, {"scanned": new_scanned, "remainder": new_rem}

@@ -1,0 +1,282 @@
+"""LMModel: frontends (tokens / stub embeddings), backbone stack, heads,
+chunked weighted cross-entropy (CRAIG γ weights), prefill & decode.
+
+Public entry points (all pure functions over a params pytree):
+
+* ``init_params(key, cfg)``                   — fp32 master weights.
+* ``forward(params, cfg, batch)``             — hidden states (B, T, D).
+* ``loss_fn(params, cfg, batch)``             — (loss, metrics); per-example
+  weights ``batch['weights']`` implement the paper's per-element stepsizes.
+* ``prefill(params, cfg, batch, max_len)``    — hidden + initialized caches.
+* ``decode_step(params, cfg, state, batch)``  — one-token serve step.
+* ``proxy_features(params, cfg, batch)``      — CRAIG pooled unembed-input
+  gradient proxies (forward pass + fused CE-backward head).
+
+Batch dict keys (ShapeDtypeStruct-compatible, see launch/dryrun.py):
+  tokens      (B, T) int32            [frontend == 'tokens']
+  embeddings  (B, T, D) bf16          [frontend == 'embeddings' — stub]
+  labels      (B, T) or (B, T, n_codebooks) int32
+  positions   (B, T) or (B, 3, T) int32 (M-RoPE)
+  weights     (B,) fp32 — CRAIG γ (defaults to 1)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (
+    init_decode_state,
+    init_stack,
+    stack_decode,
+    stack_forward,
+)
+from repro.distributed.annotate import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_norm, layer_norm, rms_norm
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "proxy_features",
+    "init_serve_state",
+]
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    ke, ks, kh = jax.random.split(key, 3)
+    p: dict[str, Any] = {"stack": init_stack(ks, cfg)}
+    if cfg.frontend == "tokens":
+        # std 1/sqrt(d_model), the usual lookup-table scale; vocab padded to
+        # a lane/shard multiple (padded logit columns are masked in the loss)
+        p["embed"] = dense_init(ke, (cfg.padded_vocab, cfg.d_model), "fan_out")
+    p["final_norm"] = init_norm(cfg.d_model)
+    if cfg.n_codebooks > 1:
+        p["unembed"] = jax.vmap(
+            lambda k: dense_init(k, (cfg.d_model, cfg.padded_vocab))
+        )(jax.random.split(kh, cfg.n_codebooks))
+    elif cfg.tie_embeddings and cfg.frontend == "tokens":
+        pass  # reuse embed
+    else:
+        p["unembed"] = dense_init(kh, (cfg.d_model, cfg.padded_vocab))
+    return p
+
+
+def _norm(cfg: ModelConfig):
+    return rms_norm if cfg.norm == "rmsnorm" else layer_norm
+
+
+def _unembed_matrix(params: dict, cfg: ModelConfig) -> jax.Array:
+    if "unembed" in params:
+        return params["unembed"]
+    return params["embed"].T  # tied
+
+
+def _embed_input(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    if cfg.frontend == "tokens":
+        x = params["embed"][batch["tokens"]]
+    else:
+        # modality frontend is a stub: precomputed frame/patch embeddings
+        x = batch["embeddings"]
+    return constrain(x.astype(COMPUTE_DTYPE), "batch", None, None)
+
+
+def _positions(cfg: ModelConfig, batch: dict) -> jax.Array:
+    if "positions" in batch:
+        return batch["positions"]
+    ref = batch["tokens"] if cfg.frontend == "tokens" else batch["embeddings"]
+    B, T = ref.shape[0], ref.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[:, None], (B, 3, T))
+    return pos
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B, T, D) post-final-norm, aux_loss)."""
+    x = _embed_input(params, cfg, batch)
+    positions = _positions(cfg, batch)
+    x, aux = stack_forward(params["stack"], cfg, x, positions)
+    x = _norm(cfg)(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# loss: chunked weighted CE
+# ---------------------------------------------------------------------------
+
+
+def _chunked_ce(
+    hidden: jax.Array,
+    unembed: jax.Array,
+    labels: jax.Array,
+    chunk: int,
+    valid_v: int | None = None,
+) -> jax.Array:
+    """Per-token CE, scanning over sequence chunks with remat.
+
+    hidden (B, T, D), unembed (D, V), labels (B, T) → (B, T) fp32 losses.
+    The (B, chunk, V) logits are transient per scan step (remat in bwd), so
+    peak memory is independent of T — required at vocab 152k–256k.
+    """
+    B, T, D = hidden.shape
+    V = unembed.shape[1]
+    n_chunks = max(T // chunk, 1)
+    if T % chunk != 0:
+        n_chunks, chunk = 1, T
+    h = jnp.moveaxis(hidden.reshape(B, n_chunks, chunk, D), 1, 0)
+    y = jnp.moveaxis(labels.reshape(B, n_chunks, chunk), 1, 0)
+
+    pad_mask = None
+    if valid_v is not None and valid_v < V:
+        pad_mask = jnp.where(jnp.arange(V) < valid_v, 0.0, -1e30)
+
+    @jax.checkpoint
+    def one(h_c, y_c):
+        logits = (h_c.astype(COMPUTE_DTYPE) @ unembed.astype(COMPUTE_DTYPE)).astype(
+            jnp.float32
+        )
+        logits = constrain(logits, "batch", None, "tp")
+        if pad_mask is not None:
+            logits = logits + pad_mask
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via one-hot reduce — NOT take_along_axis: a gather along
+        # the model-sharded vocab dim forces SPMD to replicate full logits.
+        onehot = jax.nn.one_hot(y_c, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        return lse - gold
+
+    losses = jax.lax.map(lambda xs: one(*xs), (h, y))  # (n_chunks, B, chunk)
+    return jnp.moveaxis(losses, 0, 1).reshape(B, T)
+
+
+def loss_fn(
+    params: dict, cfg: ModelConfig, batch: dict
+) -> tuple[jax.Array, dict]:
+    """Weighted mean CE. CRAIG γ weights enter as per-example loss weights —
+    exactly the per-element stepsizes of paper Eq. 20 under linear loss
+    scaling (DESIGN.md §7.3)."""
+    hidden, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    B = hidden.shape[0]
+    w = batch.get("weights")
+    if w is None:
+        w = jnp.ones((B,), jnp.float32)
+
+    unembed = _unembed_matrix(params, cfg)
+    if cfg.n_codebooks > 1:
+        per_tok = 0.0
+        for c in range(cfg.n_codebooks):
+            per_tok = per_tok + _chunked_ce(
+                hidden, unembed[c], labels[..., c], cfg.logit_chunk,
+                valid_v=cfg.vocab_size,
+            )
+        per_tok = per_tok / cfg.n_codebooks
+    else:
+        per_tok = _chunked_ce(
+            hidden, unembed, labels, cfg.logit_chunk, valid_v=cfg.vocab_size
+        )
+
+    per_example = jnp.mean(per_tok, axis=-1)  # (B,)
+    denom = jnp.maximum(jnp.sum(w), 1e-6)
+    loss = jnp.sum(per_example * w) / denom
+    total = loss + 1e-2 * aux
+    metrics = {
+        "loss": loss,
+        "aux_loss": aux,
+        "per_example_loss": per_example,
+    }
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# CRAIG proxy extraction (selection forward pass)
+# ---------------------------------------------------------------------------
+
+
+def proxy_features(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Pooled unembed-input gradient proxies (B, D) — see core/proxy.py."""
+    from repro.core.proxy import lm_unembed_input_proxy
+
+    hidden, _ = forward(params, cfg, batch)
+    unembed = _unembed_matrix(params, cfg)
+    labels = batch["labels"]
+    if cfg.n_codebooks > 1:
+        feats = 0.0
+        for c in range(cfg.n_codebooks):
+            feats = feats + lm_unembed_input_proxy(
+                hidden, unembed[c], labels[..., c], chunk=cfg.logit_chunk,
+                valid_v=cfg.vocab_size, compute_dtype=COMPUTE_DTYPE,
+            )
+        return feats / cfg.n_codebooks
+    return lm_unembed_input_proxy(
+        hidden, unembed, labels, chunk=cfg.logit_chunk,
+        valid_v=cfg.vocab_size, compute_dtype=COMPUTE_DTYPE,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode caches/states for all layers + current position counter."""
+    return {
+        "layers": init_decode_state(cfg, batch, max_len),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(
+    params: dict, cfg: ModelConfig, batch: dict
+) -> tuple[jax.Array, jax.Array]:
+    """Prefill forward: full-sequence hidden states + last-token logits.
+
+    (Cache materialization during prefill is the decode path's job in this
+    framework; the prefill dry-run cell measures the forward cost, which
+    dominates.)  Returns (hidden (B,T,D), last_logits (B, V)).
+    """
+    hidden, _ = forward(params, cfg, batch)
+    unembed = _unembed_matrix(params, cfg)
+    last = hidden[:, -1].astype(COMPUTE_DTYPE)
+    if cfg.n_codebooks > 1:
+        logits = jnp.einsum(
+            "bd,cdv->bcv", last, unembed.astype(COMPUTE_DTYPE)
+        ).astype(jnp.float32)
+    else:
+        logits = (last @ unembed.astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    return hidden, logits
+
+
+def decode_step(
+    params: dict, cfg: ModelConfig, state: dict, batch: dict
+) -> tuple[jax.Array, dict]:
+    """One-token decode. batch: {'tokens': (B, 1)} or {'embeddings': (B,1,D)}.
+
+    Returns (logits (B, V) [or (B, C, V)], new_state). Cache/state tensors
+    are functionally updated and donate-friendly.
+    """
+    if cfg.frontend == "tokens":
+        x = params["embed"][batch["tokens"]].astype(COMPUTE_DTYPE)
+    else:
+        x = batch["embeddings"].astype(COMPUTE_DTYPE)
+    pos = state["pos"]
+    x, new_layers = stack_decode(params["stack"], cfg, state["layers"], x, pos)
+    x = _norm(cfg)(params["final_norm"], x, cfg.norm_eps)
+    unembed = _unembed_matrix(params, cfg)
+    last = x[:, 0].astype(COMPUTE_DTYPE)
+    if cfg.n_codebooks > 1:
+        logits = jnp.einsum(
+            "bd,cdv->bcv", last, unembed.astype(COMPUTE_DTYPE)
+        ).astype(jnp.float32)
+    else:
+        logits = (last @ unembed.astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    new_state = {"layers": new_layers, "pos": pos + 1}
+    return logits, new_state

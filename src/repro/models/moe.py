@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN with top-k routing and expert parallelism.
+
+Dispatch is *gather-based* (index buffers), not one-hot-einsum based: the
+(tokens, experts, capacity) combine tensor of GShard-style dispatch is
+O(S·E·C) and dwarfs activations at dbrx/moonshot scale.  Instead we
+
+  1. route: top-k expert ids + renormalized gate weights per token,
+  2. bucket: position-in-expert via a cumsum over the one-hot assignment
+     (small (S·k, E) int tensor), drop tokens beyond capacity,
+  3. scatter token ids into an (E, C) index buffer,
+  4. gather tokens → (G, E, C, D) under vmap (per-group gathers keep SPMD
+     locality), expert dim pinned to `model` (expert parallelism — the
+     reshard IS the all-to-all),
+  5. per-expert FFN via batched einsum directly on (G, E, C, D) — merging
+     the sharded G dim in a reshape degenerates to full rematerialization
+     (EXPERIMENTS.md §Perf iteration 2),
+  6. gather outputs back per group, gate-weight, and SUM the K contiguous
+     copies per token (scatter-free combine).
+
+Aux load-balancing loss (Switch §2.2) is returned for the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.annotate import constrain
+from repro.models.layers import activation_fn, dense_init
+
+__all__ = ["MoEConfig", "init_moe", "moe_ffn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    n_shared_experts: int = 0  # DeepSeek/Moonlight-style always-on experts
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    gated: bool = True  # SwiGLU-style experts
+
+
+def init_moe(key: jax.Array, cfg: MoEConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (d, E)),
+        "experts_in": jax.vmap(
+            lambda k: dense_init(k, (d, (2 if cfg.gated else 1) * f))
+        )(jax.random.split(ks[1], E)),  # (E, d, 2f)
+        "experts_out": jax.vmap(lambda k: dense_init(k, (f, d)))(
+            jax.random.split(ks[2], E)
+        ),  # (E, f, d)
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_in"] = dense_init(ks[3], (d, (2 if cfg.gated else 1) * fs))
+        p["shared_out"] = dense_init(ks[4], (fs, d))
+    return p
+
+
+def _expert_ffn(cfg: MoEConfig, w_in, w_out, x):
+    """x (..., E, C, D) → (..., E, C, D) batched per-expert FFN."""
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("...ecd,edf->...ecf", x, w_in.astype(x.dtype))
+    if cfg.gated:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = act(g) * u
+    else:
+        h = act(h)
+    return jnp.einsum("...ecf,efd->...ecd", h, w_out.astype(x.dtype))
+
+
+def moe_ffn(
+    params: dict, cfg: MoEConfig, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """MoE FFN over x (G, S, D) token groups.
+
+    Returns (y (G, S, D), aux_loss ()). Groups are dispatch domains: capacity
+    C = ceil(S·k/E)·capacity_factor per group; each group's dispatch indices
+    are local, so with G sharded over (pod, data) and experts over `model`,
+    cross-device traffic is exactly the expert all-to-all.
+    """
+    G, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = int(S * K / E * cfg.capacity_factor + 0.5)
+    C = max(8, ((C + 7) // 8) * 8)  # pad to 8 for TPU-friendly layout
+    dtype = x.dtype
+
+    logits = jnp.einsum("gsd,de->gse", x, params["router"].astype(dtype))
+    logits32 = logits.astype(jnp.float32)
+    gates, eidx = jax.lax.top_k(logits32, K)  # (G, S, K)
+    gates = jax.nn.softmax(gates, axis=-1)  # renormalize over the top-k
+
+    # Aux load-balance loss (Switch): E · Σ_e frac_tokens_e · frac_router_e
+    probs = jax.nn.softmax(logits32, axis=-1)  # (G, S, E)
+    me = jnp.mean(probs, axis=(0, 1))
+    onehot_top1 = jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # Routing bookkeeping per group (small int tensors; vmap is fine).
+    def positions_one(eidx_g):
+        flat_e = eidx_g.reshape(-1)  # (S·K,)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (S·K, E)
+        p = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=1)
+        kp = p < C
+        tok = jnp.repeat(jnp.arange(S), K)
+        b = jnp.zeros((E, C), jnp.int32)
+        b = b.at[jnp.where(kp, flat_e, 0), jnp.where(kp, p, 0)].add(
+            jnp.where(kp, tok + 1, 0), mode="drop"
+        )
+        return b, p, kp
+
+    buf, pos, keep = jax.vmap(positions_one)(eidx)
+    # buf (G, E, C); pos/keep (G, S·K)
+
+    # Dispatch: per-group gather under vmap — the gather indices are
+    # group-local, and the mapped dim keeps SPMD locality (a flattened
+    # global gather forces x to replicate: measured 27x collective blow-up).
+    def gather_one(xg, bufg):
+        g = xg[jnp.maximum(bufg - 1, 0)]  # (E, C, D)
+        return jnp.where((bufg > 0)[..., None], g, 0)
+
+    gathered = jax.vmap(gather_one)(x, buf)  # (G, E, C, D) bf16
+    # Pin expert parallelism HERE: group dim over batch, experts over model.
+    # The group-local → expert-sharded reshard is the all-to-all.  Never
+    # reshape (G·C) — merging a sharded dim degenerates to full remat.
+    gathered = constrain(gathered, "batch", "tp", None, None)
+
+    # Expert compute directly on (G, E, C, D) — no sharded-dim reshapes.
+    ex_out = _expert_ffn(
+        cfg, params["experts_in"], params["experts_out"], gathered
+    )
+    ex_out = constrain(ex_out, "batch", "tp", None, None)
+
+    # Combine: per-group gather back + gate-weight + sum the K copies per
+    # token (copies are contiguous — no scatter).
+    def combine_one(ex_g, flat_e_g, pos_g, keep_g, gates_g):
+        vals = ex_g[flat_e_g, jnp.where(keep_g, pos_g, 0)]  # (S·K, D)
+        vals = jnp.where(keep_g[:, None], vals, 0).astype(dtype)
+        w = gates_g.reshape(S * K, 1).astype(dtype)
+        return jnp.sum((vals * w).reshape(S, K, D), axis=1)
+
+    y = jax.vmap(combine_one)(
+        ex_out, eidx.reshape(G, S * K), pos, keep, gates
+    )
+
+    if cfg.n_shared_experts:
+        act = activation_fn(cfg.activation)
+        h = x @ params["shared_in"].astype(dtype)
+        if cfg.gated:
+            g, u = jnp.split(h, 2, axis=-1)
+            h = act(g) * u
+        else:
+            h = act(h)
+        y = y + h @ params["shared_out"].astype(dtype)
+    return y, aux

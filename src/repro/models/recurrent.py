@@ -1,0 +1,439 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/recurrentgemma), mLSTM & sLSTM
+(xLSTM).  All three provide a parallel training/prefill form and an O(1)
+per-token decode form with an explicit state pytree, so the same weights
+serve `train_step`, `prefill_step`, and `serve_step` (incl. long_500k).
+
+TPU adaptation notes (DESIGN.md §2):
+  * RG-LRU uses a log-space associative scan (`lax.associative_scan`) —
+    log-depth on the sequence axis instead of the GPU kernel's sequential
+    CUDA scan.
+  * mLSTM uses the chunkwise-parallel form (intra-chunk quadratic attention
+    on the MXU + inter-chunk recurrent state carry), the standard way linear
+    recurrences are mapped onto systolic hardware.
+  * sLSTM is inherently sequential (memory mixing breaks associativity);
+    it runs as a `lax.scan` over time with all four gates fused per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+__all__ = [
+    "RGLRUConfig",
+    "init_griffin_block",
+    "griffin_block",
+    "griffin_decode",
+    "init_griffin_state",
+    "MLSTMConfig",
+    "init_mlstm",
+    "mlstm",
+    "mlstm_decode",
+    "init_mlstm_state",
+    "SLSTMConfig",
+    "init_slstm",
+    "slstm",
+    "slstm_decode",
+    "init_slstm_state",
+]
+
+_C_RGLRU = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+# ===========================================================================
+# RG-LRU + temporal conv (Griffin recurrent block)
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int  # recurrence width
+    conv_width: int = 4
+
+
+def init_griffin_block(key: jax.Array, cfg: RGLRUConfig) -> dict:
+    ks = jax.random.split(key, 7)
+    d, r = cfg.d_model, cfg.d_rnn
+    # Λ init so that a = sigmoid(Λ)^c is in [0.9, 0.999] (Griffin §2.4)
+    u = jax.random.uniform(ks[0], (r,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(u ** (1.0 / _C_RGLRU) / (1 - u ** (1.0 / _C_RGLRU)))
+    return {
+        "w_x": dense_init(ks[1], (d, r)),  # input branch
+        "w_gate": dense_init(ks[2], (d, r)),  # gelu gate branch
+        "w_out": dense_init(ks[3], (r, d)),
+        "conv": dense_init(ks[4], (cfg.conv_width, r)) * 0.1,
+        "w_a": dense_init(ks[5], (r, r)),  # recurrence gate
+        "w_i": dense_init(ks[6], (r, r)),  # input gate
+        "lam": lam,
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "b_i": jnp.zeros((r,), jnp.float32),
+    }
+
+
+def _rglru_scan(params, u: jax.Array) -> jax.Array:
+    """RG-LRU over u (B, T, R) via log-space associative scan.
+
+    r_t = σ(u W_a + b_a); i_t = σ(u W_i + b_i)
+    a_t = exp(c · r_t · log σ(Λ))          (∈ (0,1))
+    h_t = a_t h_{t−1} + sqrt(1 − a_t²) · (i_t ⊙ u_t)
+    """
+    dtype = u.dtype
+    u32 = u.astype(jnp.float32)
+    r_g = jax.nn.sigmoid(u32 @ params["w_a"] + params["b_a"])
+    i_g = jax.nn.sigmoid(u32 @ params["w_i"] + params["b_i"])
+    log_a = _C_RGLRU * r_g * jax.nn.log_sigmoid(params["lam"])  # (B,T,R) ≤ 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_g * u32)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(dtype)
+
+
+def _causal_conv(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Depthwise causal temporal conv, width K: y_t = Σ_k w_k x_{t−K+1+k}."""
+    K = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):  # K is tiny (4); unrolled adds, no conv op needed
+        out = out + pads[:, k : k + x.shape[1], :] * w[k]
+    return out
+
+
+def griffin_block(params: dict, cfg: RGLRUConfig, x: jax.Array) -> jax.Array:
+    """Griffin recurrent block: gate ⊙ RG-LRU(conv(proj(x))) → out proj."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(dtype))
+    u = x @ params["w_x"].astype(dtype)
+    u = _causal_conv(params["conv"].astype(dtype), u)
+    h = _rglru_scan(params, u)
+    return (gate * h) @ params["w_out"].astype(dtype)
+
+
+def init_griffin_state(cfg: RGLRUConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+    }
+
+
+def griffin_decode(
+    params: dict, cfg: RGLRUConfig, x: jax.Array, state: dict
+) -> tuple[jax.Array, dict]:
+    """One-token decode. x (B, 1, D) → (B, 1, D), new state."""
+    dtype = x.dtype
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ params["w_gate"].astype(dtype))
+    u = xt @ params["w_x"].astype(dtype)  # (B, R)
+    # causal conv over [state.conv | u]
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B, K, R)
+    w = params["conv"].astype(dtype)
+    u_c = jnp.einsum("bkr,kr->br", hist, w)
+    u32 = u_c.astype(jnp.float32)
+    r_g = jax.nn.sigmoid(u32 @ params["w_a"] + params["b_a"])
+    i_g = jax.nn.sigmoid(u32 @ params["w_i"] + params["b_i"])
+    a = jnp.exp(_C_RGLRU * r_g * jax.nn.log_sigmoid(params["lam"]))
+    h = a * state["h"] + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i_g * u32)
+    out = (gate * h.astype(dtype)) @ params["w_out"].astype(dtype)
+    new_state = {"h": h, "conv": hist[:, 1:]}
+    return out[:, None], new_state
+
+
+# ===========================================================================
+# mLSTM (xLSTM's matrix-memory cell) — chunkwise-parallel
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int
+    d_head: int  # = d_inner / n_heads
+    expand: float = 2.0
+    chunk: int = 256
+    conv_width: int = 4
+
+
+def init_mlstm(key: jax.Array, cfg: MLSTMConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.n_heads * cfg.d_head
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di)),  # (inner, gate)
+        "w_down": dense_init(ks[1], (di, d)),
+        "conv": dense_init(ks[2], (cfg.conv_width, di)) * 0.1,
+        "wq": dense_init(ks[3], (di, di)).reshape(di, cfg.n_heads, cfg.d_head),
+        "wk": dense_init(ks[4], (di, di)).reshape(di, cfg.n_heads, cfg.d_head),
+        "wv": dense_init(ks[5], (di, di)).reshape(di, cfg.n_heads, cfg.d_head),
+        "w_if": dense_init(ks[6], (di, 2 * cfg.n_heads)),  # input/forget gates
+        "b_if": jnp.concatenate(
+            [jnp.zeros((cfg.n_heads,)), 3.0 * jnp.ones((cfg.n_heads,))]
+        ),
+        "skip_scale": jnp.ones((di,), jnp.float32),
+        "out_norm": {"scale": jnp.ones((di,), jnp.float32)},
+    }
+
+
+def _mlstm_chunk_parallel(q, k, v, log_i, log_f, chunk=256):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B, H, T, d); log_i/log_f: (B, H, T). Returns (B, H, T, d).
+
+    Within a chunk: masked quadratic attention with gate-derived decay
+    weights; across chunks: recurrent (C, n, m) state carry — both exact
+    (same math as the sequential form, reassociated).
+    """
+    B, H, T, d = q.shape
+    C = chunk if (chunk and T % chunk == 0) else T  # chunk length
+    n_chunks = T // C
+    qs = q.reshape(B, H, n_chunks, C, d)
+    ks_ = k.reshape(B, H, n_chunks, C, d)
+    vs = v.reshape(B, H, n_chunks, C, d)
+    li = log_i.reshape(B, H, n_chunks, C)
+    lf = log_f.reshape(B, H, n_chunks, C)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def chunk_step(carry, xs):
+        Cst, nst, mst = carry  # (B,H,d,d), (B,H,d), (B,H)
+        qc, kc, vc, lic, lfc = xs  # (B,H,C,d), ..., (B,H,C)
+        csum_f = jnp.cumsum(lfc, axis=-1)  # (B,H,C) Σ_{s≤t} log f_s
+        total_f = csum_f[..., -1]
+        # intra-chunk decay: D[t,s] = exp(csum_f[t] − csum_f[s] + li[s]), s ≤ t
+        log_D = (
+            csum_f[..., :, None] - csum_f[..., None, :] + lic[..., None, :]
+        )  # (B,H,C,C)
+        mask = jnp.tril(jnp.ones((C, C), bool))
+        log_D = jnp.where(mask, log_D, -jnp.inf)
+        # inter-chunk contribution decay for queries: exp(csum_f[t] + m_prev)
+        log_carry = csum_f + mst[..., None]  # (B,H,C)
+        m_t = jnp.maximum(jnp.max(log_D, axis=-1), log_carry)  # (B,H,C)
+        m_t = jnp.maximum(m_t, -1e30)
+        Dw = jnp.exp(log_D - m_t[..., None])  # (B,H,C,C)
+        s_qk = jnp.einsum("bhtd,bhsd->bhts", qc, kc * scale)
+        intra = jnp.einsum("bhts,bhsd->bhtd", s_qk * Dw, vc)
+        inter_w = jnp.exp(log_carry - m_t)  # (B,H,C)
+        q_dec = qc * inter_w[..., None]
+        inter = jnp.einsum("bhtd,bhde->bhte", q_dec, Cst)
+        denom_raw = jnp.einsum("bhtd,bhd->bht", q_dec, nst) + jnp.sum(
+            s_qk * Dw, axis=-1
+        )
+        denom = jnp.maximum(jnp.abs(denom_raw), jnp.exp(-m_t))
+        h = (intra + inter) / denom[..., None]
+        # state update: C' = f_total C + Σ_s exp(Σ_{u>s} f + i_s) k_s v_sᵀ
+        m_next = jnp.maximum(
+            total_f + mst,
+            jnp.max(lic + total_f[..., None] - csum_f, axis=-1),
+        )
+        w_state = jnp.exp(
+            lic + total_f[..., None] - csum_f - m_next[..., None]
+        )  # (B,H,C)
+        decay = jnp.exp(total_f + mst - m_next)
+        k_s = kc * scale
+        C_new = decay[..., None, None] * Cst + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_state, k_s, vc
+        )
+        n_new = decay[..., None] * nst + jnp.einsum("bhs,bhsd->bhd", w_state, k_s)
+        return (C_new, n_new, m_next), h
+
+    init = (
+        jnp.zeros((B, H, d, d), jnp.float32),
+        jnp.zeros((B, H, d), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    xs = (
+        jnp.moveaxis(qs, 2, 0),
+        jnp.moveaxis(ks_, 2, 0),
+        jnp.moveaxis(vs, 2, 0),
+        jnp.moveaxis(li, 2, 0),
+        jnp.moveaxis(lf, 2, 0),
+    )
+    _, hs = jax.lax.scan(chunk_step, init, xs)  # (n_chunks, B, H, C, d)
+    return jnp.moveaxis(hs, 0, 2).reshape(B, H, T, d)
+
+
+def mlstm(params: dict, cfg: MLSTMConfig, x: jax.Array) -> jax.Array:
+    """mLSTM block over x (B, T, D) → (B, T, D)."""
+    from repro.models.layers import rms_norm
+
+    dtype = x.dtype
+    B, T, D = x.shape
+    up = x @ params["w_up"].astype(dtype)  # (B, T, 2·di)
+    inner, gate = jnp.split(up, 2, axis=-1)
+    inner = _causal_conv(params["conv"].astype(dtype), inner)
+    inner_act = jax.nn.silu(inner)
+    q = jnp.einsum("btd,dhk->bhtk", inner_act, params["wq"].astype(dtype))
+    k = jnp.einsum("btd,dhk->bhtk", inner_act, params["wk"].astype(dtype))
+    v = jnp.einsum("btd,dhk->bhtk", inner, params["wv"].astype(dtype))
+    gf = (inner.astype(jnp.float32) @ params["w_if"]) + params["b_if"]
+    log_i, log_f = jnp.split(gf, 2, axis=-1)  # (B, T, H) each
+    log_i = jnp.moveaxis(log_i, -1, 1)  # (B, H, T)
+    log_f = jnp.moveaxis(jax.nn.log_sigmoid(log_f), -1, 1)
+    h = _mlstm_chunk_parallel(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_i, log_f, chunk=cfg.chunk,
+    )  # (B, H, T, d)
+    h = jnp.moveaxis(h, 1, 2).reshape(B, T, -1).astype(dtype)
+    h = rms_norm(params["out_norm"], h)
+    h = h + params["skip_scale"].astype(dtype) * inner_act
+    h = h * jax.nn.silu(gate)
+    return h @ params["w_down"].astype(dtype)
+
+
+def init_mlstm_state(cfg: MLSTMConfig, batch: int) -> dict:
+    H, d = cfg.n_heads, cfg.d_head
+    return {
+        "C": jnp.zeros((batch, H, d, d), jnp.float32),
+        "n": jnp.zeros((batch, H, d), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, H * d), jnp.float32),
+    }
+
+
+def mlstm_decode(
+    params: dict, cfg: MLSTMConfig, x: jax.Array, state: dict
+) -> tuple[jax.Array, dict]:
+    """One-token mLSTM step. x (B, 1, D)."""
+    from repro.models.layers import rms_norm
+
+    dtype = x.dtype
+    B = x.shape[0]
+    up = x[:, 0] @ params["w_up"].astype(dtype)
+    inner, gate = jnp.split(up, 2, axis=-1)
+    hist = jnp.concatenate([state["conv"].astype(dtype), inner[:, None]], axis=1)
+    w = params["conv"].astype(dtype)
+    inner_c = jnp.einsum("bkr,kr->br", hist, w)
+    inner_act = jax.nn.silu(inner_c)
+    q = jnp.einsum("bd,dhk->bhk", inner_act, params["wq"].astype(dtype)).astype(jnp.float32)
+    k = jnp.einsum("bd,dhk->bhk", inner_act, params["wk"].astype(dtype)).astype(jnp.float32)
+    v = jnp.einsum("bd,dhk->bhk", inner_c, params["wv"].astype(dtype)).astype(jnp.float32)
+    gf = (inner_c.astype(jnp.float32) @ params["w_if"]) + params["b_if"]
+    log_i, log_f_raw = jnp.split(gf, 2, axis=-1)  # (B, H)
+    log_f = jax.nn.log_sigmoid(log_f_raw)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_w = jnp.exp(log_i - m_new)
+    f_w = jnp.exp(log_f + state["m"] - m_new)
+    k_s = k * scale
+    C_new = f_w[..., None, None] * state["C"] + i_w[..., None, None] * (
+        k_s[..., :, None] * v[..., None, :]
+    )
+    n_new = f_w[..., None] * state["n"] + i_w[..., None] * k_s
+    num = jnp.einsum("bhk,bhke->bhe", q, C_new)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", q, n_new))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]  # (B, H, d)
+    h = h.reshape(B, -1).astype(dtype)
+    h = rms_norm(params["out_norm"], h)
+    h = h + params["skip_scale"].astype(dtype) * inner_act
+    h = h * jax.nn.silu(gate)
+    out = h @ params["w_down"].astype(dtype)
+    new_state = {"C": C_new, "n": n_new, "m": m_new, "conv": hist[:, 1:].astype(jnp.float32)}
+    return out[:, None], new_state
+
+
+# ===========================================================================
+# sLSTM (xLSTM's scalar cell with exponential gating + head mixing)
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int
+    d_head: int
+
+
+def init_slstm(key: jax.Array, cfg: SLSTMConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.n_heads * cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input proj for gates (i, f, z, o)
+        "w_in": dense_init(ks[0], (d, 4 * di)),
+        # block-diagonal (per-head) recurrent mixing for each gate
+        "r_in": dense_init(ks[1], (4, cfg.n_heads, cfg.d_head, cfg.d_head))
+        * 0.5,
+        "b": jnp.concatenate(
+            [
+                jnp.zeros((di,)),  # i
+                3.0 * jnp.ones((di,)),  # f (open at init)
+                jnp.zeros((2 * di,)),  # z, o
+            ]
+        ),
+        "w_down": dense_init(ks[2], (di, d)),
+        "out_norm": {"scale": jnp.ones((di,), jnp.float32)},
+    }
+
+
+def _slstm_step(params, cfg: SLSTMConfig, state, wx_t):
+    """One sLSTM step. wx_t: (B, 4·di) pre-computed input projection."""
+    c, n, h, m = state  # (B, H, d) ×3, (B, H)
+    B = wx_t.shape[0]
+    H, d = cfg.n_heads, cfg.d_head
+    rh = jnp.einsum("bhk,ghkl->bghl", h, params["r_in"])  # (B, 4, H, d)
+    z_all = wx_t.reshape(B, 4, H, d) + rh + params["b"].reshape(4, H, d)
+    i_t, f_t, z_t, o_t = z_all[:, 0], z_all[:, 1], z_all[:, 2], z_all[:, 3]
+    log_i = i_t.mean(-1)  # scalar gates per head (B, H)
+    log_f = jax.nn.log_sigmoid(f_t.mean(-1))
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_w = jnp.exp(log_i - m_new)[..., None]
+    f_w = jnp.exp(log_f + m - m_new)[..., None]
+    c_new = f_w * c + i_w * jnp.tanh(z_t)
+    n_new = f_w * n + i_w
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm(params: dict, cfg: SLSTMConfig, x: jax.Array) -> jax.Array:
+    """sLSTM over x (B, T, D) → (B, T, D) via sequential scan."""
+    from repro.models.layers import rms_norm
+
+    dtype = x.dtype
+    B, T, D = x.shape
+    wx = (x @ params["w_in"].astype(dtype)).astype(jnp.float32)  # (B, T, 4di)
+    H, d = cfg.n_heads, cfg.d_head
+    init = (
+        jnp.zeros((B, H, d), jnp.float32),
+        jnp.zeros((B, H, d), jnp.float32),
+        jnp.zeros((B, H, d), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    _, hs = jax.lax.scan(
+        lambda s, w: _slstm_step(params, cfg, s, w), init, jnp.moveaxis(wx, 1, 0)
+    )  # (T, B, H, d)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, H * d).astype(dtype)
+    h = rms_norm(params["out_norm"], h)
+    return h @ params["w_down"].astype(dtype)
+
+
+def init_slstm_state(cfg: SLSTMConfig, batch: int) -> tuple:
+    H, d = cfg.n_heads, cfg.d_head
+    return (
+        jnp.zeros((batch, H, d), jnp.float32),
+        jnp.zeros((batch, H, d), jnp.float32),
+        jnp.zeros((batch, H, d), jnp.float32),
+        jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def slstm_decode(
+    params: dict, cfg: SLSTMConfig, x: jax.Array, state: tuple
+) -> tuple[jax.Array, tuple]:
+    """One-token sLSTM step. x (B, 1, D)."""
+    from repro.models.layers import rms_norm
+
+    dtype = x.dtype
+    wx = (x[:, 0] @ params["w_in"].astype(dtype)).astype(jnp.float32)
+    new_state, h = _slstm_step(params, cfg, state, wx)
+    B = x.shape[0]
+    h = h.reshape(B, -1).astype(dtype)
+    h = rms_norm(params["out_norm"], h)
+    out = h @ params["w_down"].astype(dtype)
+    return out[:, None], new_state

@@ -1,0 +1,21 @@
+"""Optimizers: pjit-native IG variants + the paper's convex VR baselines."""
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    constant,
+    exponential_decay,
+    global_norm,
+    k_inverse,
+    momentum,
+    sgd,
+    warmup_cosine,
+)
+from repro.optim.variance_reduced import ig_run, saga_run, svrg_run
+
+__all__ = [
+    "Optimizer", "OptState", "adamw", "clip_by_global_norm", "constant",
+    "exponential_decay", "global_norm", "k_inverse", "momentum", "sgd",
+    "warmup_cosine", "ig_run", "saga_run", "svrg_run",
+]

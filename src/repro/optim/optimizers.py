@@ -1,0 +1,182 @@
+"""Optimizers (pytree-native, optax-style but self-contained).
+
+All optimizers support:
+  * per-element stepsizes — CRAIG's γ weights enter either through the
+    weighted loss (preferred, see train/loss) or through ``scale`` here;
+  * mixed precision: fp32 master params/state, bf16 compute handled upstream;
+  * global-norm clipping;
+  * learning-rate schedules as callables step → lr (paper's exponential and
+    k-inverse schedules provided, §5.1).
+
+State layout mirrors params (shards identically under pjit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OptState",
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adamw",
+    "global_norm",
+    "clip_by_global_norm",
+    "exponential_decay",
+    "k_inverse",
+    "constant",
+    "warmup_cosine",
+]
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+    """(grads, state, params) → (new_params, new_state)."""
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+# -- schedules (paper §5.1) --------------------------------------------------
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(lr0: float, b: float) -> Schedule:
+    """α_k = α0 · b^k (paper's best-performing schedule)."""
+    return lambda step: jnp.asarray(lr0, jnp.float32) * jnp.power(b, step)
+
+
+def k_inverse(lr0: float, b: float, tau: float = 1.0) -> Schedule:
+    """α_k = α0 / (1 + b·k)^τ — the paper's theoretically covered schedule
+    (Thm 1/2 diminishing stepsizes α/k^τ)."""
+    return lambda step: jnp.asarray(lr0, jnp.float32) / jnp.power(
+        1.0 + b * step, tau
+    )
+
+
+def warmup_cosine(lr0: float, warmup: int, total: int) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr0 * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr0 * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+# -- optimizers ---------------------------------------------------------------
+
+
+def sgd(schedule: Schedule, clip: float | None = None) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), ())
+
+    def update(grads, state, params):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        lr = schedule(state.step)
+        new = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new, OptState(state.step + 1, ())
+
+    return Optimizer(init, update)
+
+
+def momentum(
+    schedule: Schedule, beta: float = 0.9, clip: float | None = None
+) -> Optimizer:
+    def init(params):
+        m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), m)
+
+    def update(grads, state, params):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        lr = schedule(state.step)
+        m = jax.tree.map(
+            lambda m_, g: beta * m_ + g.astype(jnp.float32), state.inner, grads
+        )
+        new = jax.tree.map(lambda p, m_: (p - lr * m_).astype(p.dtype), params, m)
+        return new, OptState(state.step + 1, m)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    schedule: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    clip: float | None = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return OptState(
+            jnp.zeros((), jnp.int32),
+            {
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+            },
+        )
+
+    def update(grads, state, params):
+        if clip is not None:
+            grads, _ = clip_by_global_norm(grads, clip)
+        step = state.step + 1
+        lr = schedule(state.step)
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state.inner["m"],
+            grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.inner["v"],
+            grads,
+        )
+        bc1 = 1 - b1**step.astype(jnp.float32)
+        bc2 = 1 - b2**step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, OptState(step, {"m": m, "v": v})
+
+    return Optimizer(init, update)

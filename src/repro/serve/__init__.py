@@ -1,0 +1,4 @@
+"""Serving substrate: prefill/decode steps + generation loop."""
+from repro.serve.serve_step import greedy_generate, make_prefill_step, make_serve_step
+
+__all__ = ["greedy_generate", "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,62 @@
+"""Serving: batched prefill + one-token decode steps (pjit-ready).
+
+``make_prefill_step`` — forward over the full prompt, emits last-token
+logits (the dry-run's `prefill_*` cells lower this).
+``make_serve_step``   — one new token against a seq_len-deep KV cache /
+recurrent state (the `decode_*` / `long_*` cells lower this); cache tensors
+are donated by the launcher so decode is in-place in HBM.
+``greedy_generate``   — host loop driving serve_step for the examples.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_serve_state, prefill
+from repro.models.config import ModelConfig
+
+__all__ = ["make_prefill_step", "make_serve_step", "greedy_generate"]
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        _, logits = prefill(params, cfg, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, state, batch):
+        return decode_step(params, cfg, state, batch)
+
+    return serve_step
+
+
+def greedy_generate(
+    params,
+    cfg: ModelConfig,
+    prompt_tokens: jax.Array,
+    max_new: int,
+    max_len: int | None = None,
+) -> jax.Array:
+    """Greedy decoding for token-frontend models (host loop, jit step)."""
+    B, T = prompt_tokens.shape
+    max_len = max_len or (T + max_new)
+    state = init_serve_state(cfg, B, max_len)
+    step = jax.jit(make_serve_step(cfg))
+
+    # teacher-force the prompt through the decode path (builds the cache)
+    logits = None
+    for t in range(T):
+        logits, state = step(params, state, {"tokens": prompt_tokens[:, t : t + 1]})
+
+    out = [prompt_tokens]
+    cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(max_new):
+        out.append(cur)
+        logits, state = step(params, state, {"tokens": cur})
+        cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

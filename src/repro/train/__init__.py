@@ -1,0 +1,5 @@
+"""Training substrate: pjit step factories + host trainer loop."""
+from repro.train.train_step import make_select_step, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["make_select_step", "make_train_step", "Trainer", "TrainerConfig"]

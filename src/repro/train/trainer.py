@@ -1,0 +1,230 @@
+"""Trainer: host loop tying CRAIG selection into the training schedule.
+
+Responsibilities (DESIGN.md §4):
+  * CRAIG refresh every ``select_every`` epochs (paper §3.4: deep-net proxies
+    drift with w, so the subset is re-selected periodically; Fig 5 sweeps
+    per-1 and per-5-epoch refresh);
+  * weighted-batch training between refreshes (γ weights ride in the batch);
+  * checkpoint/restart: params + opt state + sampler cursor + active coreset
+    are one atomic unit; ``Trainer.restore_or_init`` resumes the exact
+    stream, optionally onto a different mesh (elastic);
+  * preemption: SIGTERM triggers an emergency checkpoint at the next step
+    boundary (CPU-testable via ``request_preempt()``);
+  * straggler policy: per-step wall-clock watchdog — on the single-host
+    harness it only records violations; on a pod it feeds the
+    restart-from-checkpoint path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.craig import CraigConfig, CraigSelector
+from repro.data.pipeline import CoresetSampler
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import Optimizer
+from repro.train.train_step import make_select_step, make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    batch_size: int = 8
+    eval_every: int = 0  # steps between held-out evals (0 = never)
+    eval_batches: int = 2
+    select_every_epochs: int = 1  # CRAIG refresh cadence (0 = never)
+    craig: CraigConfig = dataclasses.field(
+        default_factory=lambda: CraigConfig(fraction=0.5, per_class=False)
+    )
+    use_craig: bool = True
+    proxy_pool_batches: int = 8  # batches of the pool scanned per refresh
+    checkpoint_every: int = 50
+    checkpoint_dir: str | None = None
+    keep_checkpoints: int = 3
+    step_timeout_s: float | None = None  # straggler watchdog
+    microbatches: int = 1
+    seed: int = 0
+
+
+class Trainer:
+    """Single-controller trainer (CPU-testable; sharding-transparent)."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainerConfig,
+        dataset,
+        optimizer: Optimizer,
+        init_params_fn: Callable[[], Any],
+        eval_dataset=None,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.dataset = dataset
+        self.eval_dataset = eval_dataset
+        self.optimizer = optimizer
+        self.sampler = CoresetSampler(dataset.n_docs, tcfg.batch_size, tcfg.seed)
+        self.train_step = jax.jit(
+            make_train_step(cfg, optimizer, microbatches=tcfg.microbatches)
+        )
+        self.select_step = jax.jit(make_select_step(cfg))
+        self.params = init_params_fn()
+        self.opt_state = optimizer.init(self.params)
+        self.step = 0
+        self.metrics_log: list[dict] = []
+        self.straggler_events: list[int] = []
+        self._preempt = False
+        self.ckpt = (
+            CheckpointManager(tcfg.checkpoint_dir, tcfg.keep_checkpoints)
+            if tcfg.checkpoint_dir
+            else None
+        )
+        self._last_epoch_selected = -1
+        from repro.models import loss_fn as _loss_fn
+
+        self._eval_loss = jax.jit(
+            lambda p, b: _loss_fn(p, cfg, b)[1]["loss"]
+        )
+
+    # -- preemption -----------------------------------------------------------
+
+    def install_signal_handler(self) -> None:
+        signal.signal(signal.SIGTERM, lambda *_: self.request_preempt())
+
+    def request_preempt(self) -> None:
+        self._preempt = True
+
+    # -- CRAIG refresh ---------------------------------------------------------
+
+    def _refresh_coreset(self) -> None:
+        """Extract proxies over a candidate pool and re-select the coreset."""
+        t0 = time.time()
+        n_pool = min(
+            self.dataset.n_docs,
+            self.tcfg.proxy_pool_batches * self.tcfg.batch_size,
+        )
+        # deterministic pool: stride over the corpus
+        stride = max(1, self.dataset.n_docs // n_pool)
+        pool_idx = np.arange(0, self.dataset.n_docs, stride)[:n_pool]
+        feats = []
+        bs = self.tcfg.batch_size
+        for lo in range(0, len(pool_idx), bs):
+            chunk = pool_idx[lo : lo + bs]
+            if len(chunk) < bs:  # pad, then drop
+                chunk = np.concatenate([chunk, pool_idx[: bs - len(chunk)]])
+            batch = self.dataset.batch(chunk)
+            f = self.select_step(self.params, batch)
+            feats.append(np.asarray(f))
+        feats = np.concatenate(feats)[: len(pool_idx)]
+        sel = CraigSelector(self.tcfg.craig).select(feats)
+        self.sampler.set_coreset(pool_idx[sel.indices], sel.weights)
+        self.metrics_log.append(
+            {
+                "event": "craig_refresh",
+                "step": self.step,
+                "coreset_size": sel.size,
+                "epsilon_hat": sel.epsilon_hat,
+                "select_time_s": time.time() - t0,
+            }
+        )
+
+    # -- evaluation ------------------------------------------------------------
+
+    def evaluate(self) -> float:
+        """Mean held-out loss over ``eval_batches`` deterministic batches."""
+        ds = self.eval_dataset or self.dataset
+        bs = self.tcfg.batch_size
+        total = 0.0
+        for b in range(self.tcfg.eval_batches):
+            idx = (np.arange(bs) + b * bs) % ds.n_docs
+            batch = ds.batch(idx)
+            batch.pop("indices", None)
+            total += float(self._eval_loss(self.params, batch))
+        loss = total / max(self.tcfg.eval_batches, 1)
+        self.metrics_log.append(
+            {"event": "eval", "step": self.step, "eval_loss": loss}
+        )
+        return loss
+
+    # -- checkpoint -------------------------------------------------------------
+
+    def _save(self, blocking: bool = True) -> None:
+        if self.ckpt is None:
+            return
+        tree = {"params": self.params, "opt": self.opt_state}
+        extras = {
+            "step": self.step,
+            "sampler": self.sampler.state_dict(),
+            "last_epoch_selected": self._last_epoch_selected,
+        }
+        self.ckpt.save(self.step, tree, extras, blocking=blocking)
+
+    def restore_or_init(self, shardings: Any | None = None) -> bool:
+        """Returns True if restored from checkpoint."""
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return False
+        template = {"params": self.params, "opt": self.opt_state}
+        tree, extras = self.ckpt.restore(template, shardings=shardings)
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.step = int(extras["step"])
+        self.sampler.load_state_dict(extras["sampler"])
+        self._last_epoch_selected = int(extras["last_epoch_selected"])
+        return True
+
+    # -- main loop ----------------------------------------------------------------
+
+    def run(self, n_steps: int) -> list[dict]:
+        tc = self.tcfg
+        for _ in range(n_steps):
+            # CRAIG refresh at epoch boundaries
+            epoch = self.sampler.epoch
+            if (
+                tc.use_craig
+                and tc.select_every_epochs > 0
+                and self.sampler.step_in_epoch == 0
+                and epoch != self._last_epoch_selected
+                and epoch % tc.select_every_epochs == 0
+            ):
+                self._refresh_coreset()
+                self._last_epoch_selected = epoch
+
+            idx, w = self.sampler.next_batch()
+            batch = self.dataset.batch(idx)
+            batch["weights"] = w
+            batch.pop("indices", None)
+            t0 = time.time()
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch
+            )
+            dt = time.time() - t0
+            if tc.step_timeout_s is not None and dt > tc.step_timeout_s:
+                self.straggler_events.append(self.step)
+            self.step += 1
+            self.metrics_log.append(
+                {
+                    "event": "step",
+                    "step": self.step,
+                    "loss": float(metrics["loss"]),
+                    "epoch": epoch,
+                    "time_s": dt,
+                }
+            )
+            if tc.eval_every and self.step % tc.eval_every == 0:
+                self.evaluate()
+            if self.ckpt is not None and self.step % tc.checkpoint_every == 0:
+                self._save(blocking=False)
+            if self._preempt:
+                self._save(blocking=True)
+                break
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return self.metrics_log

@@ -1,0 +1,42 @@
+"""Activation annotation layer: no-mesh no-op, axis resolution, strictness."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.annotate import constrain, mesh_context, set_mesh
+from repro.launch.mesh import make_host_mesh
+
+
+def test_noop_without_mesh():
+    set_mesh(None)
+    x = jnp.ones((4, 8))
+    y = constrain(x, "batch", "tp")
+    assert y is x
+
+
+def test_mesh_context_restores():
+    mesh = make_host_mesh()
+    set_mesh(None)
+    with mesh_context(mesh):
+        x = constrain(jnp.ones((4, 8)), "batch", None)
+        assert x.shape == (4, 8)
+    # restored
+    y = constrain(jnp.ones((2, 2)), "batch", "tp")
+    assert y.shape == (2, 2)
+
+
+def test_strict_vs_padded():
+    mesh = make_host_mesh()  # sizes 1 → everything divisible; just smoke
+    with mesh_context(mesh):
+        x = jnp.ones((3, 5))
+        a = constrain(x, "batch", "tp")
+        b = constrain(x, "batch", "tp", strict=True)
+        assert a.shape == b.shape == (3, 5)
+
+
+def test_dp_over_model_resolution():
+    mesh = make_host_mesh()
+    set_mesh(mesh, dp_over_model=True)
+    x = constrain(jnp.ones((4, 4)), "batch", "tp")
+    assert x.shape == (4, 4)
+    set_mesh(None)

@@ -1,0 +1,120 @@
+"""Attention unit tests: blockwise==dense, windowing, M-RoPE properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    AttentionConfig,
+    _blockwise_attention,
+    _dense_attention,
+    attention,
+    init_attention,
+)
+from repro.models.layers import apply_mrope, apply_rope
+
+
+def _qkv(B=2, T=32, H=4, hd=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [None, 8])
+@pytest.mark.parametrize("chunks", [(8, 8), (16, 4), (4, 16)])
+def test_blockwise_equals_dense(window, chunks):
+    q, k, v = _qkv()
+    scale = 0.25
+    cfg = AttentionConfig(
+        d_model=64, n_heads=4, n_kv_heads=4, d_head=16, window=window,
+        chunk_q=chunks[0], chunk_kv=chunks[1],
+    )
+    dense = _dense_attention(q, k, v, scale, 0, window)
+    block = _blockwise_attention(q, k, v, scale, cfg)
+    np.testing.assert_allclose(
+        np.asarray(dense), np.asarray(block), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_window_masks_past():
+    """With window w, token t must ignore keys < t − w + 1: perturbing an
+    out-of-window key must not change the output."""
+    q, k, v = _qkv(T=24)
+    cfg = AttentionConfig(d_model=64, n_heads=4, n_kv_heads=4, d_head=16, window=4)
+    base = _dense_attention(q, k, v, 0.25, 0, 4)
+    k2 = k.at[:, 0].add(100.0)  # way outside the window of t ≥ 5
+    v2 = v.at[:, 0].add(100.0)
+    pert = _dense_attention(q, k2, v2, 0.25, 0, 4)
+    np.testing.assert_allclose(
+        np.asarray(base[:, 5:]), np.asarray(pert[:, 5:]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_causality():
+    """Future-token perturbations never leak backwards."""
+    cfg = AttentionConfig(d_model=64, n_heads=4, n_kv_heads=2, d_head=16)
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    base = attention(params, cfg, x, pos)
+    x2 = x.at[:, 10:].add(3.0)
+    pert = attention(params, cfg, x2, pos)
+    np.testing.assert_allclose(
+        np.asarray(base[:, :10]), np.asarray(pert[:, :10]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_rope_relative_property():
+    """RoPE inner products depend only on relative positions."""
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+
+    def score(pq, pk):
+        qr = apply_rope(q, jnp.array([[pq]]))
+        kr = apply_rope(k, jnp.array([[pk]]))
+        return float(jnp.sum(qr * kr))
+
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-4)
+    assert score(7, 0) == pytest.approx(score(57, 50), rel=1e-4)
+
+
+def test_mrope_reduces_to_rope_on_text():
+    """With t==h==w position streams, M-RoPE must equal plain RoPE."""
+    B, T, H, hd = 2, 8, 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    pos3 = jnp.broadcast_to(pos[:, None], (B, 3, T))
+    a = apply_rope(x, pos)
+    b = apply_mrope(x, pos3, (4, 2, 2))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_mrope_streams_differ():
+    """Distinct h/w streams must produce different rotations than text mode."""
+    B, T, H, hd = 1, 8, 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd))
+    t = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    pos_text = jnp.stack([t, t, t], axis=1)
+    pos_img = jnp.stack([t, t * 0 + 3, t * 0 + 5], axis=1)
+    a = apply_mrope(x, pos_text, (4, 2, 2))
+    b = apply_mrope(x, pos_img, (4, 2, 2))
+    assert float(jnp.max(jnp.abs(a - b))) > 1e-3
+
+
+def test_gqa_repeat_matches_full_heads():
+    """GQA with kv broadcast equals MHA where kv heads are replicated."""
+    cfg_gqa = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=2, d_head=8)
+    params = init_attention(jax.random.PRNGKey(0), cfg_gqa)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 32))
+    pos = jnp.broadcast_to(jnp.arange(12), (1, 12))
+    out = attention(params, cfg_gqa, x, pos)
+
+    cfg_mha = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=4, d_head=8)
+    params_mha = dict(params)
+    params_mha["wk"] = jnp.repeat(params["wk"], 2, axis=1)
+    params_mha["wv"] = jnp.repeat(params["wv"], 2, axis=1)
+    out2 = attention(params_mha, cfg_mha, x, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), rtol=1e-5, atol=1e-5)

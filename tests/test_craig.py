@@ -1,0 +1,124 @@
+"""CraigSelector behaviour + the paper's gradient-approximation claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facility_location as fl
+from repro.core.craig import CraigConfig, CraigSelector, pairwise_distances
+from repro.core.proxy import exact_per_example_grads
+from repro.data.synthetic import make_classification
+
+
+def test_budget_mode_size_and_weights():
+    feats = jax.random.normal(jax.random.PRNGKey(0), (100, 8))
+    sel = CraigSelector(CraigConfig(fraction=0.2, per_class=False))
+    cs = sel.select(feats)
+    assert cs.size == 20
+    assert cs.weights.sum() == pytest.approx(100.0)
+    assert len(set(cs.indices.tolist())) == 20
+
+
+def test_per_class_budget_apportionment():
+    feats = jax.random.normal(jax.random.PRNGKey(0), (120, 8))
+    labels = np.array([0] * 60 + [1] * 40 + [2] * 20)
+    sel = CraigSelector(CraigConfig(fraction=0.1, per_class=True))
+    cs = sel.select(feats, labels)
+    assert cs.size == 12
+    assert cs.per_class_sizes == {0: 6, 1: 4, 2: 2}
+    assert cs.weights.sum() == pytest.approx(120.0)
+
+
+def test_cover_mode_meets_epsilon():
+    feats = jax.random.normal(jax.random.PRNGKey(1), (80, 8))
+    dist = pairwise_distances(feats)
+    # epsilon achievable with ~15 medoids
+    ref = fl.greedy_fl_matrix(jnp.max(dist) + 1e-6 - dist, 15)
+    eps = float(fl.coverage_l(dist, ref.indices))
+    sel = CraigSelector(CraigConfig(mode="cover", epsilon=eps, per_class=False))
+    cs = sel.select(feats)
+    assert cs.coverage <= eps + 1e-4
+    assert cs.size <= 16
+
+
+def test_engines_agree_on_clustered_data():
+    x, y = make_classification(200, 10, 2, seed=3)
+    for engine in ("matrix", "lazy", "features"):
+        sel = CraigSelector(
+            CraigConfig(fraction=0.1, engine=engine, per_class=False)
+        )
+        cs = sel.select(x)
+        assert cs.size == 20
+        assert cs.weights.sum() == pytest.approx(200.0)
+
+
+# ---------------------------------------------------------------------------
+# Paper claims (Fig 2 / Eq 5–8 / §3.2 ordering)
+# ---------------------------------------------------------------------------
+
+
+def _logreg_setup(n=96, d=6, seed=0):
+    x, y = make_classification(n, d, 2, seed=seed)
+    ybin = y * 2.0 - 1.0  # ±1
+    lam = 1e-5
+
+    def loss_one(w, xi, yi):
+        return jnp.log1p(jnp.exp(-yi * (xi @ w))) + 0.5 * lam * w @ w
+
+    return x, ybin, loss_one
+
+
+def test_craig_gradient_error_beats_random():
+    """Fig 2: ‖Σ∇f − Σγ∇f_S‖ smaller for CRAIG than random (same size)."""
+    x, y, loss_one = _logreg_setup()
+    n = x.shape[0]
+    sel = CraigSelector(CraigConfig(fraction=0.15, per_class=True))
+    cs = sel.select(x, (y > 0).astype(np.int32))
+
+    rng = np.random.RandomState(0)
+    errs_craig, errs_rand = [], []
+    for seed in range(5):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (x.shape[1],)) * 0.5
+        grads = exact_per_example_grads(loss_one, w, jnp.asarray(x), jnp.asarray(y))
+        full = jnp.sum(grads, axis=0)
+        g_craig = jnp.sum(
+            grads[jnp.asarray(cs.indices)] * jnp.asarray(cs.weights)[:, None], 0
+        )
+        errs_craig.append(float(jnp.linalg.norm(full - g_craig)))
+        ridx = rng.choice(n, cs.size, replace=False)
+        g_rand = jnp.sum(grads[ridx], axis=0) * (n / cs.size)
+        errs_rand.append(float(jnp.linalg.norm(full - g_rand)))
+    assert np.mean(errs_craig) < np.mean(errs_rand)
+
+
+def test_epsilon_hat_bounds_weighted_gradient_error_direction():
+    """ε̂ from Eq. 15 scales with the actual gradient estimation error:
+    larger coresets → smaller ε̂ AND smaller true error."""
+    x, y, loss_one = _logreg_setup()
+    errs, epss = [], []
+    for frac in (0.05, 0.2, 0.5):
+        sel = CraigSelector(CraigConfig(fraction=frac, per_class=False))
+        cs = sel.select(x)
+        w = jax.random.normal(jax.random.PRNGKey(7), (x.shape[1],)) * 0.5
+        grads = exact_per_example_grads(loss_one, w, jnp.asarray(x), jnp.asarray(y))
+        full = jnp.sum(grads, axis=0)
+        g_hat = jnp.sum(
+            grads[jnp.asarray(cs.indices)] * jnp.asarray(cs.weights)[:, None], 0
+        )
+        errs.append(float(jnp.linalg.norm(full - g_hat)))
+        epss.append(cs.epsilon_hat)
+    assert epss == sorted(epss, reverse=True)
+    assert errs[0] >= errs[-1]  # more budget → tighter gradient estimate
+
+
+def test_greedy_order_prefix_quality():
+    """§3.2: greedy order is nested — every prefix of a big selection matches
+    the selection at that budget (so early elements carry the approximation)."""
+    feats = jax.random.normal(jax.random.PRNGKey(2), (90, 8))
+    dist = pairwise_distances(feats)
+    sim = jnp.max(dist) + 1e-6 - dist
+    big = fl.greedy_fl_matrix(sim, 30)
+    small = fl.greedy_fl_matrix(sim, 10)
+    np.testing.assert_array_equal(
+        np.asarray(big.indices)[:10], np.asarray(small.indices)
+    )

@@ -1,0 +1,106 @@
+"""Greedy facility-location engines: exactness, parity, invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facility_location as fl
+from repro.core.craig import pairwise_distances
+
+
+def _sim(n=120, d=8, seed=0):
+    feats = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    dist = pairwise_distances(feats)
+    d_max = jnp.max(dist) + 1e-6
+    return feats, dist, d_max - dist
+
+
+def test_matrix_equals_lazy():
+    _, _, sim = _sim()
+    r1 = fl.greedy_fl_matrix(sim, 15)
+    r2 = fl.lazy_greedy_fl(np.asarray(sim), 15)
+    np.testing.assert_array_equal(np.asarray(r1.indices), np.asarray(r2.indices))
+    np.testing.assert_allclose(
+        np.asarray(r1.gains), np.asarray(r2.gains), rtol=1e-4
+    )
+
+
+def test_features_engine_equals_matrix():
+    feats, _, sim = _sim()
+    r1 = fl.greedy_fl_matrix(sim, 12)
+    r2 = fl.greedy_fl_features(feats, 12, gains_impl="jax")
+    np.testing.assert_array_equal(np.asarray(r1.indices), np.asarray(r2.indices))
+
+
+def test_features_pallas_equals_jax():
+    feats, _, _ = _sim(n=96, d=16)
+    r1 = fl.greedy_fl_features(feats, 10, gains_impl="jax")
+    r2 = fl.greedy_fl_features(feats, 10, gains_impl="pallas")
+    np.testing.assert_array_equal(np.asarray(r1.indices), np.asarray(r2.indices))
+
+
+def test_weights_sum_to_n():
+    """γ weights are cluster sizes: Σγ = |V| (paper Alg. 1)."""
+    _, _, sim = _sim(n=200)
+    for r in (1, 7, 50):
+        res = fl.greedy_fl_matrix(sim, r)
+        assert float(res.weights.sum()) == pytest.approx(200.0)
+
+
+def test_gains_non_increasing():
+    """Exact greedy marginal gains are non-increasing (submodularity)."""
+    _, _, sim = _sim()
+    res = fl.greedy_fl_matrix(sim, 30)
+    g = np.asarray(res.gains)
+    assert np.all(g[:-1] >= g[1:] - 1e-4)
+
+
+def test_coverage_decreases_with_budget():
+    """L(S) = Σ_i min_{j∈S} d_ij shrinks as the subset grows (paper Eq. 8)."""
+    _, dist, sim = _sim()
+    covs = []
+    for r in (2, 5, 10, 40):
+        res = fl.greedy_fl_matrix(sim, r)
+        covs.append(float(fl.coverage_l(dist, res.indices)))
+    assert covs == sorted(covs, reverse=True)
+
+
+def test_stochastic_greedy_quality():
+    """Stochastic greedy's coverage stays close to exact greedy's."""
+    _, dist, sim = _sim(n=256)
+    exact = fl.greedy_fl_matrix(sim, 20)
+    stoch = fl.stochastic_greedy_fl(sim, 20, jax.random.PRNGKey(1), 64)
+    c_e = float(fl.coverage_l(dist, exact.indices))
+    c_s = float(fl.coverage_l(dist, stoch.indices))
+    assert c_s <= 1.35 * c_e  # within 35% of exact coverage
+
+
+def test_weighted_point_greedy():
+    """Point weights act as multiplicities: duplicating a point == weighting."""
+    feats = jax.random.normal(jax.random.PRNGKey(3), (40, 4))
+    dup = jnp.concatenate([feats, feats[:10]])  # points 0..9 twice
+    dist_d = pairwise_distances(dup)
+    sim_d = jnp.max(dist_d) + 1e-6 - dist_d
+
+    dist_w = pairwise_distances(feats)
+    # same d_max so similarity scales match
+    sim_w = jnp.max(dist_d) + 1e-6 - dist_w
+    pw = jnp.ones((40,)).at[:10].set(2.0)
+    r_dup = fl.greedy_fl_matrix(sim_d, 5)
+    r_w = fl.greedy_fl_matrix(sim_w, 5, point_weights=pw)
+    # selections map to the same base points (dup indices mod 40)
+    assert set(int(i) % 40 for i in np.asarray(r_dup.indices)) == set(
+        int(i) for i in np.asarray(r_w.indices)
+    )
+
+
+def test_facility_location_value_monotone():
+    _, _, sim = _sim(n=60)
+    mask = jnp.zeros((60,), bool)
+    prev = 0.0
+    order = np.random.RandomState(0).permutation(60)[:20]
+    for e in order:
+        mask = mask.at[int(e)].set(True)
+        val = float(fl.facility_location_value(sim, mask))
+        assert val >= prev - 1e-4
+        prev = val

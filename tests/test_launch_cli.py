@@ -1,0 +1,32 @@
+"""Launch CLIs run end-to-end in smoke mode (subprocess)."""
+import os
+import subprocess
+import sys
+
+ENV = dict(os.environ)
+ENV["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args, timeout=480):
+    return subprocess.run(
+        [sys.executable, "-m", *args], env=ENV, capture_output=True,
+        text=True, timeout=timeout,
+    )
+
+
+def test_train_cli_smoke():
+    out = _run([
+        "repro.launch.train", "--arch", "qwen3-1.7b", "--smoke",
+        "--steps", "4", "--batch", "4", "--seq", "32", "--docs", "16",
+    ])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "loss" in out.stdout
+
+
+def test_serve_cli_smoke():
+    out = _run([
+        "repro.launch.serve", "--arch", "granite-3-8b", "--smoke",
+        "--batch", "2", "--prompt-len", "4", "--new", "4",
+    ])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "tok/s" in out.stdout

@@ -1,0 +1,89 @@
+"""Teacher-forced forward vs token-by-token decode parity, all families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (
+    ModelConfig,
+    decode_step,
+    forward,
+    init_params,
+    init_serve_state,
+)
+from repro.models.model import COMPUTE_DTYPE, _unembed_matrix
+
+CFGS = {
+    "dense": ModelConfig(
+        name="dense", family="dense", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, qkv_bias=True, qk_norm=True,
+    ),
+    "griffin": ModelConfig(
+        name="griffin", family="hybrid", n_layers=5, d_model=64, n_heads=4,
+        n_kv_heads=1, d_ff=128, vocab_size=128,
+        block_pattern=("rglru", "rglru", "local_attn"), window=8, d_rnn=64,
+        activation="gelu",
+    ),
+    "xlstm": ModelConfig(
+        name="xlstm", family="ssm", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=0, vocab_size=128,
+        block_pattern=("mlstm", "mlstm", "mlstm", "slstm"), mlstm_chunk=8,
+    ),
+    "moe": ModelConfig(
+        name="moe", family="moe", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab_size=128, n_experts=4, top_k=2,
+        capacity_factor=2.0,
+    ),
+    "vlm": ModelConfig(
+        name="vlm", family="vlm", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, mrope_sections=(4, 2, 2),
+        frontend="embeddings",
+    ),
+    "musicgen": ModelConfig(
+        name="musicgen", family="audio", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=64, frontend="embeddings",
+        n_codebooks=4, activation="gelu", gated_ffn=False, norm="layernorm",
+    ),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CFGS))
+def test_forward_decode_parity(name):
+    cfg = CFGS[name]
+    T, B = 24, 2
+    # recurrent cells reassociate (associative scan / chunked vs sequential):
+    # bf16 noise compounds over T — allow 4% for those families
+    tol = 4e-2 if name in ("griffin", "xlstm") else 2e-2
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    if cfg.frontend == "tokens":
+        toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+        batch = {"tokens": toks}
+    else:
+        emb = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32) * 0.5
+        batch = {"embeddings": emb}
+    hidden, _ = forward(params, cfg, batch)
+    state = init_serve_state(cfg, B, T)
+    outs = []
+    for t in range(T):
+        b1 = (
+            {"tokens": toks[:, t : t + 1]}
+            if cfg.frontend == "tokens"
+            else {"embeddings": emb[:, t : t + 1]}
+        )
+        logits, state = decode_step(params, cfg, state, b1)
+        outs.append(logits)
+    un = _unembed_matrix(params, cfg)
+    if cfg.n_codebooks > 1:
+        ref = jnp.einsum(
+            "btd,cdv->btcv", hidden.astype(COMPUTE_DTYPE), un.astype(COMPUTE_DTYPE)
+        ).astype(jnp.float32)
+    else:
+        ref = (hidden.astype(COMPUTE_DTYPE) @ un.astype(COMPUTE_DTYPE)).astype(
+            jnp.float32
+        )
+    got = jnp.stack(outs, 1)
+    err = float(jnp.max(jnp.abs(ref - got)))
+    scale = float(jnp.max(jnp.abs(ref)) + 1e-9)
+    assert err / scale < tol, f"{name}: rel err {err/scale:.3e}"
+    assert int(state["pos"]) == T

@@ -1,0 +1,98 @@
+"""Property-based tests (hypothesis) for the system's submodular core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import facility_location as fl
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+def _random_sim(n, seed):
+    rng = np.random.RandomState(seed)
+    feats = rng.randn(n, 4).astype(np.float32)
+    d = np.sqrt(
+        np.maximum(
+            (feats**2).sum(1)[:, None]
+            + (feats**2).sum(1)[None, :]
+            - 2 * feats @ feats.T,
+            0,
+        )
+    )
+    return jnp.asarray(d.max() + 1e-6 - d)
+
+
+def _F(sim, subset):
+    mask = jnp.zeros((sim.shape[0],), bool)
+    for e in subset:
+        mask = mask.at[int(e)].set(True)
+    return float(fl.facility_location_value(sim, mask))
+
+
+@_settings
+@given(
+    n=st.integers(8, 24),
+    seed=st.integers(0, 100),
+    data=st.data(),
+)
+def test_submodularity_diminishing_returns(n, seed, data):
+    """F(S∪e) − F(S) ≥ F(T∪e) − F(T) for S ⊆ T, e ∉ T."""
+    sim = _random_sim(n, seed)
+    t_size = data.draw(st.integers(2, n - 2))
+    T = data.draw(
+        st.lists(st.integers(0, n - 1), min_size=t_size, max_size=t_size, unique=True)
+    )
+    s_size = data.draw(st.integers(1, len(T) - 1)) if len(T) > 1 else 1
+    S = T[:s_size]
+    e = data.draw(st.integers(0, n - 1).filter(lambda x: x not in T))
+    gain_S = _F(sim, S + [e]) - _F(sim, S)
+    gain_T = _F(sim, T + [e]) - _F(sim, T)
+    assert gain_S >= gain_T - 1e-3
+
+
+@_settings
+@given(n=st.integers(8, 24), seed=st.integers(0, 100), data=st.data())
+def test_monotonicity(n, seed, data):
+    """F(S ∪ e) ≥ F(S)."""
+    sim = _random_sim(n, seed)
+    size = data.draw(st.integers(1, n - 2))
+    S = data.draw(
+        st.lists(st.integers(0, n - 1), min_size=size, max_size=size, unique=True)
+    )
+    e = data.draw(st.integers(0, n - 1).filter(lambda x: x not in S))
+    assert _F(sim, S + [e]) >= _F(sim, S) - 1e-4
+
+
+@_settings
+@given(n=st.integers(6, 12), seed=st.integers(0, 50), r=st.integers(1, 3))
+def test_greedy_achieves_1_minus_1_over_e(n, seed, r):
+    """Nemhauser bound: F(greedy_r) ≥ (1 − 1/e)·F(OPT_r), OPT by brute force."""
+    import itertools
+
+    sim = _random_sim(n, seed)
+    res = fl.greedy_fl_matrix(sim, r)
+    f_greedy = _F(sim, list(np.asarray(res.indices)))
+    f_opt = max(_F(sim, list(c)) for c in itertools.combinations(range(n), r))
+    assert f_greedy >= (1 - 1 / np.e) * f_opt - 1e-3
+
+
+@_settings
+@given(n=st.integers(8, 40), seed=st.integers(0, 100), r=st.integers(1, 8))
+def test_weights_partition_the_pool(n, seed, r):
+    """γ is a partition histogram: Σγ = n, γ_j ≥ 0 (paper Alg. 1 line 8)."""
+    sim = _random_sim(n, seed)
+    res = fl.greedy_fl_matrix(sim, min(r, n))
+    w = np.asarray(res.weights)
+    assert w.sum() == float(n)
+    assert (w >= 0).all()
+
+
+@_settings
+@given(n=st.integers(8, 30), seed=st.integers(0, 100))
+def test_full_budget_zero_coverage(n, seed):
+    """Selecting everything drives L(S) to 0 (every point is its own medoid)."""
+    rng = np.random.RandomState(seed)
+    feats = jnp.asarray(rng.randn(n, 4).astype(np.float32))
+    res = fl.greedy_fl_features(feats, n)
+    assert float(res.coverage) <= 1e-3 * n

@@ -1,0 +1,65 @@
+"""Roofline machinery: collective census parser + term assembly."""
+import json
+import os
+
+import pytest
+
+from repro.launch.dryrun import collective_census, model_flops
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES
+
+
+def test_collective_census_parses_hlo_text():
+    hlo = """
+  %ag = bf16[16,4096,2048]{2,1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[256,1024]{1,0} all-reduce-start(%y), to_apply=%sum
+  %rs = f32[128]{0} reduce-scatter(%z), dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(%w), source_target_pairs=...
+  %a2a = s32[64]{0} all-to-all(%v), dimensions={0}
+  %not_a_collective = f32[10]{0} add(%a, %b)
+"""
+    c = collective_census(hlo)
+    assert c["all-gather"]["bytes"] == 16 * 4096 * 2048 * 2
+    assert c["all-reduce"]["bytes"] == 256 * 1024 * 4
+    assert c["reduce-scatter"]["bytes"] == 128 * 4
+    assert c["collective-permute"]["bytes"] == 64 * 2
+    assert c["all-to-all"]["bytes"] == 64 * 4
+    assert sum(v["count"] for v in c.values()) == 5
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("qwen3-1.7b")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    f_dec = model_flops(cfg, SHAPES["decode_32k"])
+    # train: 6·N·B·T;  decode: 2·N·B (one token per sequence)
+    assert f_train == pytest.approx(6 * cfg.param_count() * 256 * 4096, rel=1e-6)
+    assert f_dec == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("dbrx-132b")
+    f = model_flops(cfg, SHAPES["train_4k"])
+    assert f == pytest.approx(
+        6 * cfg.active_param_count() * 256 * 4096, rel=1e-6
+    )
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+    ),
+    reason="dry-run artifacts not present",
+)
+def test_roofline_analyze_artifacts():
+    from repro import roofline
+
+    cells = roofline.analyze_all(mesh="16x16")
+    if not cells:
+        pytest.skip("no artifacts yet")
+    for c in cells:
+        assert c.t_compute >= 0 and c.t_memory >= 0 and c.t_collective >= 0
+        assert c.dominant in ("compute", "memory", "collective")
+        assert 0 < c.useful_ratio
+        md = roofline.to_markdown(cells[:3])
+        assert "dominant" in md

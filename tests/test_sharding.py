@@ -1,0 +1,91 @@
+"""Sharding rules: every leaf of every arch gets a valid, divisible spec."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.configs.registry import ARCHS
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import init_params, init_serve_state
+
+    for multi in (False, True):
+        mesh = make_production_mesh(multi_pod=multi)
+        sizes = dict(mesh.shape)
+        for arch, cfg in ARCHS.items():
+            tree = jax.eval_shape(lambda c=cfg: init_params(
+                jax.random.PRNGKey(0), c))
+            specs = shd.param_specs(tree, mesh)
+            leaves = jax.tree.leaves(tree)
+            spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+            assert len(leaves) == len(spec_leaves)
+            n_sharded = 0
+            for leaf, spec in zip(leaves, spec_leaves):
+                for i, ax in enumerate(spec):
+                    if ax is None:
+                        continue
+                    group = ax if isinstance(ax, tuple) else (ax,)
+                    k = int(np.prod([sizes[g] for g in group]))
+                    assert leaf.shape[i] % k == 0, (arch, leaf.shape, spec)
+                    n_sharded += 1
+            # the bulk of parameters must actually be sharded
+            big = [
+                (l, s) for l, s in zip(leaves, spec_leaves)
+                if int(np.prod(l.shape)) > 1_000_000
+            ]
+            for l, s in big:
+                assert any(a is not None for a in s), (arch, l.shape, "replicated big leaf")
+        print("MESH_OK", multi)
+    print("SHARDING_OK")
+    """
+)
+
+
+def test_param_specs_all_archs_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env=env, capture_output=True, text=True, timeout=480,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDING_OK" in out.stdout
+
+
+def test_batch_specs_single_device():
+    """batch_specs degrade gracefully on a 1-device mesh (CPU tests)."""
+    import jax
+    from repro.distributed.sharding import batch_specs
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((8, 16), jax.numpy.int32),
+        "weights": jax.ShapeDtypeStruct((8,), jax.numpy.float32),
+    }
+    specs = batch_specs(mesh, batch)
+    assert set(specs) == {"tokens", "weights"}
+
+
+def test_serve_state_heuristics():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import serve_state_specs
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()  # sizes 1 → everything replicated but valid
+    state = {
+        "k": jax.ShapeDtypeStruct((128, 32768, 8, 128), jnp.bfloat16),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    sh = serve_state_specs(state, mesh, batch=128)
+    assert sh["k"].mesh == mesh

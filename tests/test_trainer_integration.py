@@ -1,0 +1,107 @@
+"""Trainer loop: CRAIG refresh schedule, preemption, restart equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.craig import CraigConfig
+from repro.data.synthetic import TokenStream
+from repro.models import ModelConfig, init_params
+from repro.optim import adamw, constant
+from repro.train import Trainer, TrainerConfig
+
+CFG = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=2, d_ff=64, vocab_size=128, logit_chunk=16,
+)
+
+
+def _trainer(tmp, seed=0, **kw):
+    ds = TokenStream(n_docs=48, seq_len=24, vocab_size=128, n_topics=6)
+    tcfg = TrainerConfig(
+        batch_size=8,
+        select_every_epochs=kw.pop("select_every_epochs", 2),
+        checkpoint_dir=str(tmp) if tmp else None,
+        checkpoint_every=kw.pop("checkpoint_every", 4),
+        craig=CraigConfig(fraction=0.5, per_class=False),
+        **kw,
+    )
+    return Trainer(
+        CFG, tcfg, ds, adamw(constant(2e-3)),
+        lambda: init_params(jax.random.PRNGKey(seed), CFG),
+    )
+
+
+def test_loss_decreases_with_craig(tmp_path):
+    t = _trainer(None)
+    log = t.run(14)
+    steps = [m["loss"] for m in log if m["event"] == "step"]
+    refreshes = [m for m in log if m["event"] == "craig_refresh"]
+    assert len(refreshes) >= 1
+    assert refreshes[0]["coreset_size"] == 24  # 50% of 48
+    assert np.mean(steps[-4:]) < np.mean(steps[:4])
+
+
+def test_preemption_saves_and_restart_resumes(tmp_path):
+    t1 = _trainer(tmp_path)
+    t1.run(6)
+    t1.request_preempt()
+    t1.run(1)  # triggers emergency save and stops
+    saved_step = t1.step
+
+    t2 = _trainer(tmp_path, seed=99)  # different init — must be overwritten
+    assert t2.restore_or_init()
+    assert t2.step == saved_step
+    # params identical to the preempted trainer's
+    for a, b in zip(jax.tree.leaves(t1.params), jax.tree.leaves(t2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    # the data stream continues exactly where it stopped
+    i1, _ = t1.sampler.next_batch()
+    i2, _ = t2.sampler.next_batch()
+    np.testing.assert_array_equal(i1, i2)
+
+
+def test_restart_training_continuation_matches(tmp_path):
+    """Uninterrupted run == run that checkpoints, dies, and restores."""
+    t_full = _trainer(tmp_path / "a", checkpoint_every=100)
+    log_full = t_full.run(10)
+
+    t_a = _trainer(tmp_path / "b", checkpoint_every=5)
+    t_a.run(5)
+    t_a.ckpt.wait()
+    t_b = _trainer(tmp_path / "b", seed=7)
+    assert t_b.restore_or_init()
+    log_b = t_b.run(5)
+
+    full_losses = [m["loss"] for m in log_full if m["event"] == "step"][5:]
+    resumed = [m["loss"] for m in log_b if m["event"] == "step"]
+    np.testing.assert_allclose(full_losses, resumed, rtol=2e-3, atol=2e-4)
+
+
+def test_straggler_watchdog_records():
+    t = _trainer(None, step_timeout_s=0.0)  # everything is a "straggler"
+    t.run(3)
+    assert len(t.straggler_events) == 3
+
+
+def test_no_craig_mode_plain_training():
+    t = _trainer(None, use_craig=False)
+    log = t.run(6)
+    assert not [m for m in log if m["event"] == "craig_refresh"]
+    assert t.sampler.active_size == 48
+
+
+def test_eval_harness_tracks_heldout_loss():
+    ds_train = TokenStream(n_docs=48, seq_len=24, vocab_size=128, n_topics=6)
+    ds_eval = TokenStream(n_docs=16, seq_len=24, vocab_size=128, n_topics=6,
+                          seed=99)
+    tcfg = TrainerConfig(batch_size=8, eval_every=4, eval_batches=2,
+                         select_every_epochs=0, use_craig=False)
+    t = Trainer(CFG, tcfg, ds_train, adamw(constant(2e-3)),
+                lambda: init_params(jax.random.PRNGKey(0), CFG),
+                eval_dataset=ds_eval)
+    log = t.run(9)
+    evals = [m for m in log if m["event"] == "eval"]
+    assert len(evals) == 2  # steps 4 and 8
+    assert all(np.isfinite(e["eval_loss"]) for e in evals)
+    # eval loss should improve as training progresses
+    assert evals[-1]["eval_loss"] <= evals[0]["eval_loss"] + 0.05
