@@ -1,8 +1,21 @@
 """Selection-cost scaling: exact matrix vs lazy vs stochastic vs matrix-free
-(§3.2's complexity ladder O(n·r) → O(n)), plus coverage-quality parity.
+vs sparse top-k (§3.2's complexity ladder O(n·r) → O(n) → O(n·k); engine
+guide in README §Engines, EXPERIMENTS.md §Selection), plus coverage-quality
+parity and a large-n sparse run that the dense engines cannot hold.
+
+Sections
+--------
+1. Ladder: every engine at moderate n, coverage ratio vs exact greedy.
+2. Parity: sparse-vs-exact selection overlap and gradient-estimate error
+   (γ-weighted proxy-feature sum vs the full-pool sum — the quantity the
+   paper's Eq. 8 bounds) as topk_k grows.
+3. Large-n: sparse engine at REPRO_BENCH_LARGE_N points (default 200_000) —
+   O(n·k) memory, no dense (n, n); dense engines are reported as skipped at
+   this scale (a fp32 (n, n) matrix would need n²·4 bytes ≈ 160 GB).
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -12,19 +25,22 @@ from benchmarks.common import emit
 from repro.core.craig import CraigConfig, CraigSelector
 
 
-def run() -> None:
-    rng = np.random.RandomState(0)
+def _select(engine: str, feats: np.ndarray, fraction: float, **kw):
+    sel = CraigSelector(
+        CraigConfig(fraction=fraction, engine=engine, per_class=False, **kw)
+    )
+    t0 = time.perf_counter()
+    cs = sel.select(feats)
+    jax.effects_barrier()
+    return cs, time.perf_counter() - t0
+
+
+def _ladder(rng: np.random.RandomState) -> None:
     for n in (512, 2048):
         feats = rng.randn(n, 32).astype(np.float32)
         base_cov = None
-        for engine in ("matrix", "lazy", "stochastic", "features"):
-            sel = CraigSelector(
-                CraigConfig(fraction=0.05, engine=engine, per_class=False)
-            )
-            t0 = time.perf_counter()
-            cs = sel.select(feats)
-            jax.effects_barrier()
-            dt = time.perf_counter() - t0
+        for engine in ("matrix", "lazy", "stochastic", "features", "sparse"):
+            cs, dt = _select(engine, feats, 0.05, topk_k=min(64, n))
             if engine == "matrix":
                 base_cov = cs.coverage
             emit(
@@ -32,6 +48,59 @@ def run() -> None:
                 dt * 1e6,
                 f"coverage_ratio={cs.coverage/max(base_cov,1e-9):.3f};r={cs.size}",
             )
+
+
+def _sparse_parity(rng: np.random.RandomState) -> None:
+    """Sparse-vs-exact: selection overlap + gradient-estimate error."""
+    n = 2048
+    centers = rng.randn(32, 32).astype(np.float32) * 4.0
+    feats = centers[rng.randint(0, 32, n)] + rng.randn(n, 32).astype(
+        np.float32
+    )
+    exact, _ = _select("matrix", feats, 0.05)
+    full_grad = feats.sum(axis=0)
+
+    def grad_err(cs) -> float:
+        est = (cs.weights[:, None] * feats[cs.indices]).sum(axis=0)
+        return float(
+            np.linalg.norm(est - full_grad) / max(np.linalg.norm(full_grad), 1e-9)
+        )
+
+    err_exact = grad_err(exact)
+    exact_set = set(exact.indices.tolist())
+    for k in (16, 64, 256):
+        cs, dt = _select("sparse", feats, 0.05, topk_k=k)
+        overlap = len(exact_set & set(cs.indices.tolist())) / len(exact_set)
+        emit(
+            f"sparse_parity_k{k}_n{n}",
+            dt * 1e6,
+            f"overlap={overlap:.3f};grad_err={grad_err(cs):.4f};"
+            f"grad_err_exact={err_exact:.4f};"
+            f"coverage_ratio={cs.coverage/max(exact.coverage,1e-9):.3f}",
+        )
+
+
+def _large_n(rng: np.random.RandomState) -> None:
+    n = int(os.environ.get("REPRO_BENCH_LARGE_N", "200000"))
+    k = int(os.environ.get("REPRO_BENCH_LARGE_K", "32"))
+    feats = rng.randn(n, 16).astype(np.float32)
+    # Dense/stochastic both materialize (n, n) sim; report why they're out.
+    dense_gb = n * n * 4 / 2**30
+    emit(f"selection_matrix_n{n}", float("nan"), f"skipped_dense_{dense_gb:.0f}GB")
+    emit(f"selection_stochastic_n{n}", float("nan"), f"skipped_dense_{dense_gb:.0f}GB")
+    cs, dt = _select("sparse", feats, 50 / n, topk_k=k)
+    emit(
+        f"selection_sparse_n{n}",
+        dt * 1e6,
+        f"r={cs.size};k={k};mem_nk_mb={n*k*8/2**20:.0f}",
+    )
+
+
+def run() -> None:
+    rng = np.random.RandomState(0)
+    _ladder(rng)
+    _sparse_parity(rng)
+    _large_n(rng)
 
 
 if __name__ == "__main__":

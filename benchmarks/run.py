@@ -1,7 +1,9 @@
 """Benchmark driver — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.  Roofline numbers come from
-``python -m repro.roofline`` over the dry-run artifacts (EXPERIMENTS.md).
+Prints ``name,us_per_call,derived`` CSV lines.  The module → paper
+figure/table mapping is documented in EXPERIMENTS.md §Benchmark-map;
+roofline numbers come from ``python -m repro.roofline`` over the dry-run
+artifacts (EXPERIMENTS.md §Roofline).
 """
 from __future__ import annotations
 
@@ -30,7 +32,7 @@ def main() -> None:
         bench_mlp,          # Fig 4
         bench_data_efficiency,  # Fig 5
         bench_greedy_order, # §3.2/Eq. 13 ordering property
-        bench_selection,    # §3.2 complexity ladder
+        bench_selection,    # §3.2 complexity ladder + sparse top-k engine
         bench_kernels,      # Pallas hot-spots
         bench_lm_pipeline,  # §3.4 non-convex pipeline
     ]

@@ -1,6 +1,10 @@
 """Regenerate EXPERIMENTS.md §Roofline tables from the artifact dirs.
 
-Run after a dry-run sweep:
+Rewrites everything between the ``<!-- ROOFLINE_TABLE -->`` markers in
+EXPERIMENTS.md from ``artifacts/dryrun`` (optimized) and
+``artifacts/dryrun_baseline`` (baseline).  Run after a dry-run sweep:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
     PYTHONPATH=src python scripts/finalize_experiments.py
 """
 from __future__ import annotations

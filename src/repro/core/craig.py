@@ -54,21 +54,30 @@ class CraigConfig:
       epsilon: target coverage for 'cover' mode (same units as d_ij).
       metric: dissimilarity in proxy space ('l2' per the paper; 'cosine').
       engine: 'matrix' (exact greedy, dense d matrix), 'lazy' (host lazy
-        greedy), 'stochastic' (paper's O(n) stochastic greedy), or
-        'features' (matrix-free blocked greedy; Pallas-accelerated on TPU).
+        greedy), 'stochastic' (paper's O(n) stochastic greedy), 'features'
+        (matrix-free blocked greedy; Pallas-accelerated on TPU), or 'sparse'
+        (top-k similarity graph + lazy greedy over CSR columns — O(n·k)
+        memory, the engine for pools past ~10⁵ points; README §Engines).
       per_class: stratified per-class selection (paper §5).
       stochastic_delta: δ for stochastic-greedy sample size (n/r)·ln(1/δ).
       gains_impl: 'jax' | 'pallas' — only for engine='features'.
+      topk_k: neighbors kept per point — only for engine='sparse'.  Larger k
+        → closer to exact greedy (k == n is exact); memory scales as n·k.
+      topk_impl: 'jax' | 'pallas' graph builder — only for engine='sparse'.
     """
 
     mode: Literal["budget", "cover"] = "budget"
     fraction: float = 0.1
     epsilon: float = 0.0
     metric: str = "l2"
-    engine: Literal["matrix", "lazy", "stochastic", "features"] = "matrix"
+    engine: Literal[
+        "matrix", "lazy", "stochastic", "features", "sparse"
+    ] = "matrix"
     per_class: bool = True
     stochastic_delta: float = 0.01
     gains_impl: str = "jax"
+    topk_k: int = 64
+    topk_impl: str = "jax"
     seed: int = 0
 
 
@@ -138,16 +147,22 @@ class CraigSelector:
     ) -> CoresetSelection:
         """Two-round pod-scale selection (core.distributed) with the same
         output contract as :meth:`select`.  ``feats`` is the global (n, d)
-        pool; budgets derive from ``config.fraction``."""
+        pool; budgets derive from ``config.fraction``.  With
+        ``engine='sparse'`` round 1 runs the top-k graph greedy on every
+        shard, so local pools never materialize dense (n_local, n_local)."""
         from repro.core.distributed import distributed_select
 
         n = feats.shape[0]
         n_shards = int(mesh.shape[axis_name])
         r_final = self._budget(n)
         r_local = max(1, min(n // n_shards, int(r_final * 2 / n_shards) + 1))
+        local_engine = "sparse" if self.config.engine == "sparse" else "matrix"
+        if local_engine == "sparse":
+            self._check_sparse_config()
         res = distributed_select(
             jnp.asarray(feats, jnp.float32), mesh,
             r_local=r_local, r_final=r_final, axis_name=axis_name,
+            local_engine=local_engine, topk_k=self.config.topk_k,
         )
         return CoresetSelection(
             indices=np.asarray(res.indices, np.int64),
@@ -162,6 +177,15 @@ class CraigSelector:
     def _budget(self, n: int) -> int:
         return max(1, int(round(self.config.fraction * n)))
 
+    def _check_sparse_config(self) -> None:
+        if self.config.metric != "l2":
+            raise ValueError("engine='sparse' supports metric='l2' only")
+        if self.config.mode == "cover":
+            raise ValueError(
+                "mode='cover' needs exact prefix coverages; use "
+                "engine='matrix' (the only engine implementing Eq. 12)"
+            )
+
     def _select_flat(self, feats: jax.Array, budget: int):
         cfg = self.config
         n = feats.shape[0]
@@ -169,6 +193,12 @@ class CraigSelector:
         if cfg.engine == "features":
             res = fl.greedy_fl_features(
                 feats, budget, gains_impl=cfg.gains_impl
+            )
+            return res.indices, res.weights, res.gains, res.coverage
+        if cfg.engine == "sparse":
+            self._check_sparse_config()
+            res = fl.sparse_greedy_fl_features(
+                feats, budget, k=cfg.topk_k, topk_impl=cfg.topk_impl
             )
             return res.indices, res.weights, res.gains, res.coverage
 

@@ -8,7 +8,11 @@ two rounds over the data-parallel mesh axis:
   Round 1 (local):  every data shard runs greedy facility location over its
       local partition of the pool, selecting ``r_local`` candidates with local
       γ weights.  (Per-class partitioning composes with this: the trainer
-      shards each class across hosts.)
+      shards each class across hosts.)  ``local_engine='sparse'`` swaps the
+      dense (n_local, n_local) greedy for the top-k graph greedy
+      (``facility_location.topk_graph`` + ``greedy_fl_topk``), dropping the
+      round-1 footprint to O(n_local·k) — the pod-scale path for shards past
+      ~10⁵ points (DESIGN.md §6).
 
   Round 2 (merge):  candidate features and γ weights are all-gathered
       (r_total = shards·r_local ≪ n), and a *weighted* greedy FL — each
@@ -34,7 +38,34 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import facility_location as fl
 
-__all__ = ["DistributedSelection", "distributed_select", "local_then_merge"]
+__all__ = [
+    "DistributedSelection",
+    "distributed_select",
+    "local_then_merge",
+    "compat_shard_map",
+]
+
+
+def compat_shard_map(body, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions, replication checks off (the mapped
+    bodies initialize scan carries from constants).  The entry point moved
+    (jax.experimental.shard_map → jax.shard_map) and the kwarg was renamed
+    (check_rep → check_vma) in separate releases, so each is probed
+    independently."""
+    import inspect
+
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    check_kw = (
+        "check_vma"
+        if "check_vma" in inspect.signature(sm).parameters
+        else "check_rep"
+    )
+    return sm(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{check_kw: False},
+    )
 
 
 class DistributedSelection(NamedTuple):
@@ -44,13 +75,30 @@ class DistributedSelection(NamedTuple):
 
 
 def _local_round(feats: jax.Array, r_local: int):
-    """Round 1 on one shard: greedy FL over local features."""
+    """Round 1 on one shard: dense greedy FL over local features."""
     sq = jnp.sum(feats * feats, axis=-1)
     d2 = sq[:, None] + sq[None, :] - 2.0 * feats @ feats.T
     dist = jnp.sqrt(jnp.maximum(d2, 0.0))
     d_max = jnp.max(dist) + 1e-6
     res = fl.greedy_fl_matrix(d_max - dist, r_local)
     return res.indices, res.weights
+
+
+def _local_round_sparse(feats: jax.Array, r_local: int, topk_k: int):
+    """Round 1 on one shard via the top-k graph — O(n_local·k) memory.
+
+    Selection runs on the sparsified objective; γ weights are then exact:
+    every local point is assigned to its nearest selected medoid from
+    features (an (n_local, r_local) distance block, never (n, n)).
+    """
+    vals, idx = fl.topk_graph(feats, topk_k, impl="jax")
+    res = fl.greedy_fl_topk(vals, idx, r_local)
+    sel = feats[res.indices]  # (r_local, d)
+    sq = jnp.sum(feats * feats, axis=-1)
+    sqs = jnp.sum(sel * sel, axis=-1)
+    d2 = sq[:, None] + sqs[None, :] - 2.0 * feats @ sel.T
+    _, weights = fl.assign_and_weights(jnp.maximum(d2, 0.0))
+    return res.indices, weights
 
 
 def _merge_round(
@@ -73,6 +121,8 @@ def local_then_merge(
     r_local: int,
     r_final: int,
     axis_name: str = "data",
+    local_engine: str = "matrix",
+    topk_k: int = 64,
 ):
     """shard_map body: runs on one shard with a mapped ``axis_name``.
 
@@ -80,14 +130,23 @@ def local_then_merge(
       feats_sharded: (n_local, d) this shard's proxy features (fp32).
       r_local: round-1 budget per shard.
       r_final: final global budget.
+      local_engine: 'matrix' (dense round-1) or 'sparse' (top-k graph
+        round-1, O(n_local·topk_k) memory).
+      topk_k: neighbors per point for local_engine='sparse'.
     Returns:
       (global_indices (r_final,), weights (r_final,), coverage ()).
     """
     n_local, _ = feats_sharded.shape
     shard_id = jax.lax.axis_index(axis_name)
-    n_shards = jax.lax.axis_size(axis_name)
 
-    local_idx, local_w = _local_round(feats_sharded, r_local)
+    if local_engine == "sparse":
+        local_idx, local_w = _local_round_sparse(
+            feats_sharded, r_local, topk_k
+        )
+    elif local_engine == "matrix":
+        local_idx, local_w = _local_round(feats_sharded, r_local)
+    else:
+        raise ValueError(f"unknown local_engine {local_engine!r}")
     local_global_idx = shard_id * n_local + local_idx
 
     # Gather candidate features / weights / global ids from all shards.
@@ -119,24 +178,22 @@ def distributed_select(
     r_local: int,
     r_final: int,
     axis_name: str = "data",
+    local_engine: str = "matrix",
+    topk_k: int = 64,
 ) -> DistributedSelection:
     """Run two-round distributed selection over ``mesh[axis_name]``.
 
     ``feats`` is (n, d) with n divisible by the axis size; it is sharded over
     the first dimension.  Output indices/weights are fully replicated.
+    ``local_engine='sparse'`` keeps round 1 at O(n_local·topk_k) memory.
     """
     body = partial(
-        local_then_merge, r_local=r_local, r_final=r_final, axis_name=axis_name
+        local_then_merge, r_local=r_local, r_final=r_final,
+        axis_name=axis_name, local_engine=local_engine, topk_k=topk_k,
     )
-    spec_in = P(axis_name, None)
-    fn = jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(spec_in,),
+    fn = compat_shard_map(
+        body, mesh=mesh, in_specs=(P(axis_name, None),),
         out_specs=(P(), P(), P()),
-        # The greedy scan's carry is initialized from constants inside the
-        # mapped body; skip the varying-manual-axes type check (JAX ≥0.7).
-        check_vma=False,
     )
     idx, w, cov = fn(feats.astype(jnp.float32))
     return DistributedSelection(idx, w, cov)

@@ -7,7 +7,11 @@ The pipeline composes three layers:
                      is a plain shuffled epoch iterator (γ=1); after a CRAIG
                      refresh it iterates the weighted coreset (paper Eq. 20:
                      every epoch visits each selected element once, with its
-                     per-element stepsize γ_j).
+                     per-element stepsize γ_j).  Refreshes install through
+                     ``set_coreset_from_selection`` — engine-agnostic, so the
+                     same path serves the dense engines and the O(n·k)
+                     ``engine='sparse'`` selector that large pools need
+                     (README §Engines).
   GlobalBatcher    — materializes {tokens, labels, weights} numpy batches
                      from an index-addressable dataset.
   Prefetcher       — background thread, depth-k queue (overlaps host data
@@ -58,6 +62,24 @@ class CoresetSampler:
             order = np.argsort(indices)
             self._indices = np.asarray(indices)[order]
             self._weights = np.asarray(weights, np.float32)[order]
+
+    def set_coreset_from_selection(
+        self,
+        selection,
+        pool_indices: np.ndarray | None = None,
+        keep_order: bool = False,
+    ) -> None:
+        """Install a ``CoresetSelection`` as the active coreset.
+
+        ``pool_indices`` maps selection positions back to corpus positions
+        when selection ran over a strided/sampled candidate pool (the
+        trainer's refresh path); None means the selection indexed the corpus
+        directly.
+        """
+        idx = np.asarray(selection.indices)
+        if pool_indices is not None:
+            idx = np.asarray(pool_indices)[idx]
+        self.set_coreset(idx, selection.weights, keep_order=keep_order)
 
     def clear_coreset(self) -> None:
         self._indices = self._weights = None

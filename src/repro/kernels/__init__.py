@@ -1,5 +1,5 @@
 """Pallas TPU kernels for CRAIG hot-spots (validated via interpret mode)."""
 from repro.kernels import ops, ref
-from repro.kernels.ops import ce_proxy, fl_gains, pairwise_l2
+from repro.kernels.ops import ce_proxy, fl_gains, pairwise_l2, topk_sim
 
-__all__ = ["ops", "ref", "ce_proxy", "fl_gains", "pairwise_l2"]
+__all__ = ["ops", "ref", "ce_proxy", "fl_gains", "pairwise_l2", "topk_sim"]

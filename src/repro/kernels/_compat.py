@@ -1,0 +1,27 @@
+"""Version shims for Pallas TPU APIs across jax releases.
+
+Kernel modules import ``pltpu`` and ``tpu_params`` from here so the
+CompilerParams (jax ≥ 0.6) vs TPUCompilerParams (0.4.x) spelling — and any
+future rename — is handled in exactly one place.
+"""
+from __future__ import annotations
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover - non-TPU builds
+    pltpu = None
+
+__all__ = ["pltpu", "tpu_params"]
+
+
+def tpu_params(*dimension_semantics: str):
+    """TPU compiler params for ``pl.pallas_call`` (None when unavailable;
+    the interpreter ignores them either way)."""
+    if pltpu is None:
+        return None
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:
+        return None
+    return cls(dimension_semantics=tuple(dimension_semantics))

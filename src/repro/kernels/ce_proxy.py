@@ -33,15 +33,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-try:
-    from jax.experimental.pallas import tpu as pltpu
+from repro.kernels._compat import pltpu, tpu_params
 
-    _TPU_PARAMS = pltpu.CompilerParams(
-        dimension_semantics=("parallel", "arbitrary")
-    )
-except Exception:  # pragma: no cover - non-TPU builds
-    pltpu = None
-    _TPU_PARAMS = None
+_TPU_PARAMS = tpu_params("parallel", "arbitrary")
 
 __all__ = ["ce_proxy_pallas"]
 

@@ -38,14 +38,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-try:  # TPU compiler params (ignored by the interpreter)
-    from jax.experimental.pallas import tpu as pltpu
+from repro.kernels._compat import tpu_params
 
-    _TPU_PARAMS = pltpu.CompilerParams(
-        dimension_semantics=("parallel", "arbitrary")
-    )
-except Exception:  # pragma: no cover - non-TPU builds
-    _TPU_PARAMS = None
+_TPU_PARAMS = tpu_params("parallel", "arbitrary")
 
 __all__ = ["fl_gains_pallas"]
 

@@ -14,8 +14,15 @@ import jax.numpy as jnp
 from repro.kernels import ce_proxy as _ce
 from repro.kernels import fl_gains as _fl
 from repro.kernels import pairwise_l2 as _pw
+from repro.kernels import topk_sim as _tk
 
-__all__ = ["fl_gains", "pairwise_l2", "ce_proxy", "interpret_default"]
+__all__ = [
+    "fl_gains",
+    "pairwise_l2",
+    "ce_proxy",
+    "topk_sim",
+    "interpret_default",
+]
 
 _LANE = 128
 
@@ -74,6 +81,58 @@ def fl_gains(
         xp, ep, madj, sqxp, sqep, block_n=bn, block_m=bm, interpret=interpret
     )
     return out[:m]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_n", "block_m", "interpret")
+)
+def topk_sim(
+    x: jax.Array,
+    k: int,
+    d_max: jax.Array | None = None,
+    *,
+    block_n: int = 256,
+    block_m: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k similarity graph rows of the pool against itself.
+
+    Returns (vals (n, k) fp32 descending, idx (n, k) int32) where
+    vals[i, t] = d_max − ‖x_i − x_{idx[i, t]}‖ over the k most similar
+    columns (self included: idx[i, 0] == i).  O(n·k) output memory; the
+    dense (n, n) similarity matrix is never materialized.
+
+    Padding: pool rows pad with zeros and are sliced off; column padding
+    carries sqy = +1e30 so padded similarities (≈ −1e15) never beat a real
+    candidate — sound because k ≤ n and real similarities are ≥ 0.
+
+    Args:
+      x: (n, d) features.
+      k: neighbors per row (static); clamped to n by the caller.
+      d_max: similarity offset (traced scalar).  Defaults to the
+        2·max‖x‖ + ε upper bound on the pairwise distance (triangle
+        inequality), the same convention as ``greedy_fl_features``.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n, d = x.shape
+    assert 1 <= k <= n, (k, n)
+    x = x.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    if d_max is None:
+        d_max = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
+    bn = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    bm = min(block_m, max(_LANE, 1 << (n - 1).bit_length()))
+    xp = _pad_dim(_pad_dim(x, 0, bn), 1, _LANE)
+    yp = _pad_dim(_pad_dim(x, 0, bm), 1, _LANE)
+    sqxp = _pad_dim(sq.reshape(n, 1), 0, bn)
+    sqyp = _pad_dim(sq.reshape(1, n), 1, bm, value=1e30)
+    dm = jnp.asarray(d_max, jnp.float32).reshape(1, 1)
+    vals, idx = _tk.topk_sim_pallas(
+        xp, yp, sqxp, sqyp, dm, k=k, block_n=bn, block_m=bm,
+        interpret=interpret,
+    )
+    return vals[:n], idx[:n]
 
 
 @functools.partial(

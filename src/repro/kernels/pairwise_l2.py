@@ -16,14 +16,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-try:
-    from jax.experimental.pallas import tpu as pltpu
+from repro.kernels._compat import tpu_params
 
-    _TPU_PARAMS = pltpu.CompilerParams(
-        dimension_semantics=("parallel", "parallel")
-    )
-except Exception:  # pragma: no cover - non-TPU builds
-    _TPU_PARAMS = None
+_TPU_PARAMS = tpu_params("parallel", "parallel")
 
 __all__ = ["pairwise_l2_pallas"]
 

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["fl_gains_ref", "pairwise_l2_ref", "ce_proxy_ref"]
+__all__ = ["fl_gains_ref", "pairwise_l2_ref", "ce_proxy_ref", "topk_sim_ref"]
 
 
 def pairwise_l2_ref(x: jax.Array, y: jax.Array) -> jax.Array:
@@ -26,6 +26,19 @@ def fl_gains_ref(
     return jnp.sum(
         jnp.maximum(sim - cur_max.astype(jnp.float32)[:, None], 0.0), axis=0
     )
+
+
+def topk_sim_ref(
+    x: jax.Array, k: int, d_max: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Dense top-k similarity rows: vals (n, k) desc, idx (n, k) int32.
+
+    sim[i, j] = d_max − ‖x_i − x_j‖; ties broken by ascending column index
+    (lax.top_k is stable), matching the blocked Pallas builder.
+    """
+    sim = d_max - pairwise_l2_ref(x, x)
+    vals, idx = jax.lax.top_k(sim, k)
+    return vals.astype(jnp.float32), idx.astype(jnp.int32)
 
 
 def ce_proxy_ref(

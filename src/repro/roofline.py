@@ -1,5 +1,10 @@
 """Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
 
+Workflow: ``python -m repro.launch.dryrun --all`` writes the artifacts,
+``python -m repro.roofline [--markdown|--compare]`` reports on them, and
+``scripts/finalize_experiments.py`` publishes the tables into
+EXPERIMENTS.md between its ROOFLINE_TABLE markers.
+
 Methodology
 -----------
 ``compiled.cost_analysis()`` counts ``lax.scan``/while bodies **once**

@@ -125,7 +125,7 @@ class Trainer:
             feats.append(np.asarray(f))
         feats = np.concatenate(feats)[: len(pool_idx)]
         sel = CraigSelector(self.tcfg.craig).select(feats)
-        self.sampler.set_coreset(pool_idx[sel.indices], sel.weights)
+        self.sampler.set_coreset_from_selection(sel, pool_indices=pool_idx)
         self.metrics_log.append(
             {
                 "event": "craig_refresh",

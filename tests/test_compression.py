@@ -80,14 +80,16 @@ def test_compressed_psum_multidevice_subprocess():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import compressed_psum
 
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.core.distributed import compat_shard_map
+        from repro.launch.mesh import compat_mesh
+
+        mesh = compat_mesh((4,), ("pod",))
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 1024))
 
-        f = jax.shard_map(
+        f = compat_shard_map(
             lambda v: compressed_psum(v[0], "pod")[None],
-            mesh=mesh, in_specs=(P("pod", None),), out_specs=P("pod", None),
-            check_vma=False)
+            mesh=mesh, in_specs=(P("pod", None),),
+            out_specs=P("pod", None))
         got = f(x)  # every shard returns the mean
         want = jnp.mean(x, axis=0)
         err = float(jnp.max(jnp.abs(got[0] - want)))

@@ -1,7 +1,8 @@
 """Two-round distributed CRAIG selection (8 simulated devices, subprocess).
 
 Run in a subprocess because the flag must be set before jax initializes and
-the main test process must keep seeing 1 device.
+the main test process must keep seeing 1 device.  Covers both round-1
+engines: dense ``matrix`` and the O(n_local·k) ``sparse`` top-k path.
 """
 import os
 import subprocess
@@ -16,8 +17,9 @@ SCRIPT = textwrap.dedent(
     from repro.core.distributed import distributed_select
     from repro.core.craig import CraigConfig, CraigSelector
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_mesh
+
+    mesh = compat_mesh((8,), ("data",))
     k = jax.random.PRNGKey(0)
     centers = jax.random.normal(k, (32, 16)) * 5
     assign = jax.random.randint(jax.random.PRNGKey(1), (1024,), 0, 32)
@@ -42,7 +44,26 @@ SCRIPT = textwrap.dedent(
     # determinism: same result twice
     res2 = distributed_select(feats, mesh, r_local=16, r_final=32)
     assert np.array_equal(np.asarray(res.indices), np.asarray(res2.indices))
-    print("DISTRIBUTED_OK", ratio)
+
+    # sparse round-1: same contract, O(n_local·k) memory, near-dense quality
+    sp = distributed_select(feats, mesh, r_local=16, r_final=32,
+                            local_engine="sparse", topk_k=32)
+    wsp = np.asarray(sp.weights)
+    assert wsp.sum() == 1024.0, wsp.sum()
+    sp_clusters = set(np.asarray(assign)[np.asarray(sp.indices)].tolist())
+    assert len(sp_clusters) >= 30, len(sp_clusters)
+    sp_ratio = float(sp.coverage) / max(cen.coverage, 1e-9)
+    assert sp_ratio < 1.5, sp_ratio
+    sp2 = distributed_select(feats, mesh, r_local=16, r_final=32,
+                             local_engine="sparse", topk_k=32)
+    assert np.array_equal(np.asarray(sp.indices), np.asarray(sp2.indices))
+
+    # selector-level wiring: engine='sparse' flips round 1 to the graph path
+    sel = CraigSelector(CraigConfig(fraction=32 / 1024, engine="sparse",
+                                    topk_k=32, per_class=False))
+    cs = sel.select_distributed(feats, mesh)
+    assert cs.weights.sum() == 1024.0, cs.weights.sum()
+    print("DISTRIBUTED_OK", ratio, sp_ratio)
     """
 )
 

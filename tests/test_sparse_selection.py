@@ -1,0 +1,206 @@
+"""Sparse top-k selection engine: builder correctness, greedy parity, γ sums.
+
+Covers the acceptance contract of the sparse engine (DESIGN.md §3.5):
+  * the blocked top-k builders (pure-jnp scan and Pallas kernel) reproduce a
+    dense argsort reference,
+  * sparse lazy greedy == pure-JAX top-k greedy == dense exact greedy when
+    the graph is complete (k == n), and matches exact selections on
+    clustered data for sufficiently large k,
+  * γ weights stay a partition of the pool (Σγ == n) at every layer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import facility_location as fl
+from repro.core.craig import CraigConfig, CraigSelector, pairwise_distances
+from repro.kernels import ops, ref
+
+
+def _feats(n=150, d=9, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+def _clustered(n=200, d=8, n_clusters=8, seed=1, spread=10.0, sigma=0.3):
+    kc, kn = jax.random.split(jax.random.PRNGKey(seed))
+    centers = jax.random.normal(kc, (n_clusters, d)) * spread
+    assign = jnp.arange(n) % n_clusters
+    feats = centers[assign] + sigma * jax.random.normal(kn, (n, d))
+    return feats, np.asarray(assign)
+
+
+# -- top-k builder correctness ------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 8, 4), (150, 9, 17), (300, 33, 64)])
+def test_topk_kernel_vs_dense_ref(n, d, k):
+    x = _feats(n, d, seed=n + k)
+    d_max = 2.0 * jnp.sqrt(jnp.max(jnp.sum(x * x, 1))) + 1e-6
+    gv, gi = ops.topk_sim(x, k, d_max)
+    wv, wi = ref.topk_sim_ref(x, k, d_max)
+    np.testing.assert_allclose(
+        np.asarray(gv), np.asarray(wv), rtol=2e-4, atol=2e-3
+    )
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    # every row's best neighbor is itself (self-similarity = d_max)
+    np.testing.assert_array_equal(np.asarray(gi)[:, 0], np.arange(n))
+
+
+@pytest.mark.parametrize("block_m", [37, 128, 1024])
+def test_topk_graph_jax_vs_dense_ref(block_m):
+    x = _feats(130, 12, seed=3)
+    d_max = 2.0 * jnp.sqrt(jnp.max(jnp.sum(x * x, 1))) + 1e-6
+    gv, gi = fl.topk_graph(x, 23, d_max=d_max, block_m=block_m, impl="jax")
+    wv, wi = ref.topk_sim_ref(x, 23, d_max)
+    np.testing.assert_allclose(
+        np.asarray(gv), np.asarray(wv), rtol=1e-5, atol=1e-4
+    )
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_topk_graph_pallas_impl_matches_jax_impl():
+    x = _feats(96, 16, seed=7)
+    d_max = jnp.float32(20.0)
+    jv, ji = fl.topk_graph(x, 12, d_max=d_max, impl="jax")
+    pv, pi = fl.topk_graph(x, 12, d_max=d_max, impl="pallas")
+    np.testing.assert_allclose(
+        np.asarray(jv), np.asarray(pv), rtol=2e-4, atol=2e-3
+    )
+    np.testing.assert_array_equal(np.asarray(ji), np.asarray(pi))
+
+
+# -- greedy parity ------------------------------------------------------------
+
+
+def test_full_k_sparse_equals_exact_greedy():
+    """With a complete graph (k == n) the sparse objective IS the dense one:
+    selections, gains, and coverage must match the matrix engine exactly."""
+    feats = _feats(120, 8)
+    dist = pairwise_distances(feats)
+    d_max = jnp.max(dist) + 1e-6
+    exact = fl.greedy_fl_matrix(d_max - dist, 15)
+
+    vals, idx = fl.topk_graph(feats, 120, d_max=d_max)
+    host = fl.sparse_greedy_fl(
+        np.asarray(vals), np.asarray(idx), 15, feats=np.asarray(feats)
+    )
+    jaxres = fl.greedy_fl_topk(vals, idx, 15)
+
+    np.testing.assert_array_equal(
+        np.asarray(exact.indices), np.asarray(host.indices)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(exact.indices), np.asarray(jaxres.indices)
+    )
+    np.testing.assert_allclose(
+        np.asarray(exact.gains), np.asarray(host.gains), rtol=1e-3
+    )
+    # host engine reports true L(S) (exact assignment from features)
+    cov = float(fl.coverage_l(dist, exact.indices))
+    assert float(host.coverage) == pytest.approx(cov, rel=1e-3)
+
+
+def test_clustered_parity_large_k():
+    """Clustered pools: k = 128 ≥ inter-cluster reach → identical selections;
+    k = 64 still covers exactly the same clusters (one medoid each)."""
+    feats, assign = _clustered()
+    dist = pairwise_distances(feats)
+    d_max = jnp.max(dist) + 1e-6
+    exact = fl.greedy_fl_matrix(d_max - dist, 8)
+
+    same = fl.sparse_greedy_fl_features(feats, 8, k=128, d_max=d_max)
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(exact.indices)), np.sort(np.asarray(same.indices))
+    )
+
+    approx = fl.sparse_greedy_fl_features(feats, 8, k=64, d_max=d_max)
+    assert sorted(assign[np.asarray(exact.indices)].tolist()) == sorted(
+        assign[np.asarray(approx.indices)].tolist()
+    )
+    cov_ratio = float(approx.coverage) / float(
+        fl.coverage_l(dist, exact.indices)
+    )
+    assert cov_ratio < 1.1
+
+
+def test_host_and_jax_sparse_agree_on_sparse_graph():
+    """Both engines maximize the same sparsified objective — identical
+    selections even when the graph is far from complete."""
+    feats = _feats(180, 10, seed=11)
+    vals, idx = fl.topk_graph(feats, 24)
+    host = fl.sparse_greedy_fl(np.asarray(vals), np.asarray(idx), 20)
+    jaxres = fl.greedy_fl_topk(vals, idx, 20)
+    np.testing.assert_array_equal(
+        np.asarray(host.indices), np.asarray(jaxres.indices)
+    )
+    np.testing.assert_allclose(
+        np.asarray(host.gains), np.asarray(jaxres.gains), rtol=1e-3, atol=1e-3
+    )
+
+
+# -- γ-weight invariants and selector wiring ---------------------------------
+
+
+@pytest.mark.parametrize("k", [8, 32, 150])
+def test_gamma_partition_invariant(k):
+    """Σγ == n at every k, both with and without features for assignment."""
+    feats = _feats(150, 8, seed=k)
+    vals, idx = fl.topk_graph(feats, k)
+    with_feats = fl.sparse_greedy_fl(
+        np.asarray(vals), np.asarray(idx), 12, feats=np.asarray(feats)
+    )
+    graph_only = fl.sparse_greedy_fl(np.asarray(vals), np.asarray(idx), 12)
+    jaxres = fl.greedy_fl_topk(vals, idx, 12)
+    for res in (with_feats, graph_only, jaxres):
+        w = np.asarray(res.weights)
+        assert w.sum() == pytest.approx(150.0)
+        assert (w >= 0).all()
+
+
+@pytest.mark.parametrize("per_class", [False, True])
+def test_selector_sparse_engine(per_class):
+    feats, assign = _clustered(n=240, n_clusters=4)
+    sel = CraigSelector(
+        CraigConfig(
+            fraction=0.1, engine="sparse", topk_k=48, per_class=per_class
+        )
+    )
+    cs = sel.select(np.asarray(feats), labels=assign if per_class else None)
+    assert cs.weights.sum() == pytest.approx(240.0)
+    assert cs.size == 24
+    assert len(set(cs.indices.tolist())) == cs.size
+    if per_class:
+        assert set(cs.per_class_sizes) == set(range(4))
+
+
+def test_selector_sparse_matches_matrix_engine_with_full_k():
+    feats = _feats(100, 6, seed=21)
+    # identical d_max convention: topk_k == n makes the graph complete and
+    # step-1 gains are offset-invariant, so selections coincide
+    m = CraigSelector(
+        CraigConfig(fraction=0.1, engine="matrix", per_class=False)
+    ).select(np.asarray(feats))
+    s = CraigSelector(
+        CraigConfig(fraction=0.1, engine="sparse", topk_k=100, per_class=False)
+    ).select(np.asarray(feats))
+    np.testing.assert_array_equal(np.sort(m.indices), np.sort(s.indices))
+    np.testing.assert_allclose(m.coverage, s.coverage, rtol=0.05)
+
+
+def test_sparse_engine_rejects_cosine():
+    with pytest.raises(ValueError):
+        CraigSelector(
+            CraigConfig(engine="sparse", metric="cosine", per_class=False)
+        ).select(np.asarray(_feats(40, 4)))
+
+
+def test_midsize_pool_no_dense_smoke():
+    """5k-point pool runs the sparse engine comfortably (O(n·k) memory);
+    a quick functional stand-in for the 200k bench run (EXPERIMENTS.md)."""
+    feats = np.asarray(_feats(5000, 8, seed=5))
+    cs = CraigSelector(
+        CraigConfig(fraction=0.004, engine="sparse", topk_k=16, per_class=False)
+    ).select(feats)
+    assert cs.size == 20
+    assert cs.weights.sum() == pytest.approx(5000.0)
