@@ -1,0 +1,160 @@
+"""Refresh-off-critical-path benchmark (DESIGN.md §4 lifecycle).
+
+Sections
+--------
+1. Steps/s with CRAIG refresh disabled / sync (selection blocks the step
+   loop) / async (selection overlapped with training, installed at the next
+   epoch boundary).  The derived column reports the share of selection
+   wall-clock removed from the critical path — the async run should keep
+   ≥80% of it off the loop and land within ~10% of the refresh-disabled
+   steps/s.
+2. Warm vs cold greedy selection wall-clock on fixed features, with the
+   exact-parity check (warm-started indices == cold indices — prefix
+   consistency of exact greedy).
+
+``--smoke`` shrinks everything to CI-on-CPU scale (seconds); the GitHub
+Actions workflow runs it on every PR so the overlap path stays exercised.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import facility_location as fl
+from repro.core.craig import CraigConfig, CraigSelector, pairwise_distances
+from repro.data.synthetic import TokenStream
+from repro.models import ModelConfig, init_params
+from repro.optim import adamw, constant
+from repro.train import Trainer, TrainerConfig
+
+_CFG = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=2, d_ff=64, vocab_size=128, logit_chunk=16,
+)
+
+
+def _trainer(mode: str, use_craig: bool, n_docs: int, pool_batches: int):
+    ds = TokenStream(n_docs=n_docs, seq_len=24, vocab_size=128, n_topics=8)
+    tcfg = TrainerConfig(
+        batch_size=8,
+        select_every_epochs=1,
+        use_craig=use_craig,
+        refresh_mode=mode,  # ignored when use_craig=False
+        # fraction 0.5 keeps coreset epochs longer than one selection pass,
+        # so the async window fully hides extraction + greedy
+        craig=CraigConfig(fraction=0.5, per_class=False, engine="lazy"),
+        proxy_pool_batches=pool_batches,
+    )
+    return Trainer(
+        _CFG, tcfg, ds, adamw(constant(2e-3)),
+        lambda: init_params(jax.random.PRNGKey(0), _CFG),
+    )
+
+
+def _critical_path_s(log: list[dict], mode: str, min_version: int) -> float:
+    """Selection seconds the step loop actually waited on inside the timed
+    window.
+
+    sync: the whole selection runs inline at the trigger boundary — count
+    only versions submitted inside the window (``> min_version``; the
+    warmup-era selection's work predates the timer even though its install
+    event lands inside it).  The window's last submitted selection installs
+    after the window and goes uncounted, which *under*states the sync
+    critical path — the removal metric is conservative.  async: only the
+    residual wait at each install boundary blocks.
+    """
+    refreshes = [m for m in log if m["event"] == "craig_refresh"]
+    if mode == "sync":
+        return float(
+            sum(
+                m["select_time_s"]
+                for m in refreshes
+                if m["version"] > min_version
+            )
+        )
+    return float(sum(m["install_stall_s"] for m in refreshes))
+
+
+def _steps_per_s(n_docs: int, pool_batches: int, n_steps: int) -> None:
+    runs: dict[str, tuple[float, float]] = {}
+    for name, mode, use_craig in (
+        ("disabled", "sync", False),
+        ("sync", "sync", True),
+        ("async", "async", True),
+    ):
+        t = _trainer(mode, use_craig, n_docs, pool_batches)
+        t.run(2)  # compile train_step (+ select_step on the refresh paths)
+        t.refresher.wait()
+        base = len(t.metrics_log)  # run() logs cumulatively — slice to the
+        v0 = t.refresher.version   # events/versions of the timed window only
+        t0 = time.perf_counter()
+        log = t.run(n_steps)[base:]
+        wall = time.perf_counter() - t0
+        t.refresher.wait()  # drain so the worker can't bleed into later runs
+        runs[name] = (n_steps / wall, _critical_path_s(log, mode, v0))
+        n_refresh = len(
+            [m for m in log if m["event"] == "craig_refresh"]
+        )
+        emit(
+            f"refresh/steps_per_s/{name}/n{n_docs}",
+            wall / n_steps * 1e6,
+            f"steps_per_s={n_steps / wall:.2f} refreshes={n_refresh} "
+            f"critical_path_select_s={runs[name][1]:.3f}",
+        )
+    sync_crit, async_crit = runs["sync"][1], runs["async"][1]
+    removed = 1.0 - async_crit / sync_crit if sync_crit > 0 else float("nan")
+    ratio = runs["async"][0] / runs["disabled"][0]
+    emit(
+        f"refresh/overlap/n{n_docs}",
+        0.0,
+        f"selection_removed_from_critical_path={removed:.1%} "
+        f"async_vs_disabled_steps_per_s={ratio:.2f}",
+    )
+
+
+def _warm_vs_cold(n: int, r: int, engine: str = "lazy") -> None:
+    feats = np.random.RandomState(0).randn(n, 32).astype(np.float32)
+    dist = np.asarray(pairwise_distances(feats))
+    sim = float(dist.max()) + 1e-6 - dist
+
+    def run_lazy(init=None):
+        t0 = time.perf_counter()
+        res = fl.lazy_greedy_fl(sim, r, init_selected=init)
+        return res, time.perf_counter() - t0
+
+    cold, t_cold = run_lazy()
+    warm, t_warm = run_lazy(np.asarray(cold.indices)[: r // 2])
+    parity = bool(
+        np.array_equal(np.asarray(cold.indices), np.asarray(warm.indices))
+    )
+    emit(
+        f"refresh/warm_vs_cold/{engine}/n{n}_r{r}",
+        t_warm * 1e6,
+        f"cold_us={t_cold * 1e6:.0f} speedup={t_cold / max(t_warm, 1e-9):.2f}x "
+        f"parity={'ok' if parity else 'FAIL'}",
+    )
+    if not parity:
+        raise AssertionError("warm-started selection diverged from cold")
+
+
+def run(smoke: bool = False) -> None:
+    if smoke:
+        _steps_per_s(n_docs=96, pool_batches=12, n_steps=48)
+        _warm_vs_cold(n=300, r=30)
+    else:
+        _steps_per_s(n_docs=512, pool_batches=64, n_steps=128)
+        _warm_vs_cold(n=2000, r=200)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized run (CPU, seconds)",
+    )
+    print("name,us_per_call,derived")
+    run(smoke=ap.parse_args().smoke)

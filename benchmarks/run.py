@@ -20,6 +20,7 @@ def main() -> None:
         bench_kernels,
         bench_lm_pipeline,
         bench_mlp,
+        bench_refresh,
         bench_selection,
         bench_subset_size,
     )
@@ -35,6 +36,7 @@ def main() -> None:
         bench_selection,    # §3.2 complexity ladder + sparse top-k engine
         bench_kernels,      # Pallas hot-spots
         bench_lm_pipeline,  # §3.4 non-convex pipeline
+        bench_refresh,      # §3.4 refresh cadence off the critical path
     ]
     failed = 0
     for mod in modules:

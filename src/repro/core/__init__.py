@@ -14,6 +14,7 @@ from repro.core.proxy import (
     exact_per_example_grads,
     lm_unembed_input_proxy,
 )
+from repro.core.refresh import AsyncRefresher, RefreshResult
 
 __all__ = [
     "CoresetSelection",
@@ -29,4 +30,6 @@ __all__ = [
     "convex_feature_proxy",
     "exact_per_example_grads",
     "lm_unembed_input_proxy",
+    "AsyncRefresher",
+    "RefreshResult",
 ]

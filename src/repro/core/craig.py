@@ -19,6 +19,7 @@ deep nets.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Literal
 
 import jax
@@ -41,6 +42,47 @@ def pairwise_distances(feats: jax.Array, metric: str = "l2") -> jax.Array:
         nf = feats / (jnp.linalg.norm(feats, axis=-1, keepdims=True) + 1e-12)
         return 1.0 - nf @ nf.T
     raise ValueError(f"unknown metric {metric!r}")
+
+
+def _apportion_budgets(counts: np.ndarray, total_budget: int) -> np.ndarray:
+    """Largest-remainder apportionment of ``total_budget`` across classes.
+
+    Invariants (paper §5 stratification without overshoot):
+      * Σ budgets == min(total_budget, Σ counts) — the union of per-class
+        selections has exactly the requested size;
+      * budgets ≤ counts — no class is asked for more elements than it has;
+      * every class gets ≥ 1 while feasible (total ≥ n_classes); when not,
+        the most frequent classes get the singletons.
+
+    Overshoot from the ≥1 floor is reclaimed from the largest multi-element
+    allocations (never dropping a class below 1).
+    """
+    counts = np.asarray(counts, np.int64)
+    k = len(counts)
+    total = int(min(int(total_budget), int(counts.sum())))
+    budgets = np.zeros(k, np.int64)
+    if total <= 0:
+        return budgets
+    if total < k:
+        # can't give every class one element: most-frequent classes win
+        # (ties → lower class index, deterministic)
+        order = np.lexsort((np.arange(k), -counts))
+        budgets[order[:total]] = 1
+        return budgets
+    raw = counts / counts.sum() * total
+    budgets = np.minimum(np.maximum(np.floor(raw).astype(np.int64), 1), counts)
+    # distribute any shortfall by largest fractional remainder, respecting
+    # class sizes
+    while budgets.sum() < total:
+        room = budgets < counts
+        frac = np.where(room, raw - budgets, -np.inf)
+        budgets[int(np.argmax(frac))] += 1
+    # reclaim overshoot (the ≥1 floor can push past the budget) from the
+    # largest multi-element classes; terminates because total ≥ k
+    while budgets.sum() > total:
+        cand = np.where(budgets > 1, budgets, -1)
+        budgets[int(np.argmax(cand))] -= 1
+    return budgets
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,15 +166,40 @@ class CraigSelector:
     # -- public API ---------------------------------------------------------
 
     def select(
-        self, feats: jax.Array | np.ndarray, labels: np.ndarray | None = None
+        self,
+        feats: jax.Array | np.ndarray,
+        labels: np.ndarray | None = None,
+        init_selected: np.ndarray | None = None,
     ) -> CoresetSelection:
+        """Select a weighted coreset from (n, d) proxy features.
+
+        Args:
+          labels: optional (n,) integer class labels; required for
+            ``per_class=True`` to actually stratify (paper §5) — without
+            them selection falls back to flat mode with a warning.
+          init_selected: optional warm-start medoids (indices into
+            ``feats``, greedy order) from a previous refresh.  The prefix's
+            cover state is replayed instead of recomputed; on unchanged
+            features the warm result equals the cold one (prefix
+            consistency), on drifted features it amortizes re-selection
+            (DESIGN.md §4).
+        """
         cfg = self.config
         feats = jnp.asarray(feats)
         n = feats.shape[0]
-        if cfg.per_class and labels is not None:
-            return self._select_per_class(feats, np.asarray(labels))
+        init = self._clean_init(init_selected, n)
+        if cfg.per_class:
+            if labels is not None:
+                return self._select_per_class(feats, np.asarray(labels), init)
+            warnings.warn(
+                "per_class=True but no labels were provided; falling back "
+                "to flat (unstratified) selection — pass labels to "
+                "CraigSelector.select for the paper-§5 per-class mode",
+                UserWarning,
+                stacklevel=2,
+            )
         budget = self._budget(n)
-        idx, w, gains, coverage = self._select_flat(feats, budget)
+        idx, w, gains, coverage = self._select_flat(feats, budget, init)
         eps_hat = float(coverage)
         return CoresetSelection(
             indices=np.asarray(idx, np.int64),
@@ -177,6 +244,23 @@ class CraigSelector:
     def _budget(self, n: int) -> int:
         return max(1, int(round(self.config.fraction * n)))
 
+    @staticmethod
+    def _clean_init(init_selected, n: int) -> np.ndarray | None:
+        """Normalize a warm-start prefix: int64, unique (order-preserving),
+        bounds-checked.  Returns None when empty."""
+        if init_selected is None:
+            return None
+        init = np.asarray(init_selected, np.int64).ravel()
+        if init.size == 0:
+            return None
+        if init.min() < 0 or init.max() >= n:
+            raise ValueError(
+                f"init_selected out of range [0, {n}): "
+                f"[{init.min()}, {init.max()}]"
+            )
+        _, first = np.unique(init, return_index=True)
+        return init[np.sort(first)]
+
     def _check_sparse_config(self) -> None:
         if self.config.metric != "l2":
             raise ValueError("engine='sparse' supports metric='l2' only")
@@ -186,41 +270,61 @@ class CraigSelector:
                 "engine='matrix' (the only engine implementing Eq. 12)"
             )
 
-    def _select_flat(self, feats: jax.Array, budget: int):
+    def _select_flat(
+        self, feats: jax.Array, budget: int, init: np.ndarray | None = None
+    ):
         cfg = self.config
         n = feats.shape[0]
         budget = min(budget, n)
+        if init is not None:
+            init = init[:budget]
         if cfg.engine == "features":
             res = fl.greedy_fl_features(
-                feats, budget, gains_impl=cfg.gains_impl
+                feats, budget, gains_impl=cfg.gains_impl, init_selected=init
             )
-            return res.indices, res.weights, res.gains, res.coverage
+            return self._checked(res.indices, res.weights, res.gains, res.coverage)
         if cfg.engine == "sparse":
             self._check_sparse_config()
             res = fl.sparse_greedy_fl_features(
-                feats, budget, k=cfg.topk_k, topk_impl=cfg.topk_impl
+                feats,
+                budget,
+                k=cfg.topk_k,
+                topk_impl=cfg.topk_impl,
+                init_selected=init,
             )
-            return res.indices, res.weights, res.gains, res.coverage
+            return self._checked(res.indices, res.weights, res.gains, res.coverage)
 
         dist = pairwise_distances(feats, cfg.metric)
         d_max = jnp.max(dist) + 1e-6
         sim = d_max - dist  # auxiliary element at distance d_max
         if cfg.engine == "matrix":
             if cfg.mode == "cover":
-                return self._cover_from_matrix(dist, sim)
-            res = fl.greedy_fl_matrix(sim, budget)
+                # Cover mode grows a full-budget greedy and cuts the prefix
+                # meeting ε; a warm prefix would skew that cut — ignore init.
+                return self._checked(*self._cover_from_matrix(dist, sim))
+            res = fl.greedy_fl_matrix(sim, budget, init_selected=init)
         elif cfg.engine == "lazy":
-            res = fl.lazy_greedy_fl(np.asarray(sim), budget)
+            res = fl.lazy_greedy_fl(np.asarray(sim), budget, init_selected=init)
         elif cfg.engine == "stochastic":
             m = max(1, int(np.ceil(n / budget * np.log(1.0 / cfg.stochastic_delta))))
             m = min(m, n)
             res = fl.stochastic_greedy_fl(
-                sim, budget, jax.random.PRNGKey(cfg.seed), m
+                sim, budget, jax.random.PRNGKey(cfg.seed), m, init_selected=init
             )
         else:
             raise ValueError(f"unknown engine {cfg.engine!r}")
         coverage = fl.coverage_l(dist, res.indices)
-        return res.indices, res.weights, res.gains, coverage
+        return self._checked(res.indices, res.weights, res.gains, coverage)
+
+    def _checked(self, idx, w, gains, coverage):
+        """Invariant gate on every engine's output: unique indices."""
+        idx_np = np.asarray(idx)
+        if len(np.unique(idx_np)) != len(idx_np):
+            raise AssertionError(
+                f"engine {self.config.engine!r} selected duplicate indices "
+                f"({len(idx_np) - len(np.unique(idx_np))} repeats)"
+            )
+        return idx, w, gains, coverage
 
     def _cover_from_matrix(self, dist: jax.Array, sim: jax.Array):
         """Submodular cover (paper Eq. 12): grow until L(S) ≤ ε target."""
@@ -240,36 +344,54 @@ class CraigSelector:
         return idx, w, res.gains[:k], cov_prefix[k - 1]
 
     def _select_per_class(
-        self, feats: jax.Array, labels: np.ndarray
+        self,
+        feats: jax.Array,
+        labels: np.ndarray,
+        init: np.ndarray | None = None,
     ) -> CoresetSelection:
         """Paper §5: select within each class, budgets ∝ class frequency."""
         n = feats.shape[0]
         classes = np.unique(labels)
-        total_budget = self._budget(n)
+        total_budget = min(self._budget(n), n)
         all_idx: list[np.ndarray] = []
         all_w: list[np.ndarray] = []
         coverage = 0.0
         sizes: dict[int, int] = {}
-        # Largest-remainder apportionment of the budget across classes.
         counts = np.array([(labels == c).sum() for c in classes], np.int64)
-        raw = counts / counts.sum() * total_budget
-        budgets = np.floor(raw).astype(np.int64)
-        budgets = np.maximum(budgets, 1)
-        short = total_budget - budgets.sum()
-        if short > 0:
-            order = np.argsort(-(raw - np.floor(raw)))
-            budgets[order[: int(short)]] += 1
+        if self.config.mode == "cover":
+            # cover mode grows each class until L(S_c) ≤ ε — sizes are
+            # ε-driven, not apportioned; no class is ever skipped
+            budgets = counts
+        else:
+            budgets = _apportion_budgets(counts, total_budget)
         for c, b in zip(classes, budgets):
+            sizes[int(c)] = 0
+            if b == 0:  # infeasible to cover every class within the budget
+                continue
             mask = labels == c
             pool = np.nonzero(mask)[0]
             sub_feats = feats[pool]
-            idx, w, _, cov = self._select_flat(sub_feats, int(b))
+            init_c = None
+            if init is not None:
+                # map the global warm prefix to within-class positions
+                # (pool is sorted, so searchsorted inverts the gather)
+                own = init[np.isin(init, pool)]
+                if own.size:
+                    init_c = np.searchsorted(pool, own)
+            idx, w, _, cov = self._select_flat(sub_feats, int(b), init_c)
             all_idx.append(pool[np.asarray(idx, np.int64)])
             all_w.append(np.asarray(w, np.float32))
             coverage += float(cov)
             sizes[int(c)] = int(np.asarray(idx).shape[0])
         indices = np.concatenate(all_idx)
         weights = np.concatenate(all_w)
+        if self.config.mode == "budget":
+            assert len(indices) == total_budget, (len(indices), total_budget)
+        # Per-class γ sum to the class count; when the budget is too small
+        # to cover every class, rescale so Σγ == n still holds (the γ-sum
+        # invariant every consumer of a CoresetSelection relies on).
+        if weights.sum() < n:
+            weights = weights * (n / weights.sum())
         return CoresetSelection(
             indices=indices,
             weights=weights,

@@ -37,6 +37,16 @@ or the Pallas ``topk_sim`` kernel — without materializing (n, n).
 
 All JAX engines are jit-compatible and differentiable-free (selection is a
 discrete pre-processing step, per the paper).
+
+Warm starts: every engine accepts ``init_selected`` — a prefix of medoids to
+install before greedy resumes.  The prefix's ``cur_max`` cover state is
+replayed (O(r₀·n) instead of the O(r₀·n²) a cold run spends re-deriving it),
+then the remaining ``budget − r₀`` elements are selected normally.  Because
+exact greedy is nested (prefix-consistent, see
+tests/test_craig.py::test_greedy_order_prefix_quality), warm-starting from a
+prefix of the cold selection reproduces the cold selection exactly; the
+refresh path exploits this by seeding each re-selection with the previous
+refresh's high-gain prefix (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -107,9 +117,54 @@ def coverage_l(dist: jax.Array, indices: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def _as_init_idx(init_selected, budget: int) -> jnp.ndarray:
+    """Validate/normalize a warm-start prefix for the JAX engines.
+
+    Returns a (r₀,) int32 array with r₀ ≤ budget; the length is static (it
+    comes from the array shape), so ``budget − r₀`` remains a Python int
+    under jit.
+    """
+    idx = jnp.asarray(init_selected, jnp.int32)
+    if idx.ndim != 1:
+        raise ValueError("init_selected must be 1-D")
+    if idx.shape[0] > budget:
+        raise ValueError(
+            f"init_selected has {idx.shape[0]} elements > budget {budget}"
+        )
+    return idx
+
+
+def _replay_prefix(init_selected, budget: int, n: int, col_fn, pw=None):
+    """Replay a warm-start prefix's cover state (shared by the JAX engines).
+
+    ``col_fn(e)`` returns the (n,) similarity column of element e; marginal
+    gains are recorded in prefix order (optionally ``pw``-weighted), exactly
+    as a cold greedy run would have produced them.
+
+    Returns (init_idx (r₀,), init_gains (r₀,), cur_max (n,), chosen (n,)).
+    """
+    cur_max = jnp.zeros((n,), jnp.float32)
+    chosen = jnp.zeros((n,), bool)
+    if init_selected is None:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32), cur_max, chosen
+    init_idx = _as_init_idx(init_selected, budget)
+
+    def warm(cur, e):
+        col = col_fn(e)
+        gap = jnp.maximum(col - cur, 0.0)
+        g = jnp.sum(gap) if pw is None else jnp.dot(pw, gap)
+        return jnp.maximum(cur, col), g
+
+    cur_max, init_gains = jax.lax.scan(warm, cur_max, init_idx)
+    return init_idx, init_gains, cur_max, chosen.at[init_idx].set(True)
+
+
 @partial(jax.jit, static_argnames=("budget",))
 def greedy_fl_matrix(
-    sim: jax.Array, budget: int, point_weights: jax.Array | None = None
+    sim: jax.Array,
+    budget: int,
+    point_weights: jax.Array | None = None,
+    init_selected: jax.Array | None = None,
 ) -> FLResult:
     """Exact greedy maximization of F over a dense (n, n) similarity matrix.
 
@@ -124,6 +179,9 @@ def greedy_fl_matrix(
       point_weights: optional (n,) per-point multiplicities (weighted FL, used
         by the distributed two-round merge where each candidate represents a
         cluster of γ points).  Defaults to 1.
+      init_selected: optional (r₀ ≤ r,) warm-start prefix.  Its elements are
+        installed first (marginal gains replayed in order, O(r₀·n)), then
+        greedy selects the remaining r − r₀.
     """
     n = sim.shape[0]
     sim = sim.astype(jnp.float32)
@@ -131,6 +189,10 @@ def greedy_fl_matrix(
         jnp.ones((n,), jnp.float32)
         if point_weights is None
         else point_weights.astype(jnp.float32)
+    )
+
+    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
+        init_selected, budget, n, lambda e: sim[:, e], pw=pw
     )
 
     def step(state, _):
@@ -142,8 +204,11 @@ def greedy_fl_matrix(
         new_max = jnp.maximum(cur_max, sim[:, e])
         return (new_max, chosen_mask.at[e].set(True)), (e.astype(jnp.int32), gains[e])
 
-    init = (jnp.zeros((n,), jnp.float32), jnp.zeros((n,), bool))
-    (cur_max, _), (indices, gains) = jax.lax.scan(step, init, None, length=budget)
+    (cur_max, _), (new_idx, new_gains) = jax.lax.scan(
+        step, (cur_max0, chosen0), None, length=budget - init_idx.shape[0]
+    )
+    indices = jnp.concatenate([init_idx, new_idx])
+    gains = jnp.concatenate([init_gains, new_gains])
 
     weights = _cluster_weights(sim, indices, pw)
     # L(S) in similarity space: Σ_i (s_max_i_possible − cur_max) is not
@@ -173,21 +238,38 @@ def _cluster_weights(
 # ---------------------------------------------------------------------------
 
 
-def lazy_greedy_fl(sim: np.ndarray, budget: int) -> FLResult:
+def lazy_greedy_fl(
+    sim: np.ndarray, budget: int, init_selected: np.ndarray | None = None
+) -> FLResult:
     """Exact lazy greedy with a max-heap of stale upper bounds.
 
     Numerically identical selections to ``greedy_fl_matrix`` (ties broken by
-    lowest index) but typically evaluates far fewer gains.
+    lowest index) but typically evaluates far fewer gains.  ``init_selected``
+    warm-starts: the prefix is installed first (gains replayed in order) and
+    the heap is built against the warmed cover state, so the O(n²) heap
+    initialization prices in the prefix for free.
     """
     sim = np.asarray(sim, np.float64)
     n = sim.shape[0]
     budget = min(budget, n)
     cur_max = np.zeros(n)
-    # heap of (-gain, index, stamp); stamp = |S| when the gain was computed
-    heap = [(-float(np.maximum(sim[:, e], 0.0).sum()), e, 0) for e in range(n)]
-    heapq.heapify(heap)
     indices, gains = [], []
-    for t in range(budget):
+    if init_selected is not None:
+        for e in np.asarray(init_selected, np.int64)[:budget]:
+            e = int(e)
+            indices.append(e)
+            gains.append(float(np.maximum(sim[:, e] - cur_max, 0.0).sum()))
+            cur_max = np.maximum(cur_max, sim[:, e])
+    r0 = len(indices)
+    in_init = set(indices)
+    # heap of (-gain, index, stamp); stamp = |S| when the gain was computed
+    heap = [
+        (-float(np.maximum(sim[:, e] - cur_max, 0.0).sum()), e, r0)
+        for e in range(n)
+        if e not in in_init
+    ]
+    heapq.heapify(heap)
+    for t in range(r0, budget):
         while True:
             neg_g, e, stamp = heapq.heappop(heap)
             if stamp == t:
@@ -213,7 +295,11 @@ def lazy_greedy_fl(sim: np.ndarray, budget: int) -> FLResult:
 
 @partial(jax.jit, static_argnames=("budget", "sample_size"))
 def stochastic_greedy_fl(
-    sim: jax.Array, budget: int, key: jax.Array, sample_size: int
+    sim: jax.Array,
+    budget: int,
+    key: jax.Array,
+    sample_size: int,
+    init_selected: jax.Array | None = None,
 ) -> FLResult:
     """Stochastic greedy: each step evaluates gains on a random candidate set.
 
@@ -221,14 +307,24 @@ def stochastic_greedy_fl(
     in expectation (Mirzasoleiman et al., AAAI'15), with O(n·log 1/δ) total
     gain evaluations.
 
+    When every sampled candidate is already selected (small pools, large
+    budgets), the step falls back to the first unchosen element instead of
+    re-selecting a masked candidate — selections are always unique.
+
     Args:
       sim: (n, n) similarities.
-      budget: r (static).
+      budget: r (static); clamped to n.
       key: PRNG key for candidate sampling.
       sample_size: candidates per step (static).
+      init_selected: optional warm-start prefix (see ``greedy_fl_matrix``).
     """
     n = sim.shape[0]
+    budget = int(min(budget, n))
     sim = sim.astype(jnp.float32)
+
+    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
+        init_selected, budget, n, lambda e: sim[:, e]
+    )
 
     def step(state, key_t):
         cur_max, chosen_mask = state
@@ -238,13 +334,26 @@ def stochastic_greedy_fl(
         gains = jnp.sum(jnp.maximum(cand_sim - cur_max[:, None], 0.0), axis=0)
         gains = jnp.where(chosen_mask[cand], -jnp.inf, gains)
         best = jnp.argmax(gains)
-        e = cand[best]
+        # All candidates already chosen → every gain is −inf and argmax
+        # would re-select cand[0]; take the first unchosen element instead
+        # (one always exists while |S| < n).
+        all_dup = ~jnp.isfinite(gains[best])
+        fallback = jnp.argmin(chosen_mask)  # first False
+        e = jnp.where(all_dup, fallback, cand[best])
+        g = jnp.where(
+            all_dup,
+            jnp.sum(jnp.maximum(sim[:, fallback] - cur_max, 0.0)),
+            gains[best],
+        )
         new_max = jnp.maximum(cur_max, sim[:, e])
-        return (new_max, chosen_mask.at[e].set(True)), (e.astype(jnp.int32), gains[best])
+        return (new_max, chosen_mask.at[e].set(True)), (e.astype(jnp.int32), g)
 
-    keys = jax.random.split(key, budget)
-    init = (jnp.zeros((n,), jnp.float32), jnp.zeros((n,), bool))
-    (cur_max, _), (indices, gains) = jax.lax.scan(step, init, keys)
+    keys = jax.random.split(key, budget - init_idx.shape[0])
+    (cur_max, _), (new_idx, new_gains) = jax.lax.scan(
+        step, (cur_max0, chosen0), keys
+    )
+    indices = jnp.concatenate([init_idx, new_idx])
+    gains = jnp.concatenate([init_gains, new_gains])
     weights = _cluster_weights(sim, indices)
     coverage = jnp.sum(jnp.max(sim, axis=1) - cur_max)
     return FLResult(indices, gains.astype(jnp.float32), weights, coverage)
@@ -262,6 +371,7 @@ def greedy_fl_features(
     sim_fn: str = "neg_l2",
     gains_impl: str = "jax",
     block_n: int = 512,
+    init_selected: jax.Array | None = None,
 ) -> FLResult:
     """Greedy FL directly from proxy features, never materializing (n, n).
 
@@ -276,6 +386,9 @@ def greedy_fl_features(
       sim_fn: 'neg_l2' → s_ij = d_max − ‖x_i − x_j‖ (paper's metric) or 'dot'.
       gains_impl: 'jax' | 'pallas'.
       block_n: candidate block size for gain evaluation.
+      init_selected: optional warm-start prefix (see ``greedy_fl_matrix``);
+        each prefix element costs one O(n·d) similarity column, not a full
+        O(n²·d) gain sweep.
     """
     from repro.kernels import ops as kops  # local import; kernels optional
 
@@ -319,6 +432,10 @@ def greedy_fl_features(
         _, gs = jax.lax.scan(blk, None, jnp.arange(n_blocks))
         return gs.reshape(pad_n)[:n]
 
+    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
+        init_selected, budget, n, lambda e: sim_block(e[None])[:, 0]
+    )
+
     def step(state, _):
         cur_max, chosen = state
         g = gains_all(cur_max)
@@ -330,8 +447,11 @@ def greedy_fl_features(
             g[e],
         )
 
-    init = (jnp.zeros((n,), jnp.float32), jnp.zeros((n,), bool))
-    (cur_max, _), (indices, gains) = jax.lax.scan(step, init, None, length=budget)
+    (cur_max, _), (new_idx, new_gains) = jax.lax.scan(
+        step, (cur_max0, chosen0), None, length=budget - init_idx.shape[0]
+    )
+    indices = jnp.concatenate([init_idx, new_idx])
+    gains = jnp.concatenate([init_gains, new_gains])
 
     # Weights: assign every i to its most-similar selected element.
     sel_sim = sim_block(indices)  # (n, r)
@@ -476,6 +596,7 @@ def sparse_greedy_fl(
     idx: np.ndarray,
     budget: int,
     feats: np.ndarray | None = None,
+    init_selected: np.ndarray | None = None,
 ) -> FLResult:
     """Host lazy greedy (Minoux) over the top-k graph, walking CSR columns.
 
@@ -490,7 +611,10 @@ def sparse_greedy_fl(
     the lowest index).  If ``feats`` is given, γ weights and coverage are
     computed by *exact* blocked assignment of every point to its nearest
     selected medoid (O(n·r), no (n, n)); otherwise graph assignment is used
-    and coverage is the residual similarity mass.
+    and coverage is the residual similarity mass.  ``init_selected``
+    warm-starts from a previous selection's prefix — each prefix element
+    costs one CSR-column walk, and the heap is initialized against the
+    warmed cover state.
     """
     vals = np.asarray(vals, np.float64)
     idx = np.asarray(idx, np.int64)
@@ -510,13 +634,30 @@ def sparse_greedy_fl(
     indptr = np.searchsorted(sorted_c, np.arange(n + 1))
 
     cur_max = np.zeros(n)
-    init_gain = np.zeros(n)
-    np.add.at(init_gain, sorted_c, np.maximum(col_vals, 0.0))
-    heap = [(-g, c, 0) for c, g in enumerate(init_gain)]
-    heapq.heapify(heap)
     indices: list[int] = []
     gains: list[float] = []
-    for t in range(budget):
+    if init_selected is not None:
+        for c in np.asarray(init_selected, np.int64)[:budget]:
+            c = int(c)
+            lo, hi = indptr[c], indptr[c + 1]
+            indices.append(c)
+            gains.append(
+                float(
+                    np.maximum(
+                        col_vals[lo:hi] - cur_max[col_rows[lo:hi]], 0.0
+                    ).sum()
+                )
+            )
+            np.maximum.at(cur_max, col_rows[lo:hi], col_vals[lo:hi])
+    r0 = len(indices)
+    in_init = set(indices)
+    init_gain = np.zeros(n)
+    np.add.at(
+        init_gain, sorted_c, np.maximum(col_vals - cur_max[col_rows], 0.0)
+    )
+    heap = [(-g, c, r0) for c, g in enumerate(init_gain) if c not in in_init]
+    heapq.heapify(heap)
+    for t in range(r0, budget):
         while True:
             neg_g, c, stamp = heapq.heappop(heap)
             if stamp == t:
@@ -590,6 +731,7 @@ def sparse_greedy_fl_features(
     d_max: jax.Array | None = None,
     topk_impl: str = "jax",
     block_m: int = 2048,
+    init_selected: np.ndarray | None = None,
 ) -> FLResult:
     """End-to-end sparse engine: top-k graph build + host lazy greedy.
 
@@ -601,7 +743,11 @@ def sparse_greedy_fl_features(
         feats, k, d_max=d_max, block_m=block_m, impl=topk_impl
     )
     return sparse_greedy_fl(
-        np.asarray(vals), np.asarray(idx), budget, feats=np.asarray(feats)
+        np.asarray(vals),
+        np.asarray(idx),
+        budget,
+        feats=np.asarray(feats),
+        init_selected=init_selected,
     )
 
 

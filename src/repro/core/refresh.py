@@ -1,0 +1,205 @@
+"""Asynchronous, warm-started coreset refresh (DESIGN.md §4).
+
+CRAIG's practical speedup (paper §5) requires periodic re-selection — deep-net
+proxies drift with w (§3.4, Fig 5) — but a refresh that blocks the step loop
+for the full proxy-extraction + greedy pass puts selection wall-clock straight
+onto the training critical path.  This module moves it off:
+
+    trigger boundary          install boundary (next epoch)
+         │                          │
+         ├─ snapshot params ───────►│
+         │  (device_get, host copy) │
+         │        background thread │
+         │  proxy extract + greedy  │
+         │  publish RefreshResult ─►│ atomic install into CoresetSampler
+         │                          │
+    training continues on the *stale* coreset in between (double buffering)
+
+``AsyncRefresher`` owns the worker thread and the publish slot; the trainer
+owns the install points.  ``mode='sync'`` runs the identical lifecycle with
+the work inline at submit time — same install boundaries, so sync and async
+training are step-for-step deterministic replicas of each other
+(tests/test_refresh.py), and the steps/s delta between the two modes is
+exactly the selection wall-clock removed from the critical path
+(benchmarks/bench_refresh.py).
+
+At most one refresh is in flight (double buffering, not a queue): the stale
+coreset is the front buffer, the in-flight selection the back buffer.
+Checkpoint semantics: the trainer drains the refresher (``wait()``) before
+capturing sampler state, so a published-but-not-installed selection
+round-trips through ``CoresetSampler.state_dict()`` and an in-flight one
+always materializes before the snapshot — a restart never loses a refresh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Literal
+
+import jax
+import numpy as np
+
+__all__ = ["AsyncRefresher", "RefreshResult"]
+
+
+@dataclasses.dataclass
+class RefreshResult:
+    """A published refresh: whatever ``work_fn`` returned, plus provenance.
+
+    ``version`` is a monotone counter assigned at submit time — the same
+    counter the :class:`~repro.data.pipeline.CoresetSampler` uses for its
+    staged/installed buffers, so logs, checkpoints, and benchmarks can
+    correlate a selection with the params snapshot that produced it.
+    """
+
+    version: int
+    value: Any
+    wall_time_s: float
+    error: BaseException | None = None
+
+
+class AsyncRefresher:
+    """Runs ``work_fn(params_snapshot)`` off the training critical path.
+
+    * ``mode='async'`` — ``submit`` snapshots params to host memory
+      (``jax.device_get``; the live training params keep updating) and
+      returns immediately; extraction + selection run on a background
+      worker thread (non-daemon, so interpreter shutdown joins it rather
+      than tearing down under an active XLA dispatch).
+    * ``mode='sync'`` — the same lifecycle with the work inline in
+      ``submit``; the deterministic on-critical-path baseline.
+
+    One job in flight at a time (double buffering).  Results publish to a
+    single slot, readable via :meth:`collect`; an optional ``on_complete``
+    callback fires on the worker thread the moment a job succeeds (the
+    trainer uses it to stage the selection into the sampler so checkpoints
+    see it without polling).  Worker exceptions are captured and re-raised
+    on the caller's thread at the next :meth:`wait`/:meth:`collect` — a
+    failed selection must fail training, not silently train on stale data
+    forever.
+    """
+
+    def __init__(
+        self,
+        work_fn: Callable[[Any], Any],
+        mode: Literal["sync", "async"] = "async",
+        on_complete: Callable[[RefreshResult], None] | None = None,
+    ):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"unknown refresh mode {mode!r}")
+        self._work_fn = work_fn
+        self._mode = mode
+        self._on_complete = on_complete
+        self._version = 0
+        self._thread: threading.Thread | None = None
+        self._result: RefreshResult | None = None
+        self._lock = threading.Lock()
+
+    # -- state ---------------------------------------------------------------
+
+    @property
+    def mode(self) -> str:
+        return self._mode
+
+    @property
+    def version(self) -> int:
+        """Version of the most recently submitted refresh (0 = none yet)."""
+        return self._version
+
+    @property
+    def busy(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def submit(self, params: Any, *, snapshot: bool = True) -> int:
+        """Snapshot ``params`` and start (or run, in sync mode) the refresh.
+
+        Returns the new version.  Raises if a refresh is already in flight —
+        callers hold at most one back buffer.
+        """
+        if self.busy:
+            raise RuntimeError(
+                "refresh already in flight; collect it before submitting"
+            )
+        self._version += 1
+        version = self._version
+
+        def snap_leaf(x):
+            # device arrays are immutable — device_get is snapshot enough;
+            # host numpy leaves are mutable and must be copied, or the
+            # worker would see the live training updates
+            if isinstance(x, np.ndarray):
+                return x.copy()
+            return np.asarray(jax.device_get(x))
+
+        snap = jax.tree.map(snap_leaf, params) if snapshot else params
+
+        def job() -> None:
+            t0 = time.time()
+            try:
+                value = self._work_fn(snap)
+                res = RefreshResult(version, value, time.time() - t0)
+                if self._on_complete is not None:
+                    # inside the capture: a failed publish must surface at
+                    # wait()/collect(), not vanish on the worker thread
+                    self._on_complete(res)
+            except BaseException as e:  # noqa: BLE001 — re-raised at wait()
+                res = RefreshResult(version, None, time.time() - t0, error=e)
+            with self._lock:
+                self._result = res
+
+        if self._mode == "sync":
+            job()
+            self._raise_if_failed()
+        else:
+            # non-daemon: the interpreter joins it at shutdown instead of
+            # tearing down under a thread mid-XLA-dispatch (which aborts)
+            self._thread = threading.Thread(
+                target=job, name=f"craig-refresh-v{version}", daemon=False
+            )
+            self._thread.start()
+        return version
+
+    def reset_version(self, version: int) -> None:
+        """Fast-forward the version counter (monotonicity across restarts:
+        a restored trainer seeds this from the checkpointed sampler state so
+        post-restore refreshes never collide with already-staged/installed
+        versions)."""
+        if self.busy:
+            raise RuntimeError("cannot reset version while a refresh runs")
+        self._version = max(self._version, int(version))
+
+    def wait(self, timeout: float | None = None) -> None:
+        """Block until no refresh is in flight; re-raise a worker failure."""
+        t = self._thread
+        if t is not None:
+            t.join(timeout)
+            if t.is_alive():
+                raise TimeoutError(f"refresh still running after {timeout}s")
+            self._thread = None
+        self._raise_if_failed()
+
+    def collect(self, block: bool = False) -> RefreshResult | None:
+        """Pop the published result, if any.  ``block=True`` waits first."""
+        if block:
+            self.wait()
+        else:
+            self._raise_if_failed()
+        with self._lock:
+            res, self._result = self._result, None
+        return res
+
+    def _raise_if_failed(self) -> None:
+        with self._lock:
+            res = self._result
+            if res is not None and res.error is not None:
+                self._result = None
+            else:
+                res = None
+        if res is not None:
+            raise RuntimeError(
+                f"coreset refresh v{res.version} failed"
+            ) from res.error

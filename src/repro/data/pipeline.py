@@ -11,15 +11,22 @@ The pipeline composes three layers:
                      ``set_coreset_from_selection`` — engine-agnostic, so the
                      same path serves the dense engines and the O(n·k)
                      ``engine='sparse'`` selector that large pools need
-                     (README §Engines).
+                     (README §Engines).  The async refresh path (DESIGN.md
+                     §4) is double-buffered: a background selection is
+                     ``stage``d (versioned back buffer, any thread) and the
+                     trainer ``install_pending``s it atomically at a step
+                     boundary; both buffers round-trip through
+                     ``state_dict``, so a checkpoint taken between publish
+                     and install loses nothing.
   GlobalBatcher    — materializes {tokens, labels, weights} numpy batches
                      from an index-addressable dataset.
   Prefetcher       — background thread, depth-k queue (overlaps host data
                      work with device compute).
 
 Determinism/fault-tolerance contract: state = (epoch, step_in_epoch,
-coreset snapshot).  `state_dict()`/`load_state_dict()` round-trip exactly;
-a restarted trainer sees the identical stream (tests/test_data.py).
+installed coreset + version, staged coreset + version).  `state_dict()`/
+`load_state_dict()` round-trip exactly; a restarted trainer sees the
+identical stream (tests/test_data.py, tests/test_refresh.py).
 """
 from __future__ import annotations
 
@@ -41,8 +48,11 @@ class CoresetSampler:
         self.seed = seed
         self.epoch = 0
         self.step_in_epoch = 0
+        self.version = 0  # version of the installed coreset (0 = full data)
         self._indices: np.ndarray | None = None  # active coreset (None=full)
         self._weights: np.ndarray | None = None
+        self._pending: dict | None = None  # staged back buffer (see stage())
+        self._lock = threading.Lock()
 
     # -- coreset management ---------------------------------------------
 
@@ -51,17 +61,15 @@ class CoresetSampler:
         indices: np.ndarray,
         weights: np.ndarray,
         keep_order: bool = False,
+        version: int | None = None,
     ) -> None:
         """keep_order=True preserves the greedy selection order (paper §3.2:
         early elements carry most of the gradient approximation — useful for
         curriculum-style first epochs); default canonicalizes by index."""
-        if keep_order:
-            self._indices = np.asarray(indices)
-            self._weights = np.asarray(weights, np.float32)
-        else:
-            order = np.argsort(indices)
-            self._indices = np.asarray(indices)[order]
-            self._weights = np.asarray(weights, np.float32)[order]
+        idx, w = self._canonicalize(indices, weights, keep_order)
+        with self._lock:
+            self._indices, self._weights = idx, w
+            self.version = self.version + 1 if version is None else int(version)
 
     def set_coreset_from_selection(
         self,
@@ -82,7 +90,74 @@ class CoresetSampler:
         self.set_coreset(idx, selection.weights, keep_order=keep_order)
 
     def clear_coreset(self) -> None:
-        self._indices = self._weights = None
+        with self._lock:
+            self._indices = self._weights = None
+            self._pending = None
+            self.version = 0
+
+    # -- versioned double buffer (async refresh, DESIGN.md §4) ------------
+
+    @staticmethod
+    def _canonicalize(indices, weights, keep_order: bool):
+        idx = np.asarray(indices)
+        w = np.asarray(weights, np.float32)
+        if not keep_order:
+            order = np.argsort(idx)
+            idx, w = idx[order], w[order]
+        return idx, w
+
+    def stage(
+        self,
+        indices: np.ndarray,
+        weights: np.ndarray,
+        version: int | None = None,
+        meta: dict | None = None,
+        keep_order: bool = False,
+    ) -> int:
+        """Publish a refresh into the back buffer (callable from any thread).
+
+        The staged coreset does not affect iteration until the owner of the
+        step loop calls :meth:`install_pending` at a step boundary.  ``meta``
+        is an arbitrary JSON-able payload (ε̂, selection wall-clock, …) that
+        rides along through checkpoints.  Returns the staged version.
+        """
+        idx, w = self._canonicalize(indices, weights, keep_order)
+        with self._lock:
+            if version is None:
+                version = self.version + 1
+            self._pending = {
+                "version": int(version),
+                "indices": idx,
+                "weights": w,
+                "meta": meta,
+            }
+            return int(version)
+
+    @property
+    def has_pending(self) -> bool:
+        return self._pending is not None
+
+    @property
+    def pending_version(self) -> int | None:
+        p = self._pending
+        return None if p is None else p["version"]
+
+    def install_pending(self) -> dict | None:
+        """Atomically swap the staged back buffer in as the active coreset.
+
+        Call only from the thread that owns iteration, at a step boundary
+        (the cursor semantics of an epoch assume a fixed active set).
+        Returns the installed record ({version, indices, weights, meta}) or
+        None when nothing is staged.
+        """
+        with self._lock:
+            if self._pending is None:
+                return None
+            p, self._pending = self._pending, None
+            self._indices = p["indices"]
+            self._weights = p["weights"]
+            self.version = p["version"]
+            return p
 
     @property
     def active_size(self) -> int:
@@ -123,12 +198,25 @@ class CoresetSampler:
     # -- fault tolerance ----------------------------------------------------
 
     def state_dict(self) -> dict:
-        return {
-            "epoch": self.epoch,
-            "step_in_epoch": self.step_in_epoch,
-            "indices": None if self._indices is None else self._indices.tolist(),
-            "weights": None if self._weights is None else self._weights.tolist(),
-        }
+        """JSON-able snapshot: cursor + installed front buffer + staged back
+        buffer — a checkpoint between publish and install loses nothing."""
+        with self._lock:
+            pending = None
+            if self._pending is not None:
+                pending = {
+                    "version": self._pending["version"],
+                    "indices": self._pending["indices"].tolist(),
+                    "weights": self._pending["weights"].tolist(),
+                    "meta": self._pending["meta"],
+                }
+            return {
+                "epoch": self.epoch,
+                "step_in_epoch": self.step_in_epoch,
+                "version": self.version,
+                "indices": None if self._indices is None else self._indices.tolist(),
+                "weights": None if self._weights is None else self._weights.tolist(),
+                "pending": pending,
+            }
 
     def load_state_dict(self, s: dict) -> None:
         self.epoch = int(s["epoch"])
@@ -136,8 +224,22 @@ class CoresetSampler:
         if s["indices"] is None:
             self.clear_coreset()
         else:
-            self._indices = np.asarray(s["indices"], np.int64)
-            self._weights = np.asarray(s["weights"], np.float32)
+            with self._lock:
+                self._indices = np.asarray(s["indices"], np.int64)
+                self._weights = np.asarray(s["weights"], np.float32)
+        # version/pending are absent in pre-refresh checkpoints
+        self.version = int(s.get("version", 0 if s["indices"] is None else 1))
+        p = s.get("pending")
+        if p is not None:
+            self.stage(
+                np.asarray(p["indices"], np.int64),
+                np.asarray(p["weights"], np.float32),
+                version=int(p["version"]),
+                meta=p.get("meta"),
+                keep_order=True,  # already canonicalized when staged
+            )
+        else:
+            self._pending = None
 
     def skip_to(self, epoch: int, step_in_epoch: int) -> None:
         """Straggler/restart skip-ahead: O(1), no data regeneration."""

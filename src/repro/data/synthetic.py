@@ -50,6 +50,11 @@ class GaussianMixture:
     def subset(self, idx: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         return self.x[idx], self.y[idx]
 
+    def class_labels(self, idx: np.ndarray) -> np.ndarray:
+        """Per-example class ids — the stratification key for the trainer's
+        per-class CRAIG refresh (paper §5)."""
+        return self.y[np.asarray(idx)]
+
 
 @dataclasses.dataclass
 class TokenStream:
@@ -82,3 +87,8 @@ class TokenStream:
         toks = np.stack([p[0] for p in pairs])
         labels = np.stack([p[1] for p in pairs])
         return {"tokens": toks, "labels": labels}
+
+    def class_labels(self, idx: np.ndarray) -> np.ndarray:
+        """Per-document topic ids — the class signal for per-class CRAIG
+        selection on the LM path (gradient proxies cluster by topic)."""
+        return (np.asarray(idx, np.int64) % self.n_topics).astype(np.int32)

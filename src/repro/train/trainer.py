@@ -3,11 +3,28 @@
 Responsibilities (DESIGN.md §4):
   * CRAIG refresh every ``select_every`` epochs (paper §3.4: deep-net proxies
     drift with w, so the subset is re-selected periodically; Fig 5 sweeps
-    per-1 and per-5-epoch refresh);
+    per-1 and per-5-epoch refresh), run *off the critical path*: params are
+    snapshotted at the trigger boundary, proxy extraction + greedy selection
+    run on a background thread (``core.refresh.AsyncRefresher``), and the
+    published selection installs atomically at the next epoch boundary while
+    training continues on the stale coreset (double buffering).
+    ``refresh_mode='sync'`` runs the identical lifecycle inline — same
+    install boundaries, so the two modes are step-for-step deterministic
+    replicas and their steps/s delta is exactly the selection wall-clock
+    removed from the critical path (benchmarks/bench_refresh.py);
+  * warm-started selection: each refresh seeds the greedy engines with the
+    previous selection's high-gain prefix (``warm_start_fraction``), whose
+    cover state is replayed in O(r₀·n) instead of re-derived from scratch;
+  * per-class stratification (paper §5): pool class labels are extracted
+    alongside proxies (``dataset.class_labels``) and threaded into
+    ``CraigSelector.select`` whenever ``craig.per_class=True``;
   * weighted-batch training between refreshes (γ weights ride in the batch);
   * checkpoint/restart: params + opt state + sampler cursor + active coreset
-    are one atomic unit; ``Trainer.restore_or_init`` resumes the exact
-    stream, optionally onto a different mesh (elastic);
+    + any published-but-not-installed refresh are one atomic unit
+    (``_save`` drains the refresher first, so an in-flight selection always
+    materializes into the sampler's back buffer before state capture);
+    ``Trainer.restore_or_init`` resumes the exact stream, optionally onto a
+    different mesh (elastic);
   * preemption: SIGTERM triggers an emergency checkpoint at the next step
     boundary (CPU-testable via ``request_preempt()``);
   * straggler policy: per-step wall-clock watchdog — on the single-host
@@ -19,7 +36,8 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable
+import warnings
+from typing import Any, Callable, Literal
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +45,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.craig import CraigConfig, CraigSelector
+from repro.core.refresh import AsyncRefresher, RefreshResult
 from repro.data.pipeline import CoresetSampler
 from repro.models.config import ModelConfig
 from repro.optim.optimizers import Optimizer
@@ -46,6 +65,9 @@ class TrainerConfig:
     )
     use_craig: bool = True
     proxy_pool_batches: int = 8  # batches of the pool scanned per refresh
+    refresh_mode: Literal["sync", "async"] = "async"  # DESIGN.md §4 lifecycle
+    warm_start_fraction: float = 0.5  # share of the budget warm-started from
+    # the previous refresh's high-gain prefix (0 = cold every refresh)
     checkpoint_every: int = 50
     checkpoint_dir: str | None = None
     keep_checkpoints: int = 3
@@ -88,6 +110,26 @@ class Trainer:
             else None
         )
         self._last_epoch_selected = -1
+        self.refresher = AsyncRefresher(
+            self._refresh_work,
+            mode=tcfg.refresh_mode,
+            on_complete=self._publish_refresh,
+        )
+        # previous refresh's selection in pool coordinates (the pool is a
+        # deterministic stride, identical across refreshes) — warm-start seed
+        self._prev_selection = None
+        if (
+            tcfg.use_craig
+            and tcfg.craig.per_class
+            and not hasattr(dataset, "class_labels")
+        ):
+            warnings.warn(
+                "craig.per_class=True but the dataset exposes no "
+                "class_labels(idx); refreshes will fall back to flat "
+                "(unstratified) selection",
+                UserWarning,
+                stacklevel=2,
+            )
         from repro.models import loss_fn as _loss_fn
 
         self._eval_loss = jax.jit(
@@ -104,16 +146,21 @@ class Trainer:
 
     # -- CRAIG refresh ---------------------------------------------------------
 
-    def _refresh_coreset(self) -> None:
-        """Extract proxies over a candidate pool and re-select the coreset."""
-        t0 = time.time()
+    def _pool_indices(self) -> np.ndarray:
+        """Deterministic candidate pool: stride over the corpus.  Depends
+        only on (corpus size, config), so pool coordinates are stable across
+        refreshes — which is what makes warm-start prefixes transferable."""
         n_pool = min(
             self.dataset.n_docs,
             self.tcfg.proxy_pool_batches * self.tcfg.batch_size,
         )
-        # deterministic pool: stride over the corpus
         stride = max(1, self.dataset.n_docs // n_pool)
-        pool_idx = np.arange(0, self.dataset.n_docs, stride)[:n_pool]
+        return np.arange(0, self.dataset.n_docs, stride)[:n_pool]
+
+    def _extract_pool(
+        self, params, pool_idx: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray | None]:
+        """Proxy features (and class labels, when available) for the pool."""
         feats = []
         bs = self.tcfg.batch_size
         for lo in range(0, len(pool_idx), bs):
@@ -121,18 +168,68 @@ class Trainer:
             if len(chunk) < bs:  # pad, then drop
                 chunk = np.concatenate([chunk, pool_idx[: bs - len(chunk)]])
             batch = self.dataset.batch(chunk)
-            f = self.select_step(self.params, batch)
+            f = self.select_step(params, batch)
             feats.append(np.asarray(f))
         feats = np.concatenate(feats)[: len(pool_idx)]
-        sel = CraigSelector(self.tcfg.craig).select(feats)
-        self.sampler.set_coreset_from_selection(sel, pool_indices=pool_idx)
+        labels = None
+        if self.tcfg.craig.per_class and hasattr(self.dataset, "class_labels"):
+            labels = np.asarray(self.dataset.class_labels(pool_idx))
+        return feats, labels
+
+    def _refresh_work(self, params):
+        """Extraction + selection; runs on the refresher's worker thread in
+        async mode (params is a host snapshot — live params keep training)."""
+        pool_idx = self._pool_indices()
+        feats, labels = self._extract_pool(params, pool_idx)
+        selector = CraigSelector(self.tcfg.craig)
+        init = None
+        prev = self._prev_selection
+        if self.tcfg.warm_start_fraction > 0 and prev is not None:
+            r0 = int(round(self.tcfg.warm_start_fraction * prev.size))
+            if r0 > 0:
+                init = np.asarray(prev.indices[:r0])
+        sel = selector.select(feats, labels=labels, init_selected=init)
+        self._prev_selection = sel
+        return sel, pool_idx
+
+    def _publish_refresh(self, result: RefreshResult) -> None:
+        """on_complete hook: stage the selection into the sampler's back
+        buffer (worker thread in async mode).  Installation happens on the
+        main thread at the next epoch boundary."""
+        sel, pool_idx = result.value
+        self.sampler.stage(
+            np.asarray(pool_idx)[np.asarray(sel.indices)],
+            sel.weights,
+            version=result.version,
+            meta={
+                "coreset_size": sel.size,
+                "epsilon_hat": float(sel.epsilon_hat),
+                "select_time_s": result.wall_time_s,
+                "per_class_sizes": sel.per_class_sizes,
+            },
+        )
+
+    def _install_refresh(self) -> None:
+        """Epoch-boundary install point: wait out any in-flight selection
+        (the deterministic deadline — normally it finished an epoch ago) and
+        atomically swap the staged coreset in."""
+        t0 = time.time()
+        self.refresher.wait()
+        stall = time.time() - t0
+        p = self.sampler.install_pending()
+        if p is None:
+            return
+        meta = p.get("meta") or {}
         self.metrics_log.append(
             {
                 "event": "craig_refresh",
                 "step": self.step,
-                "coreset_size": sel.size,
-                "epsilon_hat": sel.epsilon_hat,
-                "select_time_s": time.time() - t0,
+                "version": p["version"],
+                "mode": self.tcfg.refresh_mode,
+                "coreset_size": len(p["indices"]),
+                "epsilon_hat": meta.get("epsilon_hat", float("nan")),
+                "select_time_s": meta.get("select_time_s", float("nan")),
+                "install_stall_s": stall,
             }
         )
 
@@ -159,11 +256,24 @@ class Trainer:
     def _save(self, blocking: bool = True) -> None:
         if self.ckpt is None:
             return
+        # An in-flight refresh must materialize before sampler state is
+        # captured: a staged selection round-trips through state_dict(), a
+        # running thread doesn't.  Bounded by one selection wall-clock.
+        self.refresher.wait()
         tree = {"params": self.params, "opt": self.opt_state}
+        prev = self._prev_selection  # warm-start seed (pool coordinates)
         extras = {
             "step": self.step,
             "sampler": self.sampler.state_dict(),
             "last_epoch_selected": self._last_epoch_selected,
+            "prev_selection": None
+            if prev is None
+            else {
+                "indices": np.asarray(prev.indices).tolist(),
+                "weights": np.asarray(prev.weights).tolist(),
+                "coverage": float(prev.coverage),
+                "epsilon_hat": float(prev.epsilon_hat),
+            },
         }
         self.ckpt.save(self.step, tree, extras, blocking=blocking)
 
@@ -178,6 +288,22 @@ class Trainer:
         self.step = int(extras["step"])
         self.sampler.load_state_dict(extras["sampler"])
         self._last_epoch_selected = int(extras["last_epoch_selected"])
+        # version monotonicity: _save drains the refresher, so the highest
+        # version ever assigned is visible as installed-or-pending state
+        self.refresher.reset_version(
+            max(self.sampler.version, self.sampler.pending_version or 0)
+        )
+        ps = extras.get("prev_selection")
+        if ps is not None:
+            from repro.core.craig import CoresetSelection
+
+            self._prev_selection = CoresetSelection(
+                indices=np.asarray(ps["indices"], np.int64),
+                weights=np.asarray(ps["weights"], np.float32),
+                order=np.arange(len(ps["indices"])),
+                coverage=float(ps["coverage"]),
+                epsilon_hat=float(ps["epsilon_hat"]),
+            )
         return True
 
     # -- main loop ----------------------------------------------------------------
@@ -185,17 +311,24 @@ class Trainer:
     def run(self, n_steps: int) -> list[dict]:
         tc = self.tcfg
         for _ in range(n_steps):
-            # CRAIG refresh at epoch boundaries
             epoch = self.sampler.epoch
+            # Refresh lifecycle, both modes at the same boundaries:
+            # install the previous trigger's selection at this epoch
+            # boundary, then (on cadence) snapshot params and kick off the
+            # next selection — async: in the background while this epoch
+            # trains on the stale coreset; sync: inline, blocking here.
             if (
                 tc.use_craig
                 and tc.select_every_epochs > 0
                 and self.sampler.step_in_epoch == 0
-                and epoch != self._last_epoch_selected
-                and epoch % tc.select_every_epochs == 0
             ):
-                self._refresh_coreset()
-                self._last_epoch_selected = epoch
+                self._install_refresh()
+                if (
+                    epoch % tc.select_every_epochs == 0
+                    and epoch != self._last_epoch_selected
+                ):
+                    self.refresher.submit(self.params)
+                    self._last_epoch_selected = epoch
 
             idx, w = self.sampler.next_batch()
             batch = self.dataset.batch(idx)

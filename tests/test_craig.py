@@ -5,7 +5,12 @@ import numpy as np
 import pytest
 
 from repro.core import facility_location as fl
-from repro.core.craig import CraigConfig, CraigSelector, pairwise_distances
+from repro.core.craig import (
+    CraigConfig,
+    CraigSelector,
+    _apportion_budgets,
+    pairwise_distances,
+)
 from repro.core.proxy import exact_per_example_grads
 from repro.data.synthetic import make_classification
 
@@ -27,6 +32,94 @@ def test_per_class_budget_apportionment():
     assert cs.size == 12
     assert cs.per_class_sizes == {0: 6, 1: 4, 2: 2}
     assert cs.weights.sum() == pytest.approx(120.0)
+
+
+def test_per_class_many_rare_classes_no_overshoot():
+    """Regression: the ≥1-per-class floor used to push Σbudgets far past the
+    requested total (never reclaimed).  With 30 singleton classes and a
+    budget of 8, the union must have exactly 8 elements."""
+    labels = np.concatenate([np.zeros(50, np.int64), np.arange(1, 31)])
+    feats = jax.random.normal(jax.random.PRNGKey(1), (80, 8))
+    cs = CraigSelector(CraigConfig(fraction=0.1, per_class=True)).select(
+        feats, labels
+    )
+    assert cs.size == 8
+    assert len(set(cs.indices.tolist())) == 8
+    assert sum(cs.per_class_sizes.values()) == 8
+    assert cs.weights.sum() == pytest.approx(80.0)
+
+
+def test_apportion_budgets_invariants():
+    rng = np.random.RandomState(0)
+    for _ in range(50):
+        k = rng.randint(1, 12)
+        counts = rng.randint(1, 40, size=k).astype(np.int64)
+        total = rng.randint(1, counts.sum() + 5)
+        b = _apportion_budgets(counts, total)
+        assert b.sum() == min(total, counts.sum()), (counts, total, b)
+        assert (b <= counts).all(), (counts, total, b)
+        if total >= k:
+            assert (b >= 1).all(), (counts, total, b)
+
+
+def test_apportion_reclaims_from_largest_classes():
+    # floors force overshoot (5 + 9·1 = 14 > 11); reclaimed from the big class
+    counts = np.array([20, 2, 2, 2, 2, 2, 2, 2, 2, 2])
+    b = _apportion_budgets(counts, 11)
+    assert b.sum() == 11 and (b >= 1).all() and (b <= counts).all()
+    assert b[0] == b.max()  # reclaim never inverts the ordering
+
+
+def test_per_class_budget_never_exceeds_class_size():
+    feats = jax.random.normal(jax.random.PRNGKey(2), (24, 4))
+    labels = np.array([0] * 18 + [1] * 6)
+    cs = CraigSelector(CraigConfig(fraction=0.9, per_class=True)).select(
+        feats, labels
+    )
+    assert cs.size == 22  # round(0.9·24), not clamped away silently
+    assert cs.per_class_sizes[1] <= 6
+
+
+def test_per_class_without_labels_warns_and_falls_back():
+    feats = jax.random.normal(jax.random.PRNGKey(0), (60, 8))
+    sel = CraigSelector(CraigConfig(fraction=0.1, per_class=True))
+    with pytest.warns(UserWarning, match="per_class"):
+        cs = sel.select(feats)
+    assert cs.size == 6
+    assert cs.per_class_sizes is None
+
+
+def test_selector_warm_start_parity_and_dedup():
+    feats = jax.random.normal(jax.random.PRNGKey(3), (100, 8))
+    sel = CraigSelector(CraigConfig(fraction=0.2, per_class=False))
+    cold = sel.select(feats)
+    # duplicate entries in the warm prefix are deduped, order preserved
+    init = np.repeat(cold.indices[:10], 2)
+    warm = sel.select(feats, init_selected=init)
+    np.testing.assert_array_equal(cold.indices, warm.indices)
+    np.testing.assert_allclose(cold.weights, warm.weights)
+
+
+def test_selector_warm_start_per_class_parity():
+    feats = jax.random.normal(jax.random.PRNGKey(4), (120, 8))
+    labels = np.array([0] * 60 + [1] * 40 + [2] * 20)
+    sel = CraigSelector(CraigConfig(fraction=0.2, per_class=True))
+    cold = sel.select(feats, labels)
+    warm = sel.select(feats, labels, init_selected=cold.indices[:12])
+    np.testing.assert_array_equal(cold.indices, warm.indices)
+
+
+def test_cover_mode_per_class_unconstrained_by_budget():
+    """cover + per_class: every class grows until its ε target — sizes are
+    ε-driven (no apportionment assert, no class skipped)."""
+    feats = jax.random.normal(jax.random.PRNGKey(5), (60, 6))
+    labels = np.array([0] * 40 + [1] * 20)
+    sel = CraigSelector(CraigConfig(mode="cover", epsilon=30.0, per_class=True))
+    cs = sel.select(feats, labels)
+    assert set(cs.per_class_sizes) == {0, 1}
+    assert all(v >= 1 for v in cs.per_class_sizes.values())
+    assert cs.size == sum(cs.per_class_sizes.values())
+    assert cs.weights.sum() == pytest.approx(60.0)
 
 
 def test_cover_mode_meets_epsilon():

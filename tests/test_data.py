@@ -71,6 +71,18 @@ def test_sampler_state_roundtrip():
         np.testing.assert_array_equal(w1, w2)
 
 
+def test_sampler_versions_track_installs():
+    s = CoresetSampler(n=20, batch=4, seed=0)
+    assert s.version == 0  # full data
+    s.set_coreset(np.arange(10), np.ones(10, np.float32))
+    assert s.version == 1
+    s.stage(np.arange(0, 20, 2), np.ones(10, np.float32))
+    s.install_pending()
+    assert s.version == 2
+    s.clear_coreset()
+    assert s.version == 0 and not s.has_pending
+
+
 def test_batcher_and_prefetcher():
     ds = TokenStream(n_docs=16, seq_len=8, vocab_size=32, seed=0)
     s = CoresetSampler(n=16, batch=4, seed=0)

@@ -75,6 +75,93 @@ def test_stochastic_greedy_quality():
     assert c_s <= 1.35 * c_e  # within 35% of exact coverage
 
 
+def test_stochastic_greedy_no_duplicates_small_pool():
+    """Regression: with a tiny pool and a tiny candidate sample, every
+    sampled candidate is eventually already chosen; the old code re-selected
+    cand[0] forever.  The fallback must keep selections unique."""
+    _, _, sim = _sim(n=8)
+    for seed in range(8):
+        res = fl.stochastic_greedy_fl(sim, 8, jax.random.PRNGKey(seed), 2)
+        idx = np.asarray(res.indices).tolist()
+        assert sorted(idx) == list(range(8)), idx
+        assert float(res.weights.sum()) == pytest.approx(8.0)
+
+
+def test_stochastic_greedy_budget_clamped():
+    _, _, sim = _sim(n=6)
+    res = fl.stochastic_greedy_fl(sim, 10, jax.random.PRNGKey(0), 3)
+    assert len(np.asarray(res.indices)) == 6
+
+
+@pytest.mark.parametrize("prefix", [1, 5, 11])
+def test_warm_start_matches_cold_matrix(prefix):
+    """Prefix consistency: resuming exact greedy from a prefix of the cold
+    selection reproduces the cold selection (indices, gains, weights)."""
+    _, _, sim = _sim()
+    cold = fl.greedy_fl_matrix(sim, 12)
+    warm = fl.greedy_fl_matrix(sim, 12, init_selected=cold.indices[:prefix])
+    np.testing.assert_array_equal(np.asarray(cold.indices), np.asarray(warm.indices))
+    np.testing.assert_allclose(
+        np.asarray(cold.gains), np.asarray(warm.gains), rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(cold.weights), np.asarray(warm.weights)
+    )
+
+
+def test_warm_start_matches_cold_lazy():
+    _, _, sim = _sim()
+    cold = fl.lazy_greedy_fl(np.asarray(sim), 14)
+    warm = fl.lazy_greedy_fl(
+        np.asarray(sim), 14, init_selected=np.asarray(cold.indices)[:7]
+    )
+    np.testing.assert_array_equal(np.asarray(cold.indices), np.asarray(warm.indices))
+    np.testing.assert_allclose(
+        np.asarray(cold.gains), np.asarray(warm.gains), rtol=1e-6
+    )
+
+
+def test_warm_start_matches_cold_features():
+    feats = _sim()[0]
+    cold = fl.greedy_fl_features(feats, 10, gains_impl="jax")
+    warm = fl.greedy_fl_features(
+        feats, 10, gains_impl="jax", init_selected=cold.indices[:4]
+    )
+    np.testing.assert_array_equal(np.asarray(cold.indices), np.asarray(warm.indices))
+
+
+def test_warm_start_matches_cold_sparse():
+    feats, _, _ = _sim(n=90)
+    vals, idx = fl.topk_graph(feats, 32)
+    cold = fl.sparse_greedy_fl(
+        np.asarray(vals), np.asarray(idx), 10, feats=np.asarray(feats)
+    )
+    warm = fl.sparse_greedy_fl(
+        np.asarray(vals), np.asarray(idx), 10, feats=np.asarray(feats),
+        init_selected=np.asarray(cold.indices)[:5],
+    )
+    np.testing.assert_array_equal(np.asarray(cold.indices), np.asarray(warm.indices))
+    np.testing.assert_allclose(
+        np.asarray(cold.weights), np.asarray(warm.weights)
+    )
+
+
+def test_warm_start_full_budget_is_identity():
+    """init_selected of size == budget: the engines replay the prefix and
+    select nothing new (γ/coverage still recomputed on current features)."""
+    _, _, sim = _sim(n=40)
+    cold = fl.greedy_fl_matrix(sim, 6)
+    warm = fl.greedy_fl_matrix(sim, 6, init_selected=cold.indices)
+    np.testing.assert_array_equal(np.asarray(cold.indices), np.asarray(warm.indices))
+    np.testing.assert_allclose(np.asarray(cold.weights), np.asarray(warm.weights))
+
+
+def test_warm_start_longer_than_budget_raises():
+    _, _, sim = _sim(n=20)
+    with pytest.raises(ValueError, match="budget"):
+        fl.greedy_fl_matrix(sim, 3, init_selected=jnp.arange(5))
+
+
 def test_weighted_point_greedy():
     """Point weights act as multiplicities: duplicating a point == weighting."""
     feats = jax.random.normal(jax.random.PRNGKey(3), (40, 4))

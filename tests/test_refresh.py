@@ -1,0 +1,275 @@
+"""Async refresh subsystem: AsyncRefresher lifecycle, sampler double buffer,
+async-vs-sync trainer determinism, checkpoint semantics of a pending refresh.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.craig import CraigConfig
+from repro.core.refresh import AsyncRefresher
+from repro.data.pipeline import CoresetSampler
+from repro.data.synthetic import TokenStream
+from repro.models import ModelConfig, init_params
+from repro.optim import adamw, constant
+from repro.train import Trainer, TrainerConfig
+
+CFG = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=2, d_ff=64, vocab_size=128, logit_chunk=16,
+)
+
+
+def _trainer(tmp, mode="async", seed=0, **kw):
+    ds = TokenStream(n_docs=48, seq_len=24, vocab_size=128, n_topics=6)
+    tcfg = TrainerConfig(
+        batch_size=8,
+        select_every_epochs=kw.pop("select_every_epochs", 1),
+        refresh_mode=mode,
+        checkpoint_dir=str(tmp) if tmp else None,
+        checkpoint_every=kw.pop("checkpoint_every", 100),
+        craig=kw.pop("craig", CraigConfig(fraction=0.5, per_class=False)),
+        **kw,
+    )
+    return Trainer(
+        CFG, tcfg, ds, adamw(constant(2e-3)),
+        lambda: init_params(jax.random.PRNGKey(seed), CFG),
+    )
+
+
+# ---------------------------------------------------------------------------
+# AsyncRefresher unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_refresher_async_publishes_result():
+    done = threading.Event()
+    seen = []
+
+    def work(params):
+        return int(np.asarray(params["x"]).sum()) * 2
+
+    r = AsyncRefresher(work, mode="async",
+                       on_complete=lambda res: (seen.append(res.version),
+                                                done.set()))
+    v = r.submit({"x": np.arange(5)})
+    assert v == 1
+    res = r.collect(block=True)
+    assert res.version == 1 and res.value == 20
+    assert res.wall_time_s >= 0
+    assert done.wait(1.0) and seen == [1]
+    assert r.collect() is None  # single publish slot, popped once
+
+
+def test_refresher_sync_mode_runs_inline():
+    order = []
+    r = AsyncRefresher(lambda p: order.append("work"), mode="sync")
+    r.submit({}, snapshot=False)
+    order.append("after")
+    assert order == ["work", "after"]
+    assert not r.busy
+
+
+def test_refresher_rejects_double_submit():
+    release = threading.Event()
+    r = AsyncRefresher(lambda p: release.wait(5.0), mode="async")
+    r.submit({}, snapshot=False)
+    with pytest.raises(RuntimeError, match="in flight"):
+        r.submit({}, snapshot=False)
+    release.set()
+    r.wait()
+    r.submit({}, snapshot=False)  # fine once drained
+    r.wait()
+
+
+def test_refresher_propagates_worker_error():
+    def boom(params):
+        raise ValueError("proxy extraction exploded")
+
+    r = AsyncRefresher(boom, mode="async")
+    r.submit({}, snapshot=False)
+    with pytest.raises(RuntimeError, match="refresh v1 failed"):
+        r.wait()
+    # error is consumed: the refresher is reusable
+    r2 = AsyncRefresher(boom, mode="sync")
+    with pytest.raises(RuntimeError, match="failed"):
+        r2.submit({}, snapshot=False)
+
+
+def test_refresher_captures_on_complete_failure():
+    """A publish (on_complete) failure must surface at wait() in async mode
+    just like it raises at submit() in sync mode — never vanish on the
+    worker thread while training continues on stale data."""
+
+    def bad_publish(res):
+        raise ValueError("stage rejected the selection")
+
+    r = AsyncRefresher(lambda p: 1, mode="async", on_complete=bad_publish)
+    r.submit({}, snapshot=False)
+    with pytest.raises(RuntimeError, match="failed"):
+        r.wait()
+    rs = AsyncRefresher(lambda p: 1, mode="sync", on_complete=bad_publish)
+    with pytest.raises(RuntimeError, match="failed"):
+        rs.submit({}, snapshot=False)
+
+
+def test_refresher_snapshot_isolates_params():
+    """The worker sees the params at submit time, not later mutations."""
+    got = []
+    hold = threading.Event()
+
+    def work(params):
+        hold.wait(5.0)
+        got.append(np.asarray(params["w"]).copy())
+
+    r = AsyncRefresher(work, mode="async")
+    params = {"w": np.zeros(3)}
+    r.submit(params)
+    params["w"] += 100.0  # trainer keeps updating the live params
+    hold.set()
+    r.wait()
+    np.testing.assert_array_equal(got[0], np.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# Sampler versioned double buffer
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_stage_does_not_disturb_iteration():
+    s = CoresetSampler(n=32, batch=4, seed=0)
+    before = [s.next_batch()[0].tolist() for _ in range(2)]
+    s2 = CoresetSampler(n=32, batch=4, seed=0)
+    s2.stage(np.arange(0, 32, 2), np.ones(16, np.float32))
+    after = [s2.next_batch()[0].tolist() for _ in range(2)]
+    assert before == after  # staged back buffer is invisible until install
+    assert s2.version == 0 and s2.pending_version == 1
+    p = s2.install_pending()
+    assert p["version"] == 1 and s2.version == 1
+    assert s2.active_size == 16
+    assert s2.install_pending() is None
+
+
+def test_sampler_pending_roundtrips_through_state_dict():
+    s1 = CoresetSampler(n=40, batch=5, seed=3)
+    s1.set_coreset(np.arange(0, 40, 2), np.ones(20, np.float32))
+    s1.stage(np.arange(0, 40, 4), 2 * np.ones(10, np.float32),
+             meta={"epsilon_hat": 0.25})
+    s1.next_batch()
+    s2 = CoresetSampler(n=40, batch=5, seed=3)
+    s2.load_state_dict(s1.state_dict())
+    assert s2.version == s1.version and s2.pending_version == s1.pending_version
+    p1, p2 = s1.install_pending(), s2.install_pending()
+    assert p1["version"] == p2["version"]
+    assert p2["meta"] == {"epsilon_hat": 0.25}
+    for _ in range(6):
+        i1, w1 = s1.next_batch()
+        i2, w2 = s2.next_batch()
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_array_equal(w1, w2)
+
+
+# ---------------------------------------------------------------------------
+# Trainer lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_async_matches_sync_step_for_step():
+    """Same install boundaries in both modes → identical training streams
+    (the selection runs from the same params snapshot either way)."""
+    log_a = _trainer(None, mode="async").run(16)
+    log_s = _trainer(None, mode="sync").run(16)
+    steps_a = [m["loss"] for m in log_a if m["event"] == "step"]
+    steps_s = [m["loss"] for m in log_s if m["event"] == "step"]
+    np.testing.assert_allclose(steps_a, steps_s, rtol=1e-6, atol=1e-7)
+    inst_a = [(m["step"], m["version"], m["coreset_size"])
+              for m in log_a if m["event"] == "craig_refresh"]
+    inst_s = [(m["step"], m["version"], m["coreset_size"])
+              for m in log_s if m["event"] == "craig_refresh"]
+    assert inst_a == inst_s and len(inst_a) >= 2
+
+
+def test_async_refresh_stays_off_critical_path():
+    """The first selection overlaps epoch 0: by the install boundary it is
+    already published, so the install stall is (near) zero."""
+    t = _trainer(None, mode="async")
+    log = t.run(8)  # epoch 0 is 6 full-data steps; install lands at step 6
+    refreshes = [m for m in log if m["event"] == "craig_refresh"]
+    assert len(refreshes) == 1
+    assert refreshes[0]["step"] == 6
+    assert refreshes[0]["coreset_size"] == 24
+    assert refreshes[0]["select_time_s"] > 0
+    # the worker had a full epoch of head start; any residual stall is the
+    # thread-join overhead, not the selection itself
+    assert refreshes[0]["install_stall_s"] < refreshes[0]["select_time_s"]
+
+
+def test_checkpoint_between_publish_and_install(tmp_path):
+    """A staged-but-not-installed refresh survives checkpoint-restart."""
+    t1 = _trainer(tmp_path, mode="async", checkpoint_every=4)
+    t1.run(4)  # refresh v1 triggered at step 0; install boundary is step 6
+    t1.ckpt.wait()
+    assert t1.sampler.has_pending  # _save drained the refresher first
+
+    t2 = _trainer(tmp_path, mode="async", seed=9)
+    assert t2.restore_or_init()
+    assert t2.sampler.has_pending
+    assert t2.sampler.pending_version == t1.sampler.pending_version
+    log1 = t1.run(4)  # cumulative log: keep only post-restore steps
+    log2 = t2.run(4)
+    steps1 = [m["loss"] for m in log1 if m["event"] == "step" and m["step"] > 4]
+    steps2 = [m["loss"] for m in log2 if m["event"] == "step"]
+    np.testing.assert_allclose(steps1, steps2, rtol=2e-3, atol=2e-4)
+    refr1 = [(m["step"], m["version"]) for m in log1
+             if m["event"] == "craig_refresh" and m["step"] > 4]
+    refr2 = [(m["step"], m["version"]) for m in log2
+             if m["event"] == "craig_refresh"]
+    assert refr1 == refr2 == [(6, 1)]  # v1 installed at the epoch boundary
+    i1, _ = t1.sampler.next_batch()
+    i2, _ = t2.sampler.next_batch()
+    np.testing.assert_array_equal(i1, i2)
+
+
+def test_restore_keeps_versions_monotone_and_warm_seed(tmp_path):
+    """A restored trainer must not re-issue already-used refresh versions,
+    and must keep the previous selection as its warm-start seed."""
+    t1 = _trainer(tmp_path, mode="async", checkpoint_every=4)
+    t1.run(4)
+    t1.ckpt.wait()
+    assert t1.refresher.version == 1
+
+    t2 = _trainer(tmp_path, mode="async", seed=5)
+    assert t2.restore_or_init()
+    assert t2.refresher.version == 1  # fast-forwarded past the staged v1
+    assert t2._prev_selection is not None
+    np.testing.assert_array_equal(
+        t2._prev_selection.indices, t1._prev_selection.indices
+    )
+    log = t2.run(6)  # install v1 at step 6, trigger+install v2 after
+    versions = [m["version"] for m in log if m["event"] == "craig_refresh"]
+    assert versions == sorted(set(versions))  # strictly increasing
+    assert versions[0] == 1 and versions[-1] >= 2
+    t2.refresher.wait()
+
+
+def test_warm_start_refresh_matches_cold_refresh():
+    """warm_start_fraction only amortizes work — on this tiny problem the
+    proxies barely drift between refreshes, and in all cases the training
+    stream must remain valid: unique indices, Σγ == pool size."""
+    t_warm = _trainer(None, mode="sync", warm_start_fraction=0.5)
+    t_cold = _trainer(None, mode="sync", warm_start_fraction=0.0)
+    t_warm.run(14)
+    t_cold.run(14)
+    for t in (t_warm, t_cold):
+        assert t._prev_selection is not None
+        idx = t._prev_selection.indices
+        assert len(np.unique(idx)) == len(idx)
+        assert t._prev_selection.weights.sum() == pytest.approx(48.0)
+    # first refresh has no previous selection → identical cold start
+    first_warm = [m for m in t_warm.metrics_log
+                  if m["event"] == "craig_refresh"][0]
+    first_cold = [m for m in t_cold.metrics_log
+                  if m["event"] == "craig_refresh"][0]
+    assert first_warm["coreset_size"] == first_cold["coreset_size"] == 24

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.craig import CraigConfig
 from repro.data.synthetic import TokenStream
@@ -88,6 +89,55 @@ def test_no_craig_mode_plain_training():
     log = t.run(6)
     assert not [m for m in log if m["event"] == "craig_refresh"]
     assert t.sampler.active_size == 48
+
+
+def test_refresh_passes_labels_for_per_class_selection():
+    """Regression: the refresh path used to drop labels, silently disabling
+    the paper-§5 per-class mode during training.  With a labeled dataset the
+    installed coreset must be stratified across every topic."""
+    ds = TokenStream(n_docs=48, seq_len=24, vocab_size=128, n_topics=6)
+    tcfg = TrainerConfig(
+        batch_size=8,
+        select_every_epochs=1,
+        craig=CraigConfig(fraction=0.5, per_class=True),
+    )
+    t = Trainer(CFG, tcfg, ds, adamw(constant(2e-3)),
+                lambda: init_params(jax.random.PRNGKey(0), CFG))
+    t.run(8)  # epoch 0 full data, install at step 6
+    refreshes = [m for m in t.metrics_log if m["event"] == "craig_refresh"]
+    assert refreshes and refreshes[0]["coreset_size"] == 24
+    sel = t._prev_selection
+    assert sel is not None and sel.per_class_sizes is not None
+    assert sum(sel.per_class_sizes.values()) == 24
+    # budgets ∝ topic frequency: every topic (8 docs each) is represented
+    assert set(sel.per_class_sizes) == set(range(6))
+    assert all(v == 4 for v in sel.per_class_sizes.values())
+
+
+def test_refresh_warns_when_labels_unavailable():
+    class NoLabelStream:
+        """Index-addressable dataset without a class_labels() accessor."""
+
+        def __init__(self, inner):
+            self._inner = inner
+            self.n_docs = inner.n_docs
+
+        def batch(self, idx):
+            return self._inner.batch(idx)
+
+    ds = NoLabelStream(TokenStream(n_docs=48, seq_len=24, vocab_size=128))
+    tcfg = TrainerConfig(
+        batch_size=8,
+        select_every_epochs=1,
+        craig=CraigConfig(fraction=0.5, per_class=True),
+    )
+    with pytest.warns(UserWarning, match="class_labels"):
+        t = Trainer(CFG, tcfg, ds, adamw(constant(2e-3)),
+                    lambda: init_params(jax.random.PRNGKey(0), CFG))
+    t.run(8)  # still trains; selection falls back to flat mode
+    refreshes = [m for m in t.metrics_log if m["event"] == "craig_refresh"]
+    assert refreshes and refreshes[0]["coreset_size"] == 24
+    assert t._prev_selection.per_class_sizes is None
 
 
 def test_eval_harness_tracks_heldout_loss():
