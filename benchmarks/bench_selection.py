@@ -1,7 +1,8 @@
 """Selection-cost scaling: exact matrix vs lazy vs stochastic vs matrix-free
-vs sparse top-k (§3.2's complexity ladder O(n·r) → O(n) → O(n·k); engine
-guide in README §Engines, EXPERIMENTS.md §Selection), plus coverage-quality
-parity and a large-n sparse run that the dense engines cannot hold.
+vs sparse top-k vs device-resident fused greedy (§3.2's complexity ladder
+O(n·r) → O(n) → O(n·k); engine guide in README §Engines, EXPERIMENTS.md
+§Selection), plus coverage-quality parity and a large-n sparse run that the
+dense engines cannot hold.
 
 Sections
 --------
@@ -9,12 +10,23 @@ Sections
 2. Parity: sparse-vs-exact selection overlap and gradient-estimate error
    (γ-weighted proxy-feature sum vs the full-pool sum — the quantity the
    paper's Eq. 8 bounds) as topk_k grows.
-3. Large-n: sparse engine at REPRO_BENCH_LARGE_N points (default 200_000) —
+3. Device ladder (DESIGN.md §3.6): `greedy_fl_device` vs `greedy_fl_features`
+   on the same pool — q=1 exact-parity gate at moderate n, then wall-clock at
+   n ≥ 20k where block greedy (q>1) amortizes the per-round sweep.  The
+   derived column carries the speedup; the acceptance bar is ≥ 2×.
+4. Large-n: sparse engine at REPRO_BENCH_LARGE_N points (default 200_000) —
    O(n·k) memory, no dense (n, n); dense engines are reported as skipped at
    this scale (a fp32 (n, n) matrix would need n²·4 bytes ≈ 160 GB).
+
+``--smoke`` shrinks pool sizes to CI-on-CPU scale (n=20k for the device
+ladder — the smallest size the acceptance bar speaks about) and every run
+writes ``BENCH_selection.json`` next to the CSV stdout so CI can upload the
+perf trajectory as an artifact.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import time
 
@@ -22,7 +34,17 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core import facility_location as fl
 from repro.core.craig import CraigConfig, CraigSelector
+
+_RECORDS: list[dict] = []
+
+
+def _emit(name: str, us_per_call: float, derived: str) -> None:
+    emit(name, us_per_call, derived)
+    _RECORDS.append(
+        {"name": name, "us_per_call": us_per_call, "derived": derived}
+    )
 
 
 def _select(engine: str, feats: np.ndarray, fraction: float, **kw):
@@ -35,15 +57,26 @@ def _select(engine: str, feats: np.ndarray, fraction: float, **kw):
     return cs, time.perf_counter() - t0
 
 
+def _timed(fn):
+    """(result, seconds) with one same-shape warmup so jit compile time does
+    not pollute the engine comparison."""
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn())
+    return out, time.perf_counter() - t0
+
+
 def _ladder(rng: np.random.RandomState) -> None:
     for n in (512, 2048):
         feats = rng.randn(n, 32).astype(np.float32)
         base_cov = None
-        for engine in ("matrix", "lazy", "stochastic", "features", "sparse"):
+        for engine in (
+            "matrix", "lazy", "stochastic", "features", "sparse", "device"
+        ):
             cs, dt = _select(engine, feats, 0.05, topk_k=min(64, n))
             if engine == "matrix":
                 base_cov = cs.coverage
-            emit(
+            _emit(
                 f"selection_{engine}_n{n}",
                 dt * 1e6,
                 f"coverage_ratio={cs.coverage/max(base_cov,1e-9):.3f};r={cs.size}",
@@ -71,7 +104,7 @@ def _sparse_parity(rng: np.random.RandomState) -> None:
     for k in (16, 64, 256):
         cs, dt = _select("sparse", feats, 0.05, topk_k=k)
         overlap = len(exact_set & set(cs.indices.tolist())) / len(exact_set)
-        emit(
+        _emit(
             f"sparse_parity_k{k}_n{n}",
             dt * 1e6,
             f"overlap={overlap:.3f};grad_err={grad_err(cs):.4f};"
@@ -80,28 +113,102 @@ def _sparse_parity(rng: np.random.RandomState) -> None:
         )
 
 
-def _large_n(rng: np.random.RandomState) -> None:
-    n = int(os.environ.get("REPRO_BENCH_LARGE_N", "200000"))
+def _device_ladder(rng: np.random.RandomState, smoke: bool) -> None:
+    """Device engine vs the features engine (DESIGN.md §3.6).
+
+    Parity gate: at moderate n, device q=1 selections are identical to exact
+    greedy (the features engine).  Throughput gate: at n ≥ 20k, block greedy
+    (q>1) must be ≥ 2× the features engine — the `speedup=` field is the
+    acceptance number.
+    """
+    # -- exact-parity gate (q=1) --
+    n_par = 2048
+    feats = jax.numpy.asarray(rng.randn(n_par, 16).astype(np.float32))
+    r_par = 32
+    ref, _ = _timed(lambda: fl.greedy_fl_features(feats, r_par))
+    for q in (1, 8):
+        res, dt = _timed(lambda q=q: fl.greedy_fl_device(feats, r_par, q=q))
+        ident = bool(
+            np.array_equal(np.asarray(ref.indices), np.asarray(res.indices))
+        )
+        cov = float(res.coverage) / max(float(ref.coverage), 1e-9)
+        _emit(
+            f"device_parity_q{q}_n{n_par}",
+            dt * 1e6,
+            f"identical_to_exact={ident};coverage_ratio={cov:.4f}",
+        )
+        if q == 1:
+            assert ident, "device q=1 must reproduce exact greedy"
+
+    # -- throughput gate (n >= 20k) --
+    n = 20_000 if smoke else int(os.environ.get("REPRO_BENCH_DEVICE_N", 50_000))
+    d = 8
+    r = 16 if smoke else 64
+    q = 16
+    feats = jax.numpy.asarray(rng.randn(n, d).astype(np.float32))
+    _, t_feat = _timed(lambda: fl.greedy_fl_features(feats, r))
+    _emit(f"selection_features_n{n}", t_feat * 1e6, f"r={r}")
+    for qq in (1, q):
+        _, t_dev = _timed(
+            lambda qq=qq: fl.greedy_fl_device(feats, r, q=qq)
+        )
+        _emit(
+            f"selection_device_q{qq}_n{n}",
+            t_dev * 1e6,
+            f"r={r};speedup={t_feat / max(t_dev, 1e-9):.2f}x",
+        )
+    # bf16 tiles: same sweep with half the MXU/memory traffic per tile
+    _, t_bf = _timed(
+        lambda: fl.greedy_fl_device(feats, r, q=q, tile_dtype="bfloat16")
+    )
+    _emit(
+        f"selection_device_q{q}_bf16_n{n}",
+        t_bf * 1e6,
+        f"r={r};speedup={t_feat / max(t_bf, 1e-9):.2f}x",
+    )
+
+
+def _large_n(rng: np.random.RandomState, smoke: bool) -> None:
+    default_n = 30_000 if smoke else 200_000
+    n = int(os.environ.get("REPRO_BENCH_LARGE_N", default_n))
     k = int(os.environ.get("REPRO_BENCH_LARGE_K", "32"))
     feats = rng.randn(n, 16).astype(np.float32)
     # Dense/stochastic both materialize (n, n) sim; report why they're out.
     dense_gb = n * n * 4 / 2**30
-    emit(f"selection_matrix_n{n}", float("nan"), f"skipped_dense_{dense_gb:.0f}GB")
-    emit(f"selection_stochastic_n{n}", float("nan"), f"skipped_dense_{dense_gb:.0f}GB")
+    _emit(f"selection_matrix_n{n}", float("nan"), f"skipped_dense_{dense_gb:.0f}GB")
+    _emit(f"selection_stochastic_n{n}", float("nan"), f"skipped_dense_{dense_gb:.0f}GB")
     cs, dt = _select("sparse", feats, 50 / n, topk_k=k)
-    emit(
+    _emit(
         f"selection_sparse_n{n}",
         dt * 1e6,
         f"r={cs.size};k={k};mem_nk_mb={n*k*8/2**20:.0f}",
     )
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    _RECORDS.clear()
     rng = np.random.RandomState(0)
     _ladder(rng)
     _sparse_parity(rng)
-    _large_n(rng)
+    _device_ladder(rng, smoke)
+    _large_n(rng, smoke)
+    with open("BENCH_selection.json", "w") as f:
+        json.dump(
+            {
+                "benchmark": "bench_selection",
+                "smoke": smoke,
+                "backend": jax.default_backend(),
+                "records": _RECORDS,
+            },
+            f,
+            indent=2,
+        )
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-on-CPU scale: n=20k device ladder, 30k sparse large-n",
+    )
+    run(smoke=ap.parse_args().smoke)

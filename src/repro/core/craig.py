@@ -97,15 +97,28 @@ class CraigConfig:
       metric: dissimilarity in proxy space ('l2' per the paper; 'cosine').
       engine: 'matrix' (exact greedy, dense d matrix), 'lazy' (host lazy
         greedy), 'stochastic' (paper's O(n) stochastic greedy), 'features'
-        (matrix-free blocked greedy; Pallas-accelerated on TPU), or 'sparse'
+        (matrix-free blocked greedy; Pallas-accelerated on TPU), 'sparse'
         (top-k similarity graph + lazy greedy over CSR columns — O(n·k)
-        memory, the engine for pools past ~10⁵ points; README §Engines).
+        memory, the engine for pools past ~10⁵ points), or 'device' (the
+        fully jitted device-resident fused greedy loop — one kernel launch
+        per round, block greedy ``device_q`` winners per round;
+        README §Engines, DESIGN.md §3.6).
       per_class: stratified per-class selection (paper §5).
       stochastic_delta: δ for stochastic-greedy sample size (n/r)·ln(1/δ).
-      gains_impl: 'jax' | 'pallas' — only for engine='features'.
+      gains_impl: 'jax' | 'pallas' — engine='features'; engine='device'
+        also accepts 'auto' (pallas on TPU, jax elsewhere).  The config
+        default is 'jax'; set 'auto' (or 'pallas') to engage the fused
+        fl_gains_argmax kernel on TPU.
       topk_k: neighbors kept per point — only for engine='sparse'.  Larger k
         → closer to exact greedy (k == n is exact); memory scales as n·k.
       topk_impl: 'jax' | 'pallas' graph builder — only for engine='sparse'.
+      device_q: engine='device' winners committed per fused sweep (block
+        greedy); 1 = exact greedy, larger amortizes sweep cost at large
+        budgets.
+      device_stale_tol: lazy-commit floor for engine='device' in (0, 1];
+        1.0 = exact Minoux rule (exact greedy at any q).
+      device_tile_dtype: 'float32' | 'bfloat16' feature tiles for
+        engine='device' (gains always accumulate fp32).
     """
 
     mode: Literal["budget", "cover"] = "budget"
@@ -113,13 +126,16 @@ class CraigConfig:
     epsilon: float = 0.0
     metric: str = "l2"
     engine: Literal[
-        "matrix", "lazy", "stochastic", "features", "sparse"
+        "matrix", "lazy", "stochastic", "features", "sparse", "device"
     ] = "matrix"
     per_class: bool = True
     stochastic_delta: float = 0.01
     gains_impl: str = "jax"
     topk_k: int = 64
     topk_impl: str = "jax"
+    device_q: int = 1
+    device_stale_tol: float = 0.7
+    device_tile_dtype: str = "float32"
     seed: int = 0
 
 
@@ -216,20 +232,26 @@ class CraigSelector:
         output contract as :meth:`select`.  ``feats`` is the global (n, d)
         pool; budgets derive from ``config.fraction``.  With
         ``engine='sparse'`` round 1 runs the top-k graph greedy on every
-        shard, so local pools never materialize dense (n_local, n_local)."""
+        shard, so local pools never materialize dense (n_local, n_local);
+        ``engine='device'`` runs the fused device greedy round 1 — also
+        matrix-free, and exact at ``device_q=1``."""
         from repro.core.distributed import distributed_select
 
         n = feats.shape[0]
         n_shards = int(mesh.shape[axis_name])
         r_final = self._budget(n)
         r_local = max(1, min(n // n_shards, int(r_final * 2 / n_shards) + 1))
-        local_engine = "sparse" if self.config.engine == "sparse" else "matrix"
-        if local_engine == "sparse":
+        if self.config.engine in ("sparse", "device"):
+            local_engine = self.config.engine
             self._check_sparse_config()
+        else:
+            local_engine = "matrix"
         res = distributed_select(
             jnp.asarray(feats, jnp.float32), mesh,
             r_local=r_local, r_final=r_final, axis_name=axis_name,
             local_engine=local_engine, topk_k=self.config.topk_k,
+            device_q=self.config.device_q,
+            device_stale_tol=self.config.device_stale_tol,
         )
         return CoresetSelection(
             indices=np.asarray(res.indices, np.int64),
@@ -263,7 +285,9 @@ class CraigSelector:
 
     def _check_sparse_config(self) -> None:
         if self.config.metric != "l2":
-            raise ValueError("engine='sparse' supports metric='l2' only")
+            raise ValueError(
+                f"engine={self.config.engine!r} supports metric='l2' only"
+            )
         if self.config.mode == "cover":
             raise ValueError(
                 "mode='cover' needs exact prefix coverages; use "
@@ -281,6 +305,18 @@ class CraigSelector:
         if cfg.engine == "features":
             res = fl.greedy_fl_features(
                 feats, budget, gains_impl=cfg.gains_impl, init_selected=init
+            )
+            return self._checked(res.indices, res.weights, res.gains, res.coverage)
+        if cfg.engine == "device":
+            self._check_sparse_config()  # same constraints: l2 + budget mode
+            res = fl.greedy_fl_device(
+                feats,
+                budget,
+                q=cfg.device_q,
+                gains_impl=cfg.gains_impl,
+                tile_dtype=cfg.device_tile_dtype,
+                stale_tol=cfg.device_stale_tol,
+                init_selected=None if init is None else jnp.asarray(init),
             )
             return self._checked(res.indices, res.weights, res.gains, res.coverage)
         if cfg.engine == "sparse":

@@ -12,7 +12,11 @@ two rounds over the data-parallel mesh axis:
       dense (n_local, n_local) greedy for the top-k graph greedy
       (``facility_location.topk_graph`` + ``greedy_fl_topk``), dropping the
       round-1 footprint to O(n_local·k) — the pod-scale path for shards past
-      ~10⁵ points (DESIGN.md §6).
+      ~10⁵ points (DESIGN.md §6).  ``local_engine='device'`` runs the
+      device-resident fused greedy (``greedy_fl_device``, DESIGN.md §3.6)
+      instead: O(n_local·block) memory like sparse, exact selections like
+      matrix, the whole round-1 loop jitted inside the shard_map body with
+      no dense (n_local, n_local) similarity.
 
   Round 2 (merge):  candidate features and γ weights are all-gathered
       (r_total = shards·r_local ≪ n), and a *weighted* greedy FL — each
@@ -101,6 +105,24 @@ def _local_round_sparse(feats: jax.Array, r_local: int, topk_k: int):
     return res.indices, weights
 
 
+def _local_round_device(
+    feats: jax.Array, r_local: int, device_q: int, device_stale_tol: float
+):
+    """Round 1 on one shard via the device-resident fused greedy.
+
+    Exact greedy selections (q=1 or stale_tol=1.0) without a dense
+    (n_local, n_local) block; γ weights come straight from the engine's
+    exact blocked assignment.  Uses the jnp sweep (shard_map-safe on every
+    backend); flip to the Pallas path by jitting the outer shard_map on TPU
+    with gains_impl='pallas'.
+    """
+    res = fl.greedy_fl_device(
+        feats, r_local, q=device_q, gains_impl="jax",
+        stale_tol=device_stale_tol,
+    )
+    return res.indices, res.weights
+
+
 def _merge_round(
     cand_feats: jax.Array, cand_w: jax.Array, r_final: int
 ) -> jax.Array:
@@ -123,6 +145,8 @@ def local_then_merge(
     axis_name: str = "data",
     local_engine: str = "matrix",
     topk_k: int = 64,
+    device_q: int = 1,
+    device_stale_tol: float = 0.7,
 ):
     """shard_map body: runs on one shard with a mapped ``axis_name``.
 
@@ -130,9 +154,13 @@ def local_then_merge(
       feats_sharded: (n_local, d) this shard's proxy features (fp32).
       r_local: round-1 budget per shard.
       r_final: final global budget.
-      local_engine: 'matrix' (dense round-1) or 'sparse' (top-k graph
-        round-1, O(n_local·topk_k) memory).
+      local_engine: 'matrix' (dense round-1), 'sparse' (top-k graph
+        round-1, O(n_local·topk_k) memory), or 'device' (fused device
+        greedy, exact + matrix-free).
       topk_k: neighbors per point for local_engine='sparse'.
+      device_q: block-greedy winners per round for local_engine='device'.
+      device_stale_tol: lazy-commit floor for local_engine='device'
+        (1.0 = exact at any q).
     Returns:
       (global_indices (r_final,), weights (r_final,), coverage ()).
     """
@@ -142,6 +170,10 @@ def local_then_merge(
     if local_engine == "sparse":
         local_idx, local_w = _local_round_sparse(
             feats_sharded, r_local, topk_k
+        )
+    elif local_engine == "device":
+        local_idx, local_w = _local_round_device(
+            feats_sharded, r_local, device_q, device_stale_tol
         )
     elif local_engine == "matrix":
         local_idx, local_w = _local_round(feats_sharded, r_local)
@@ -180,16 +212,21 @@ def distributed_select(
     axis_name: str = "data",
     local_engine: str = "matrix",
     topk_k: int = 64,
+    device_q: int = 1,
+    device_stale_tol: float = 0.7,
 ) -> DistributedSelection:
     """Run two-round distributed selection over ``mesh[axis_name]``.
 
     ``feats`` is (n, d) with n divisible by the axis size; it is sharded over
     the first dimension.  Output indices/weights are fully replicated.
-    ``local_engine='sparse'`` keeps round 1 at O(n_local·topk_k) memory.
+    ``local_engine='sparse'`` keeps round 1 at O(n_local·topk_k) memory;
+    ``local_engine='device'`` keeps it matrix-free *and* exact (the fused
+    greedy of DESIGN.md §3.6).
     """
     body = partial(
         local_then_merge, r_local=r_local, r_final=r_final,
         axis_name=axis_name, local_engine=local_engine, topk_k=topk_k,
+        device_q=device_q, device_stale_tol=device_stale_tol,
     )
     fn = compat_shard_map(
         body, mesh=mesh, in_specs=(P(axis_name, None),),

@@ -15,6 +15,12 @@ onto the training critical path.  This module moves it off:
          │                          │
     training continues on the *stale* coreset in between (double buffering)
 
+The selection inside a refresh is engine-agnostic (``CraigConfig.engine``);
+with ``engine='device'`` the greedy loop is a single jitted device program
+(DESIGN.md §3.6), so the worker thread spends its time in one XLA dispatch
+instead of a per-round host loop — the cheapest engine to run concurrently
+with training, since it never contends for the host between rounds.
+
 ``AsyncRefresher`` owns the worker thread and the publish slot; the trainer
 owns the install points.  ``mode='sync'`` runs the identical lifecycle with
 the work inline at submit time — same install boundaries, so sync and async

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused facility-location marginal gains (CRAIG hot-spot).
+"""Pallas TPU kernels: fused facility-location marginal gains (CRAIG hot-spot).
 
 One greedy step of CRAIG (paper Alg. 1 line 3) evaluates, for every candidate
 e, the marginal gain
@@ -6,7 +6,7 @@ e, the marginal gain
     gain(e) = Σ_i relu( s_ie − cur_max_i ),     s_ie = d_max − ‖x_i − x_e‖
 
 over the whole pool i ∈ V.  Done naively this materializes an (n, m)
-similarity matrix in HBM per step.  This kernel fuses
+similarity matrix in HBM per step.  ``fl_gains_pallas`` fuses
 
     pairwise-distance (MXU matmul x·eᵀ + rank-1 squared-norm terms)
       → similarity → subtract running max → relu → reduce over n
@@ -15,20 +15,39 @@ entirely in VMEM, tiled (block_n × block_m), accumulating the n-reduction
 across grid steps into the (1, block_m) output tile.  Arithmetic intensity is
 that of a matmul with a free epilogue — the MXU term dominates.
 
+``fl_gains_argmax_pallas`` (DESIGN.md §2, §3.6) extends the same sweep with a
+fused argmax epilogue for the device-resident greedy engine: the gains tile
+accumulates in a VMEM scratch buffer instead of the output, and on the last
+n-step each candidate block reduces itself to a single
+``(best_gain, best_index)`` partial (max-reduce + first-hit index extraction —
+no argmax primitive, same idiom as ``topk_sim``).  One kernel launch per
+greedy round replaces the gains-materialize + separate argmax pair; the
+host-side finalize is an O(m/block_m) reduction over the partials.
+Already-selected candidates are excluded *inside* the epilogue via an
+additive ``penalty`` row (−1e30 on chosen/padded columns), so no masked
+(1, m) gains vector ever exists.
+
 Inputs are pre-arranged by :mod:`repro.kernels.ops`:
-  x      (n, d)   pool proxy features (fp32), d padded to a lane multiple
-  e      (m, d)   candidate features
-  madj   (n, 1)   d_max − cur_max_i   (similarity headroom per point)
-  sqx    (n, 1)   ‖x_i‖²
-  sqe    (1, m)   ‖x_e‖²
-Output:
-  gains  (1, m)   fp32
+  x      (n, d)   pool proxy features (fp32 or bf16), d padded to a lane
+                  multiple
+  e      (m, d)   candidate features (same dtype as x)
+  madj   (n, 1)   d_max − cur_max_i   (similarity headroom per point, fp32)
+  sqx    (n, 1)   ‖x_i‖²  (fp32)
+  sqe    (1, m)   ‖x_e‖²  (fp32)
+  penalty (1, m)  0 for live candidates, −1e30 for chosen/padded columns
+                  (argmax variant only)
+Outputs:
+  gains  (1, m)   fp32                       (fl_gains_pallas)
+  gains (1, m) + best_g (1, m_blocks) fp32 + best_i (1, m_blocks) int32
+                                             (fl_gains_argmax_pallas)
 
 TPU mapping notes (DESIGN.md §2): block shapes default to (512, 256) with the
 full proxy dim d resident (d ≤ 8·128 after padding); all matmul dims are
 multiples of 128 so the 128×128 MXU tiles are dense.  The n-grid axis is the
-inner (fastest) axis so the output tile stays resident while the reduction
-accumulates ("revisiting" accumulation pattern).
+inner (fastest) axis so the output tile (or the scratch accumulator) stays
+resident while the reduction accumulates ("revisiting" accumulation pattern).
+Tiles may be bf16 (MXU-native) while distances, gains, and the running
+accumulation stay fp32 (``preferred_element_type``).
 """
 from __future__ import annotations
 
@@ -42,7 +61,18 @@ from repro.kernels._compat import tpu_params
 
 _TPU_PARAMS = tpu_params("parallel", "arbitrary")
 
-__all__ = ["fl_gains_pallas"]
+__all__ = ["fl_gains_pallas", "fl_gains_argmax_pallas"]
+
+
+def _first_hit(values: jax.Array, target: jax.Array) -> jax.Array:
+    """Lowest column position where ``values`` equals per-row ``target``.
+
+    values: (r, w); target: (r, 1).  Returns (r, 1) int32 positions — the
+    no-argmax-primitive idiom shared with ``topk_sim`` (DESIGN.md §2).
+    """
+    w = values.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, values.shape, 1)
+    return jnp.min(jnp.where(values == target, pos, w), axis=1, keepdims=True)
 
 
 def _fl_gains_kernel(x_ref, e_ref, madj_ref, sqx_ref, sqe_ref, out_ref):
@@ -120,3 +150,114 @@ def fl_gains_pallas(
         sqe.astype(jnp.float32),
     )
     return out[0]
+
+
+def _make_argmax_kernel(block_m: int):
+    def kernel(
+        x_ref, e_ref, madj_ref, sqx_ref, sqe_ref, pen_ref,
+        gains_ref, bg_ref, bi_ref,
+    ):
+        """Grid = (m_blocks, n_blocks); n inner.  The gains tile accumulates
+        across the n sweep ("revisiting"); the last n step fuses the per-block
+        argmax epilogue and emits this candidate block's (best_gain, best_idx)
+        partial."""
+        mi = pl.program_id(0)
+        ni = pl.program_id(1)
+
+        @pl.when(ni == 0)
+        def _init():
+            gains_ref[...] = jnp.zeros_like(gains_ref)
+
+        dots = jax.lax.dot_general(
+            x_ref[...],
+            e_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bn, bm) fp32 even for bf16 tiles
+        d2 = sqx_ref[...] + sqe_ref[...] - 2.0 * dots
+        dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+        contrib = jnp.maximum(madj_ref[...] - dist, 0.0)
+        gains_ref[...] += jnp.sum(contrib, axis=0, keepdims=True)
+
+        @pl.when(ni == pl.num_programs(1) - 1)
+        def _epilogue():
+            total = gains_ref[...] + pen_ref[...]  # (1, bm)
+            best = jnp.max(total, axis=1, keepdims=True)  # (1, 1)
+            pos = _first_hit(total, best)  # (1, 1) int32, lowest tie
+            bg_ref[...] = best
+            bi_ref[...] = mi * block_m + pos
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def fl_gains_argmax_pallas(
+    x: jax.Array,
+    e: jax.Array,
+    madj: jax.Array,
+    sqx: jax.Array,
+    sqe: jax.Array,
+    penalty: jax.Array,
+    *,
+    block_n: int = 512,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused gains sweep + per-block argmax partials (device greedy engine).
+
+    Args:
+      x: (n, d) fp32/bf16, n % block_n == 0, d % 128 == 0.
+      e: (m, d) candidates, m % block_m == 0, same dtype as x.
+      madj: (n, 1) fp32 = d_max − cur_max (−1e30 on padded pool rows).
+      sqx: (n, 1) fp32 squared norms of x.
+      sqe: (1, m) fp32 squared norms of e.
+      penalty: (1, m) fp32 — 0 for live candidates, −1e30 for columns that
+        must not win (already-selected or padding).
+    Returns:
+      (gains (m,) fp32, best_g (m_blocks,) fp32, best_i (m_blocks,) int32):
+      the full un-penalized gains vector (the device engine keeps it as its
+      Minoux upper bounds between sweeps) plus each candidate block's top
+      penalized gain and its global candidate index (lowest index on ties).
+      The caller finalizes the winner with an O(m_blocks) argmax / top-k.
+    """
+    n, d = x.shape
+    m = e.shape[0]
+    assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
+    assert x.dtype == e.dtype, (x.dtype, e.dtype)
+    n_blocks = n // block_n
+    m_blocks = m // block_m
+    grid = (m_blocks, n_blocks)
+    gains, bg, bi = pl.pallas_call(
+        _make_argmax_kernel(block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda mi, ni: (ni, 0)),
+            pl.BlockSpec((block_m, d), lambda mi, ni: (mi, 0)),
+            pl.BlockSpec((block_n, 1), lambda mi, ni: (ni, 0)),
+            pl.BlockSpec((block_n, 1), lambda mi, ni: (ni, 0)),
+            pl.BlockSpec((1, block_m), lambda mi, ni: (0, mi)),
+            pl.BlockSpec((1, block_m), lambda mi, ni: (0, mi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m), lambda mi, ni: (0, mi)),
+            pl.BlockSpec((1, 1), lambda mi, ni: (0, mi)),
+            pl.BlockSpec((1, 1), lambda mi, ni: (0, mi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, m), jnp.float32),
+            jax.ShapeDtypeStruct((1, m_blocks), jnp.float32),
+            jax.ShapeDtypeStruct((1, m_blocks), jnp.int32),
+        ],
+        compiler_params=_TPU_PARAMS,
+        interpret=interpret,
+    )(
+        x,
+        e,
+        madj.astype(jnp.float32),
+        sqx.astype(jnp.float32),
+        sqe.astype(jnp.float32),
+        penalty.astype(jnp.float32),
+    )
+    return gains[0], bg[0], bi[0]

@@ -18,6 +18,7 @@ from repro.kernels import topk_sim as _tk
 
 __all__ = [
     "fl_gains",
+    "fl_gains_argmax",
     "pairwise_l2",
     "ce_proxy",
     "topk_sim",
@@ -81,6 +82,79 @@ def fl_gains(
         xp, ep, madj, sqxp, sqep, block_n=bn, block_m=bm, interpret=interpret
     )
     return out[:m]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_n", "block_m", "tile_dtype", "interpret"),
+)
+def fl_gains_argmax(
+    x: jax.Array,
+    e: jax.Array,
+    cur_max: jax.Array,
+    sqx: jax.Array,
+    sqe: jax.Array,
+    d_max: jax.Array,
+    chosen_e: jax.Array,
+    *,
+    block_n: int = 512,
+    block_m: int = 256,
+    tile_dtype: str = "float32",
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused greedy round: gains sweep + per-block argmax partials.
+
+    For the device-resident greedy engine (DESIGN.md §3.6): a single kernel
+    launch computes every candidate's marginal gain *and* reduces each
+    candidate block to a ``(best_gain, best_index)`` partial, with
+    already-selected candidates excluded inside the kernel.  The caller
+    finalizes the winner over the O(m/block_m) partials; the full gains
+    vector rides along as the engine's Minoux upper bounds between sweeps
+    (block-greedy mode).
+
+    Padding contract (DESIGN.md §2): pool rows pad with madj = −1e30 → relu 0
+    (inert through the reduction); candidate padding and ``chosen_e`` columns
+    carry an additive −1e30 penalty so they can only win a block in which
+    every candidate is dead — such blocks report best_gain ≤ −1e29 and the
+    caller must ignore them (real gains are always ≥ 0).
+
+    Args:
+      x: (n, d) pool features.
+      e: (m, d) candidate features.
+      cur_max: (n,) fp32 running cover state max_{j∈S} s_ij.
+      sqx: (n,) fp32 squared norms of x.
+      sqe: (m,) fp32 squared norms of e.
+      d_max: traced fp32 scalar similarity offset.
+      chosen_e: (m,) bool — candidates to exclude (already selected).
+      tile_dtype: 'float32' | 'bfloat16' — dtype of the feature tiles fed to
+        the MXU; distances/gains always accumulate in fp32.
+    Returns:
+      (gains (m,) fp32, part_g (m_blocks,) fp32, part_i (m_blocks,) int32) —
+      every candidate's un-penalized gain, plus per-block best penalized
+      gain and its candidate index (lowest index on ties).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    td = jnp.dtype(tile_dtype)
+    if td not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
+        raise ValueError(f"unsupported tile_dtype {tile_dtype!r}")
+    n, d = x.shape
+    m = e.shape[0]
+    bn = min(block_n, max(_LANE, 1 << (n - 1).bit_length()))
+    bm = min(block_m, max(_LANE, 1 << (m - 1).bit_length()))
+    xp = _pad_dim(_pad_dim(x.astype(td), 0, bn), 1, _LANE)
+    ep = _pad_dim(_pad_dim(e.astype(td), 0, bm), 1, _LANE)
+    madj = d_max - cur_max.astype(jnp.float32)
+    madj = _pad_dim(madj.reshape(n, 1), 0, bn, value=-1e30)
+    sqxp = _pad_dim(sqx.astype(jnp.float32).reshape(n, 1), 0, bn)
+    sqep = _pad_dim(sqe.astype(jnp.float32).reshape(1, m), 1, bm)
+    pen = jnp.where(chosen_e, -1e30, 0.0).astype(jnp.float32)
+    pen = _pad_dim(pen.reshape(1, m), 1, bm, value=-1e30)
+    gains, part_g, part_i = _fl.fl_gains_argmax_pallas(
+        xp, ep, madj, sqxp, sqep, pen,
+        block_n=bn, block_m=bm, interpret=interpret,
+    )
+    return gains[:m], part_g, part_i
 
 
 @functools.partial(

@@ -14,7 +14,10 @@ Responsibilities (DESIGN.md §4):
     removed from the critical path (benchmarks/bench_refresh.py);
   * warm-started selection: each refresh seeds the greedy engines with the
     previous selection's high-gain prefix (``warm_start_fraction``), whose
-    cover state is replayed in O(r₀·n) instead of re-derived from scratch;
+    cover state is replayed in O(r₀·n) instead of re-derived from scratch —
+    all six engines honor the prefix, including the device-resident fused
+    greedy (``craig.engine='device'``, DESIGN.md §3.6), whose whole
+    re-selection runs as one jitted device program on the worker thread;
   * per-class stratification (paper §5): pool class labels are extracted
     alongside proxies (``dataset.class_labels``) and threaded into
     ``CraigSelector.select`` whenever ``craig.per_class=True``;

@@ -19,6 +19,8 @@ from repro.models import (
 from repro.optim import adamw, constant
 from repro.train import make_train_step
 
+pytestmark = pytest.mark.tier2  # all-arch sweep, 5–50 s per family
+
 
 def _batch(cfg, B=2, T=16, seed=0):
     key = jax.random.PRNGKey(seed)

@@ -109,6 +109,7 @@ def test_selector_warm_start_per_class_parity():
     np.testing.assert_array_equal(cold.indices, warm.indices)
 
 
+@pytest.mark.tier2
 def test_cover_mode_per_class_unconstrained_by_budget():
     """cover + per_class: every class grows until its ε target — sizes are
     ε-driven (no apportionment assert, no class skipped)."""

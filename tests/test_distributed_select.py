@@ -9,6 +9,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.tier2  # 8-device subprocess run, >60 s
+
 SCRIPT = textwrap.dedent(
     """
     import os
@@ -63,7 +67,27 @@ SCRIPT = textwrap.dedent(
                                     topk_k=32, per_class=False))
     cs = sel.select_distributed(feats, mesh)
     assert cs.weights.sum() == 1024.0, cs.weights.sum()
-    print("DISTRIBUTED_OK", ratio, sp_ratio)
+
+    # device round-1: matrix-free AND exact — identical selections to the
+    # dense matrix round-1 (both are exact greedy on each shard)
+    dv = distributed_select(feats, mesh, r_local=16, r_final=32,
+                            local_engine="device")
+    assert np.array_equal(np.asarray(dv.indices), np.asarray(res.indices))
+    assert np.asarray(dv.weights).sum() == 1024.0
+    # block greedy (device_q=4) keeps round-1 quality: same contract at the
+    # same r_local as the dense run, coverage parity with it
+    dv4 = distributed_select(feats, mesh, r_local=16, r_final=32,
+                             local_engine="device", device_q=4)
+    assert np.asarray(dv4.weights).sum() == 1024.0
+    dv_ratio = float(dv4.coverage) / max(cen.coverage, 1e-9)
+    assert dv_ratio < 1.5, dv_ratio
+    # selector-level wiring for engine='device' (same r_local heuristic as
+    # the sparse selector path; contract checks only)
+    sel_dv = CraigSelector(CraigConfig(fraction=32 / 1024, engine="device",
+                                       device_q=4, per_class=False))
+    cs_dv = sel_dv.select_distributed(feats, mesh)
+    assert cs_dv.weights.sum() == 1024.0, cs_dv.weights.sum()
+    print("DISTRIBUTED_OK", ratio, sp_ratio, dv_ratio)
     """
 )
 

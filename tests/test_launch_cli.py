@@ -3,6 +3,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.tier2  # subprocess CLI round-trips, >10 s
+
 ENV = dict(os.environ)
 ENV["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
 

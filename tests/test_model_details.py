@@ -32,6 +32,7 @@ def test_chunk_size_invariance():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=1e-3)
 
 
+@pytest.mark.tier2
 @pytest.mark.parametrize("policy", ["nothing", "dots", "full"])
 def test_remat_policy_value_invariance(policy):
     """Remat changes memory/recompute, never the loss value or gradients."""
@@ -57,6 +58,7 @@ def test_remat_policy_value_invariance(policy):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-2, atol=2e-3)
 
 
+@pytest.mark.tier2
 def test_craig_weights_scale_gradients():
     """γ-weighted loss == reweighting per-example gradient contributions
     (the paper's per-element stepsize semantics under linear scaling)."""
@@ -80,6 +82,7 @@ def test_craig_weights_scale_gradients():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-4)
 
 
+@pytest.mark.tier2
 def test_scan_vs_unrolled_stack_equivalence():
     """scan_layers=False (roofline probes) computes the identical function."""
     base = dict(

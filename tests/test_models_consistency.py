@@ -13,6 +13,8 @@ from repro.models import (
 )
 from repro.models.model import COMPUTE_DTYPE, _unembed_matrix
 
+pytestmark = pytest.mark.tier2  # per-family decode sweeps, 18–45 s each
+
 CFGS = {
     "dense": ModelConfig(
         name="dense", family="dense", n_layers=3, d_model=64, n_heads=4,

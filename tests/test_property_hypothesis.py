@@ -91,6 +91,48 @@ def test_weights_partition_the_pool(n, seed, r):
     assert (w >= 0).all()
 
 
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(n=st.sampled_from([6, 9, 13]), seed=st.integers(0, 100), data=st.data())
+def test_all_engines_equivalent_at_full_k(n, seed, data):
+    """Engine equivalence (DESIGN.md §3): with the graph at k = n and the
+    stochastic sample at its δ→0 limit, every engine — dense matrix, lazy,
+    stochastic, features, sparse (host), topk (JAX), device (q=1) — is exact
+    greedy: identical selections, unique indices, non-increasing gains, and
+    Σγ == n."""
+    r = data.draw(st.integers(1, n))
+    rng = np.random.RandomState(seed)
+    feats = jnp.asarray(rng.randn(n, 4).astype(np.float32))
+    from repro.core.craig import pairwise_distances
+
+    dist = pairwise_distances(feats)
+    sim = jnp.max(dist) + 1e-6 - dist
+    base = fl.greedy_fl_matrix(sim, r)
+    vals, idx = fl.topk_graph(feats, n)
+    results = {
+        "matrix": base,
+        "lazy": fl.lazy_greedy_fl(np.asarray(sim), r),
+        "stochastic": fl.stochastic_greedy_fl(
+            sim, r, jax.random.PRNGKey(0), n
+        ),
+        "features": fl.greedy_fl_features(feats, r),
+        "topk": fl.greedy_fl_topk(vals, idx, r),
+        "sparse": fl.sparse_greedy_fl(
+            np.asarray(vals), np.asarray(idx), r, feats=np.asarray(feats)
+        ),
+        "device": fl.greedy_fl_device(feats, r, q=1),
+    }
+    base_idx = np.asarray(base.indices)
+    for name, res in results.items():
+        sel = np.asarray(res.indices)
+        np.testing.assert_array_equal(base_idx, sel, err_msg=name)
+        assert len(np.unique(sel)) == r, name
+        g = np.asarray(res.gains)
+        assert np.all(g[:-1] >= g[1:] - 1e-3), (name, g)
+        assert float(np.asarray(res.weights).sum()) == pytest.approx(
+            float(n), rel=1e-5
+        ), name
+
+
 @_settings
 @given(n=st.integers(8, 30), seed=st.integers(0, 100))
 def test_full_budget_zero_coverage(n, seed):

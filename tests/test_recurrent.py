@@ -85,6 +85,7 @@ def test_rglru_forgetting():
     assert norms[-1] < norms[2]
 
 
+@pytest.mark.tier2
 def test_gradients_flow():
     """All three cells backprop without NaNs."""
     for make in (

@@ -176,6 +176,7 @@ def test_sampler_pending_roundtrips_through_state_dict():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.tier2
 def test_async_matches_sync_step_for_step():
     """Same install boundaries in both modes → identical training streams
     (the selection runs from the same params snapshot either way)."""

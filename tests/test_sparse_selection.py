@@ -33,7 +33,14 @@ def _clustered(n=200, d=8, n_clusters=8, seed=1, spread=10.0, sigma=0.3):
 # -- top-k builder correctness ------------------------------------------------
 
 
-@pytest.mark.parametrize("n,d,k", [(64, 8, 4), (150, 9, 17), (300, 33, 64)])
+@pytest.mark.parametrize(
+    "n,d,k",
+    [
+        (64, 8, 4),
+        (150, 9, 17),
+        pytest.param(300, 33, 64, marks=pytest.mark.tier2),
+    ],
+)
 def test_topk_kernel_vs_dense_ref(n, d, k):
     x = _feats(n, d, seed=n + k)
     d_max = 2.0 * jnp.sqrt(jnp.max(jnp.sum(x * x, 1))) + 1e-6

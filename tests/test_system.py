@@ -11,6 +11,10 @@ from repro.models import ModelConfig, init_params, loss_fn
 from repro.optim import adamw, constant
 from repro.train import Trainer, TrainerConfig
 
+import pytest
+
+pytestmark = pytest.mark.tier2  # end-to-end pipelines, >10 s each
+
 
 def test_lm_craig_pipeline_beats_random_subset():
     """Same-budget comparison on a tiny LM: training on the CRAIG coreset

@@ -23,7 +23,7 @@ def _trainer(tmp, seed=0, **kw):
         select_every_epochs=kw.pop("select_every_epochs", 2),
         checkpoint_dir=str(tmp) if tmp else None,
         checkpoint_every=kw.pop("checkpoint_every", 4),
-        craig=CraigConfig(fraction=0.5, per_class=False),
+        craig=kw.pop("craig", CraigConfig(fraction=0.5, per_class=False)),
         **kw,
     )
     return Trainer(
@@ -40,6 +40,43 @@ def test_loss_decreases_with_craig(tmp_path):
     assert len(refreshes) >= 1
     assert refreshes[0]["coreset_size"] == 24  # 50% of 48
     assert np.mean(steps[-4:]) < np.mean(steps[:4])
+
+
+def test_device_engine_refresh_during_training():
+    """engine='device' rides the async refresh path end to end: the fused
+    device greedy runs on the worker thread, selections install at epoch
+    boundaries, and the warm-start prefix threads through (DESIGN.md §3.6)."""
+    t = _trainer(
+        None,
+        craig=CraigConfig(
+            fraction=0.5, per_class=False, engine="device", device_q=4
+        ),
+        refresh_mode="async",
+        warm_start_fraction=0.5,
+    )
+    log = t.run(14)
+    refreshes = [m for m in log if m["event"] == "craig_refresh"]
+    assert len(refreshes) >= 1
+    assert refreshes[0]["coreset_size"] == 24
+    # the warm-start seed was recorded for the next refresh
+    assert t._prev_selection is not None
+    assert len(np.unique(t._prev_selection.indices)) == 24
+
+
+def test_device_engine_sync_equals_async_refresh():
+    """refresh_mode sync/async remain step-for-step replicas with the
+    device engine doing the selection."""
+    logs = {}
+    for mode in ("sync", "async"):
+        t = _trainer(
+            None,
+            craig=CraigConfig(fraction=0.5, per_class=False, engine="device"),
+            refresh_mode=mode,
+        )
+        logs[mode] = [
+            m["loss"] for m in t.run(10) if m["event"] == "step"
+        ]
+    np.testing.assert_allclose(logs["sync"], logs["async"], rtol=1e-6)
 
 
 def test_preemption_saves_and_restart_resumes(tmp_path):
@@ -140,6 +177,7 @@ def test_refresh_warns_when_labels_unavailable():
     assert t._prev_selection.per_class_sizes is None
 
 
+@pytest.mark.tier2
 def test_eval_harness_tracks_heldout_loss():
     ds_train = TokenStream(n_docs=48, seq_len=24, vocab_size=128, n_topics=6)
     ds_eval = TokenStream(n_docs=16, seq_len=24, vocab_size=128, n_topics=6,
