@@ -1,15 +1,21 @@
-"""Selection-cost scaling: exact matrix vs lazy vs stochastic vs matrix-free
-vs sparse top-k vs device-resident fused greedy (§3.2's complexity ladder
-O(n·r) → O(n) → O(n·k); engine guide in README §Engines, EXPERIMENTS.md
-§Selection), plus coverage-quality parity and a large-n sparse run that the
-dense engines cannot hold.
+"""Selection-cost scaling across every registered engine (§3.2's complexity
+ladder O(n·r) → O(n) → O(n·k); engine guide in README §Engines,
+EXPERIMENTS.md §Selection), plus coverage-quality parity and a large-n
+sparse run that the dense engines cannot hold.
+
+Engines come from the SelectionEngine registry (``repro.core.engines``):
+the ladder iterates ``list_engines()`` — a newly registered engine shows up
+here with zero bench edits — and every record stamps the resolved
+``EngineConfig`` dict into ``BENCH_selection.json``, so the perf trajectory
+records exactly what ran.
 
 Sections
 --------
-1. Ladder: every engine at moderate n, coverage ratio vs exact greedy.
+1. Ladder: every registered engine at moderate n, coverage ratio vs exact
+   greedy (the matrix engine anchors the baseline).
 2. Parity: sparse-vs-exact selection overlap and gradient-estimate error
    (γ-weighted proxy-feature sum vs the full-pool sum — the quantity the
-   paper's Eq. 8 bounds) as topk_k grows.
+   paper's Eq. 8 bounds) as SparseConfig.k grows.
 3. Device ladder (DESIGN.md §3.6): `greedy_fl_device` vs `greedy_fl_features`
    on the same pool — q=1 exact-parity gate at moderate n, then wall-clock at
    n ≥ 20k where block greedy (q>1) amortizes the per-round sweep.  The
@@ -18,10 +24,12 @@ Sections
    O(n·k) memory, no dense (n, n); dense engines are reported as skipped at
    this scale (a fp32 (n, n) matrix would need n²·4 bytes ≈ 160 GB).
 
-``--smoke`` shrinks pool sizes to CI-on-CPU scale (n=20k for the device
-ladder — the smallest size the acceptance bar speaks about) and every run
-writes ``BENCH_selection.json`` next to the CSV stdout so CI can upload the
-perf trajectory as an artifact.
+``--engine SPEC`` (repeatable; typed form, e.g. ``device:q=16`` or
+``sparse:k=64``) replaces the full suite with a focused ladder over the
+given configs at ``--n`` points.  ``--smoke`` shrinks pool sizes to
+CI-on-CPU scale (n=20k for the device ladder — the smallest size the
+acceptance bar speaks about).  Every run writes ``BENCH_selection.json``
+next to the CSV stdout so CI can upload the perf trajectory as an artifact.
 """
 from __future__ import annotations
 
@@ -36,20 +44,42 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core import facility_location as fl
 from repro.core.craig import CraigConfig, CraigSelector
+from repro.core.engines import (
+    DeviceConfig,
+    EngineConfig,
+    SparseConfig,
+    get_engine,
+    list_engines,
+    parse_engine_spec,
+)
 
 _RECORDS: list[dict] = []
 
 
-def _emit(name: str, us_per_call: float, derived: str) -> None:
+def _emit(
+    name: str, us_per_call: float, derived: str,
+    engine: EngineConfig | None = None,
+) -> None:
     emit(name, us_per_call, derived)
     _RECORDS.append(
-        {"name": name, "us_per_call": us_per_call, "derived": derived}
+        {
+            "name": name,
+            "us_per_call": us_per_call,
+            "derived": derived,
+            "engine": None if engine is None else engine.to_dict(),
+        }
     )
 
 
-def _select(engine: str, feats: np.ndarray, fraction: float, **kw):
+def _default_config(name: str) -> EngineConfig:
+    """Registry default config — no per-engine special-casing, so a newly
+    registered engine rides the ladder with zero bench edits."""
+    return get_engine(name).config_cls()
+
+
+def _select(engine_cfg: EngineConfig, feats: np.ndarray, fraction: float):
     sel = CraigSelector(
-        CraigConfig(fraction=fraction, engine=engine, per_class=False, **kw)
+        CraigConfig(fraction=fraction, engine=engine_cfg, per_class=False)
     )
     t0 = time.perf_counter()
     cs = sel.select(feats)
@@ -67,20 +97,53 @@ def _timed(fn):
 
 
 def _ladder(rng: np.random.RandomState) -> None:
+    # matrix first: it anchors the coverage-ratio baseline
+    names = sorted(list_engines(), key=lambda s: s != "matrix")
     for n in (512, 2048):
         feats = rng.randn(n, 32).astype(np.float32)
         base_cov = None
-        for engine in (
-            "matrix", "lazy", "stochastic", "features", "sparse", "device"
-        ):
-            cs, dt = _select(engine, feats, 0.05, topk_k=min(64, n))
-            if engine == "matrix":
+        for name in names:
+            ec = _default_config(name)
+            cs, dt = _select(ec, feats, 0.05)
+            if name == "matrix":
                 base_cov = cs.coverage
             _emit(
-                f"selection_{engine}_n{n}",
+                f"selection_{name}_n{n}",
                 dt * 1e6,
                 f"coverage_ratio={cs.coverage/max(base_cov,1e-9):.3f};r={cs.size}",
+                engine=ec,
             )
+
+
+def _spec_ladder(specs: list[EngineConfig], n: int) -> None:
+    """Focused --engine run: the given typed configs on one (n, 32) pool.
+
+    The exact-greedy coverage baseline is only computed where the dense
+    matrix engine is cheap (n ≤ 4096) — a focused run at device-ladder
+    scale must not pay the O(r·n²) dense sweep it exists to avoid — and is
+    reused from the spec list when the user already asked for matrix.
+    """
+    rng = np.random.RandomState(0)
+    feats = rng.randn(n, 32).astype(np.float32)
+    results = [(ec,) + _select(ec, feats, 0.05) for ec in specs]
+    base_cov = next(
+        (cs.coverage for ec, cs, _ in results if ec == _default_config("matrix")),
+        None,
+    )
+    if base_cov is None and n <= 4096:
+        base, _ = _select(_default_config("matrix"), feats, 0.05)
+        base_cov = base.coverage
+    for ec, cs, dt in results:
+        ratio = (
+            "n/a" if base_cov is None
+            else f"{cs.coverage / max(base_cov, 1e-9):.3f}"
+        )
+        _emit(
+            f"selection_{ec.name}_n{n}",
+            dt * 1e6,
+            f"coverage_ratio={ratio};r={cs.size}",
+            engine=ec,
+        )
 
 
 def _sparse_parity(rng: np.random.RandomState) -> None:
@@ -90,7 +153,7 @@ def _sparse_parity(rng: np.random.RandomState) -> None:
     feats = centers[rng.randint(0, 32, n)] + rng.randn(n, 32).astype(
         np.float32
     )
-    exact, _ = _select("matrix", feats, 0.05)
+    exact, _ = _select(_default_config("matrix"), feats, 0.05)
     full_grad = feats.sum(axis=0)
 
     def grad_err(cs) -> float:
@@ -102,7 +165,8 @@ def _sparse_parity(rng: np.random.RandomState) -> None:
     err_exact = grad_err(exact)
     exact_set = set(exact.indices.tolist())
     for k in (16, 64, 256):
-        cs, dt = _select("sparse", feats, 0.05, topk_k=k)
+        ec = SparseConfig(k=k)
+        cs, dt = _select(ec, feats, 0.05)
         overlap = len(exact_set & set(cs.indices.tolist())) / len(exact_set)
         _emit(
             f"sparse_parity_k{k}_n{n}",
@@ -110,6 +174,7 @@ def _sparse_parity(rng: np.random.RandomState) -> None:
             f"overlap={overlap:.3f};grad_err={grad_err(cs):.4f};"
             f"grad_err_exact={err_exact:.4f};"
             f"coverage_ratio={cs.coverage/max(exact.coverage,1e-9):.3f}",
+            engine=ec,
         )
 
 
@@ -136,6 +201,7 @@ def _device_ladder(rng: np.random.RandomState, smoke: bool) -> None:
             f"device_parity_q{q}_n{n_par}",
             dt * 1e6,
             f"identical_to_exact={ident};coverage_ratio={cov:.4f}",
+            engine=DeviceConfig(q=q),
         )
         if q == 1:
             assert ident, "device q=1 must reproduce exact greedy"
@@ -147,7 +213,10 @@ def _device_ladder(rng: np.random.RandomState, smoke: bool) -> None:
     q = 16
     feats = jax.numpy.asarray(rng.randn(n, d).astype(np.float32))
     _, t_feat = _timed(lambda: fl.greedy_fl_features(feats, r))
-    _emit(f"selection_features_n{n}", t_feat * 1e6, f"r={r}")
+    _emit(
+        f"selection_features_n{n}", t_feat * 1e6, f"r={r}",
+        engine=_default_config("features"),
+    )
     for qq in (1, q):
         _, t_dev = _timed(
             lambda qq=qq: fl.greedy_fl_device(feats, r, q=qq)
@@ -156,6 +225,7 @@ def _device_ladder(rng: np.random.RandomState, smoke: bool) -> None:
             f"selection_device_q{qq}_n{n}",
             t_dev * 1e6,
             f"r={r};speedup={t_feat / max(t_dev, 1e-9):.2f}x",
+            engine=DeviceConfig(q=qq),
         )
     # bf16 tiles: same sweep with half the MXU/memory traffic per tile
     _, t_bf = _timed(
@@ -165,6 +235,7 @@ def _device_ladder(rng: np.random.RandomState, smoke: bool) -> None:
         f"selection_device_q{q}_bf16_n{n}",
         t_bf * 1e6,
         f"r={r};speedup={t_feat / max(t_bf, 1e-9):.2f}x",
+        engine=DeviceConfig(q=q, tile_dtype="bfloat16"),
     )
 
 
@@ -177,32 +248,45 @@ def _large_n(rng: np.random.RandomState, smoke: bool) -> None:
     dense_gb = n * n * 4 / 2**30
     _emit(f"selection_matrix_n{n}", float("nan"), f"skipped_dense_{dense_gb:.0f}GB")
     _emit(f"selection_stochastic_n{n}", float("nan"), f"skipped_dense_{dense_gb:.0f}GB")
-    cs, dt = _select("sparse", feats, 50 / n, topk_k=k)
+    ec = SparseConfig(k=k)
+    cs, dt = _select(ec, feats, 50 / n)
     _emit(
         f"selection_sparse_n{n}",
         dt * 1e6,
         f"r={cs.size};k={k};mem_nk_mb={n*k*8/2**20:.0f}",
+        engine=ec,
     )
 
 
-def run(smoke: bool = False) -> None:
-    _RECORDS.clear()
-    rng = np.random.RandomState(0)
-    _ladder(rng)
-    _sparse_parity(rng)
-    _device_ladder(rng, smoke)
-    _large_n(rng, smoke)
+def _write_json(smoke: bool) -> None:
     with open("BENCH_selection.json", "w") as f:
         json.dump(
             {
                 "benchmark": "bench_selection",
+                "schema": 2,  # records carry the resolved EngineConfig dict
                 "smoke": smoke,
                 "backend": jax.default_backend(),
+                "engines": list(list_engines()),
                 "records": _RECORDS,
             },
             f,
             indent=2,
         )
+
+
+def run(smoke: bool = False, engine_specs: list[str] | None = None,
+        n: int = 4096) -> None:
+    _RECORDS.clear()
+    if engine_specs:
+        _spec_ladder([parse_engine_spec(s) for s in engine_specs], n)
+        _write_json(smoke)
+        return
+    rng = np.random.RandomState(0)
+    _ladder(rng)
+    _sparse_parity(rng)
+    _device_ladder(rng, smoke)
+    _large_n(rng, smoke)
+    _write_json(smoke)
 
 
 if __name__ == "__main__":
@@ -211,4 +295,15 @@ if __name__ == "__main__":
         "--smoke", action="store_true",
         help="CI-on-CPU scale: n=20k device ladder, 30k sparse large-n",
     )
-    run(smoke=ap.parse_args().smoke)
+    ap.add_argument(
+        "--engine", action="append", metavar="SPEC",
+        help="typed engine spec (repeatable), e.g. device:q=16 or "
+             "sparse:k=64 — runs a focused ladder at --n instead of the "
+             "full suite",
+    )
+    ap.add_argument(
+        "--n", type=int, default=4096,
+        help="pool size for the --engine focused ladder",
+    )
+    args = ap.parse_args()
+    run(smoke=args.smoke, engine_specs=args.engine, n=args.n)

@@ -57,9 +57,16 @@ def logreg_problem(n=2000, d=24, seed=0):
     return X, ybin, y, grad_one, full_loss, test_error
 
 
-def craig_subset(X, labels, fraction, engine="matrix"):
+def craig_subset(X, labels, fraction, engine=None):
+    """CRAIG per-class selection; ``engine`` is a typed EngineConfig
+    (default: the dense exact matrix engine)."""
+    from repro.core.engines import MatrixConfig
+
     sel = CraigSelector(
-        CraigConfig(fraction=fraction, per_class=True, engine=engine)
+        CraigConfig(
+            fraction=fraction, per_class=True,
+            engine=MatrixConfig() if engine is None else engine,
+        )
     )
     t0 = time.perf_counter()
     cs = sel.select(X, labels)

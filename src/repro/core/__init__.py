@@ -1,5 +1,19 @@
-"""CRAIG core: facility-location greedy selection over gradient proxies."""
+"""CRAIG core: facility-location greedy selection over gradient proxies.
+
+The greedy engines live in :mod:`repro.core.engines` (SelectionEngine
+protocol + typed configs + capability-driven registry); the most common
+entry points are re-exported here.
+"""
 from repro.core.craig import CoresetSelection, CraigConfig, CraigSelector
+from repro.core.engines import (
+    Capabilities,
+    EngineConfig,
+    SelectionEngine,
+    auto_engine_config,
+    get_engine,
+    list_engines,
+    make_engine,
+)
 from repro.core.facility_location import (
     FLResult,
     facility_location_value,
@@ -20,6 +34,13 @@ __all__ = [
     "CoresetSelection",
     "CraigConfig",
     "CraigSelector",
+    "Capabilities",
+    "EngineConfig",
+    "SelectionEngine",
+    "auto_engine_config",
+    "get_engine",
+    "list_engines",
+    "make_engine",
     "FLResult",
     "facility_location_value",
     "greedy_fl_features",

@@ -6,10 +6,20 @@ proxy features* produced by :mod:`repro.core.proxy`; for convex models these
 are (scaled) input features per paper Eq. 9, for deep nets last-layer
 gradients per Eq. 16.
 
+The greedy maximizer itself is a pluggable :class:`SelectionEngine` from
+:mod:`repro.core.engines` (DESIGN.md §3): ``CraigConfig.engine`` names it
+either as a typed ``EngineConfig`` (``SparseConfig(k=64)``,
+``DeviceConfig(q=16)``, …), as ``'auto'`` (the default — the documented
+policy in ``engines.auto_engine_config`` picks from capabilities + pool
+size + backend), or as a deprecated legacy string.  The selector never
+branches on engine names: cover mode and metrics are gated on each
+engine's ``Capabilities`` record.
+
 Two stopping modes:
   * budget  (paper Eq. 14): |S| ≤ r, greedy (1−1/e) guarantee; ε read off the
     residual coverage (paper Eq. 15).
-  * cover   (paper Eq. 12): grow S until L(S) ≤ ε_target.
+  * cover   (paper Eq. 12): grow S until L(S) ≤ ε_target (engines with
+    ``Capabilities.supports_cover`` — the matrix engine).
 
 Per-class selection (paper §5): subsets are selected independently per class
 with budgets proportional to class frequency, then unioned — required for the
@@ -26,22 +36,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import facility_location as fl
+from repro.core.engines import (
+    EngineConfig,
+    auto_engine_config,
+    make_engine,
+    normalize_for_metric,
+    pairwise_distances,
+)
+from repro.core.engines.legacy import LegacyEngineKnobs, resolve_engine_config
 
 __all__ = ["CraigConfig", "CoresetSelection", "CraigSelector", "pairwise_distances"]
-
-
-def pairwise_distances(feats: jax.Array, metric: str = "l2") -> jax.Array:
-    """Dense (n, n) proxy-gradient dissimilarity matrix d_ij (paper Eq. 7/9)."""
-    feats = feats.astype(jnp.float32)
-    if metric == "l2":
-        sq = jnp.sum(feats * feats, axis=-1)
-        d2 = sq[:, None] + sq[None, :] - 2.0 * feats @ feats.T
-        return jnp.sqrt(jnp.maximum(d2, 0.0))
-    if metric == "cosine":
-        nf = feats / (jnp.linalg.norm(feats, axis=-1, keepdims=True) + 1e-12)
-        return 1.0 - nf @ nf.T
-    raise ValueError(f"unknown metric {metric!r}")
 
 
 def _apportion_budgets(counts: np.ndarray, total_budget: int) -> np.ndarray:
@@ -85,8 +89,8 @@ def _apportion_budgets(counts: np.ndarray, total_budget: int) -> np.ndarray:
     return budgets
 
 
-@dataclasses.dataclass(frozen=True)
-class CraigConfig:
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class CraigConfig(LegacyEngineKnobs):
     """Configuration for CRAIG subset selection.
 
     Attributes:
@@ -94,48 +98,31 @@ class CraigConfig:
         (grow until L(S) ≤ epsilon, paper Eq. 12).
       fraction: subset fraction r/n for 'budget' mode.
       epsilon: target coverage for 'cover' mode (same units as d_ij).
-      metric: dissimilarity in proxy space ('l2' per the paper; 'cosine').
-      engine: 'matrix' (exact greedy, dense d matrix), 'lazy' (host lazy
-        greedy), 'stochastic' (paper's O(n) stochastic greedy), 'features'
-        (matrix-free blocked greedy; Pallas-accelerated on TPU), 'sparse'
-        (top-k similarity graph + lazy greedy over CSR columns — O(n·k)
-        memory, the engine for pools past ~10⁵ points), or 'device' (the
-        fully jitted device-resident fused greedy loop — one kernel launch
-        per round, block greedy ``device_q`` winners per round;
-        README §Engines, DESIGN.md §3.6).
+      metric: dissimilarity in proxy space ('l2' per the paper; 'cosine' —
+        served by the matrix-free engines via l2 on unit-normalized
+        features, a monotone-equivalent ordering).
+      engine: which greedy maximizer runs the selection —
+        * ``'auto'`` (default): picked per pool from capabilities + pool
+          size + backend by ``engines.auto_engine_config`` (dense exact
+          greedy ≤ 20k points; device on TPU / features elsewhere above;
+          sparse past 2·10⁵; matrix whenever mode='cover');
+        * a typed ``EngineConfig`` — ``engines.MatrixConfig()``,
+          ``SparseConfig(k=64)``, ``DeviceConfig(q=16)``, … — the
+          first-class surface (README §Engines);
+        * a legacy string ``'matrix'|'lazy'|'stochastic'|'features'|
+          'sparse'|'device'`` — deprecated; together with the flat knobs
+          inherited from :class:`LegacyEngineKnobs` it is shim-mapped onto
+          the typed config with a ``DeprecationWarning``.
       per_class: stratified per-class selection (paper §5).
-      stochastic_delta: δ for stochastic-greedy sample size (n/r)·ln(1/δ).
-      gains_impl: 'jax' | 'pallas' — engine='features'; engine='device'
-        also accepts 'auto' (pallas on TPU, jax elsewhere).  The config
-        default is 'jax'; set 'auto' (or 'pallas') to engage the fused
-        fl_gains_argmax kernel on TPU.
-      topk_k: neighbors kept per point — only for engine='sparse'.  Larger k
-        → closer to exact greedy (k == n is exact); memory scales as n·k.
-      topk_impl: 'jax' | 'pallas' graph builder — only for engine='sparse'.
-      device_q: engine='device' winners committed per fused sweep (block
-        greedy); 1 = exact greedy, larger amortizes sweep cost at large
-        budgets.
-      device_stale_tol: lazy-commit floor for engine='device' in (0, 1];
-        1.0 = exact Minoux rule (exact greedy at any q).
-      device_tile_dtype: 'float32' | 'bfloat16' feature tiles for
-        engine='device' (gains always accumulate fp32).
+      seed: PRNG seed threaded to stochastic engines.
     """
 
     mode: Literal["budget", "cover"] = "budget"
     fraction: float = 0.1
     epsilon: float = 0.0
     metric: str = "l2"
-    engine: Literal[
-        "matrix", "lazy", "stochastic", "features", "sparse", "device"
-    ] = "matrix"
+    engine: str | EngineConfig = "auto"
     per_class: bool = True
-    stochastic_delta: float = 0.01
-    gains_impl: str = "jax"
-    topk_k: int = 64
-    topk_impl: str = "jax"
-    device_q: int = 1
-    device_stale_tol: float = 0.7
-    device_tile_dtype: str = "float32"
     seed: int = 0
 
 
@@ -146,7 +133,10 @@ class CoresetSelection:
     indices/weights are aligned; ``order`` is the greedy selection order
     (paper §3.2: early elements contribute most to the gradient estimate).
     ``epsilon_hat`` is the data-driven bound on the gradient estimation error
-    from Eq. 15 (residual coverage); ``coverage`` is L(S).
+    from Eq. 15 (residual coverage); ``coverage`` is L(S).  ``engine`` is
+    the resolved ``EngineConfig.to_dict()`` provenance — JSON-able, rides
+    through sampler/checkpoint metadata and restores via
+    ``EngineConfig.from_dict``.
     """
 
     indices: np.ndarray  # (r,) int64 into the pool
@@ -155,6 +145,7 @@ class CoresetSelection:
     coverage: float
     epsilon_hat: float
     per_class_sizes: dict[int, int] | None = None
+    engine: dict | None = None
 
     @property
     def size(self) -> int:
@@ -171,7 +162,9 @@ class CraigSelector:
 
     Usage::
 
-        sel = CraigSelector(CraigConfig(fraction=0.1, engine="matrix"))
+        sel = CraigSelector(CraigConfig(fraction=0.1))          # engine='auto'
+        sel = CraigSelector(CraigConfig(fraction=0.01,
+                                        engine=SparseConfig(k=64)))
         coreset = sel.select(proxy_feats, labels=labels)
         # train with per-element stepsizes coreset.weights (paper Eq. 20)
     """
@@ -180,6 +173,21 @@ class CraigSelector:
         self.config = config
 
     # -- public API ---------------------------------------------------------
+
+    def resolve_engine(self, n: int, *, _stacklevel: int = 2) -> EngineConfig:
+        """The typed engine config a greedy run over ``n`` points uses.
+
+        ``n`` is the pool one greedy invocation actually sweeps — the full
+        pool for flat selection, the *largest class* for per-class mode
+        (each class is selected independently, so that run bounds cost and
+        memory).  Legacy strings are shim-mapped (one
+        ``DeprecationWarning`` attributed to the caller's call site);
+        ``'auto'`` resolves through the documented policy
+        (``engines.auto_engine_config``)."""
+        typed = resolve_engine_config(self.config, _stacklevel=_stacklevel + 1)
+        if typed is None:
+            typed = auto_engine_config(n, mode=self.config.mode)
+        return typed
 
     def select(
         self,
@@ -206,7 +214,14 @@ class CraigSelector:
         init = self._clean_init(init_selected, n)
         if cfg.per_class:
             if labels is not None:
-                return self._select_per_class(feats, np.asarray(labels), init)
+                labels = np.asarray(labels)
+                # engine='auto' keys on the pool one greedy run sweeps —
+                # here the largest class, not the union of all classes
+                counts = np.unique(labels, return_counts=True)[1]
+                engine_cfg = self.resolve_engine(
+                    int(counts.max()), _stacklevel=3
+                )
+                return self._select_per_class(feats, labels, init, engine_cfg)
             warnings.warn(
                 "per_class=True but no labels were provided; falling back "
                 "to flat (unstratified) selection — pass labels to "
@@ -214,8 +229,9 @@ class CraigSelector:
                 UserWarning,
                 stacklevel=2,
             )
+        engine_cfg = self.resolve_engine(n, _stacklevel=3)
         budget = self._budget(n)
-        idx, w, gains, coverage = self._select_flat(feats, budget, init)
+        idx, w, gains, coverage = self._select_flat(feats, budget, init, engine_cfg)
         eps_hat = float(coverage)
         return CoresetSelection(
             indices=np.asarray(idx, np.int64),
@@ -223,6 +239,7 @@ class CraigSelector:
             order=np.arange(len(np.asarray(idx))),
             coverage=float(coverage),
             epsilon_hat=eps_hat,
+            engine=engine_cfg.to_dict(),
         )
 
     def select_distributed(
@@ -230,28 +247,49 @@ class CraigSelector:
     ) -> CoresetSelection:
         """Two-round pod-scale selection (core.distributed) with the same
         output contract as :meth:`select`.  ``feats`` is the global (n, d)
-        pool; budgets derive from ``config.fraction``.  With
-        ``engine='sparse'`` round 1 runs the top-k graph greedy on every
-        shard, so local pools never materialize dense (n_local, n_local);
-        ``engine='device'`` runs the fused device greedy round 1 — also
-        matrix-free, and exact at ``device_q=1``."""
-        from repro.core.distributed import distributed_select
+        pool; budgets derive from ``config.fraction``.  Round 1 runs
+        whichever shard_map-safe engine the config resolves to
+        (``ROUND1_ENGINES``) — ``engine='auto'`` picks per *shard* pool
+        size, so dense shards stay on the exact matrix greedy while big
+        shards go matrix-free.  Engines with no shard_map-safe round-1
+        body (lazy, stochastic) are replaced by the auto pick for the
+        shard size, with a warning.  ``metric='cosine'`` is served by
+        unit-normalizing the pool up front (monotone-equivalent l2
+        ordering), with coverage converted back to cosine-distance units
+        (same invariant as :meth:`select`)."""
+        from repro.core.distributed import (
+            distributed_select,
+            resolve_round1_config,
+        )
 
+        cfg = self.config
+        if cfg.mode == "cover":
+            raise ValueError(
+                "select_distributed supports mode='budget' only — cover "
+                "needs exact prefix coverages on the global pool"
+            )
+        feats = normalize_for_metric(
+            jnp.asarray(feats, jnp.float32), cfg.metric
+        )
         n = feats.shape[0]
         n_shards = int(mesh.shape[axis_name])
         r_final = self._budget(n)
         r_local = max(1, min(n // n_shards, int(r_final * 2 / n_shards) + 1))
-        if self.config.engine in ("sparse", "device"):
-            local_engine = self.config.engine
-            self._check_sparse_config()
-        else:
-            local_engine = "matrix"
+        # the ONE round-1 resolve pipeline (shared with distributed_select):
+        # legacy shim → 'auto' per shard size → non-round-1 fallback →
+        # pinned to what the shard_map body runs, so the stamped provenance
+        # (CoresetSelection.engine) records the real execution path
+        typed = resolve_engine_config(cfg)
+        engine_cfg = resolve_round1_config(
+            "auto" if typed is None else typed, {}, n // n_shards
+        )
         res = distributed_select(
-            jnp.asarray(feats, jnp.float32), mesh,
+            feats, mesh,
             r_local=r_local, r_final=r_final, axis_name=axis_name,
-            local_engine=local_engine, topk_k=self.config.topk_k,
-            device_q=self.config.device_q,
-            device_stale_tol=self.config.device_stale_tol,
+            local_engine=engine_cfg,
+            # on the unit-normalized cosine pool, Σ min ‖x−m‖²/2 =
+            # Σ min (1 − cos θ) — same units as the local engines report
+            squared_coverage=cfg.metric == "cosine",
         )
         return CoresetSelection(
             indices=np.asarray(res.indices, np.int64),
@@ -259,6 +297,7 @@ class CraigSelector:
             order=np.arange(r_final),
             coverage=float(res.coverage),
             epsilon_hat=float(res.coverage),
+            engine=engine_cfg.to_dict(),
         )
 
     # -- internals ----------------------------------------------------------
@@ -283,107 +322,62 @@ class CraigSelector:
         _, first = np.unique(init, return_index=True)
         return init[np.sort(first)]
 
-    def _check_sparse_config(self) -> None:
-        if self.config.metric != "l2":
-            raise ValueError(
-                f"engine={self.config.engine!r} supports metric='l2' only"
-            )
-        if self.config.mode == "cover":
-            raise ValueError(
-                "mode='cover' needs exact prefix coverages; use "
-                "engine='matrix' (the only engine implementing Eq. 12)"
-            )
-
     def _select_flat(
-        self, feats: jax.Array, budget: int, init: np.ndarray | None = None
+        self,
+        feats: jax.Array,
+        budget: int,
+        init: np.ndarray | None,
+        engine_cfg: EngineConfig,
     ):
         cfg = self.config
         n = feats.shape[0]
         budget = min(budget, n)
         if init is not None:
             init = init[:budget]
-        if cfg.engine == "features":
-            res = fl.greedy_fl_features(
-                feats, budget, gains_impl=cfg.gains_impl, init_selected=init
+        engine = make_engine(engine_cfg)
+        caps = engine.capabilities
+        if cfg.metric not in caps.supports_metrics:
+            raise ValueError(
+                f"engine {engine_cfg.name!r} supports metrics "
+                f"{caps.supports_metrics}, got {cfg.metric!r}"
             )
-            return self._checked(res.indices, res.weights, res.gains, res.coverage)
-        if cfg.engine == "device":
-            self._check_sparse_config()  # same constraints: l2 + budget mode
-            res = fl.greedy_fl_device(
-                feats,
-                budget,
-                q=cfg.device_q,
-                gains_impl=cfg.gains_impl,
-                tile_dtype=cfg.device_tile_dtype,
-                stale_tol=cfg.device_stale_tol,
-                init_selected=None if init is None else jnp.asarray(init),
-            )
-            return self._checked(res.indices, res.weights, res.gains, res.coverage)
-        if cfg.engine == "sparse":
-            self._check_sparse_config()
-            res = fl.sparse_greedy_fl_features(
-                feats,
-                budget,
-                k=cfg.topk_k,
-                topk_impl=cfg.topk_impl,
-                init_selected=init,
-            )
-            return self._checked(res.indices, res.weights, res.gains, res.coverage)
-
-        dist = pairwise_distances(feats, cfg.metric)
-        d_max = jnp.max(dist) + 1e-6
-        sim = d_max - dist  # auxiliary element at distance d_max
-        if cfg.engine == "matrix":
-            if cfg.mode == "cover":
-                # Cover mode grows a full-budget greedy and cuts the prefix
-                # meeting ε; a warm prefix would skew that cut — ignore init.
-                return self._checked(*self._cover_from_matrix(dist, sim))
-            res = fl.greedy_fl_matrix(sim, budget, init_selected=init)
-        elif cfg.engine == "lazy":
-            res = fl.lazy_greedy_fl(np.asarray(sim), budget, init_selected=init)
-        elif cfg.engine == "stochastic":
-            m = max(1, int(np.ceil(n / budget * np.log(1.0 / cfg.stochastic_delta))))
-            m = min(m, n)
-            res = fl.stochastic_greedy_fl(
-                sim, budget, jax.random.PRNGKey(cfg.seed), m, init_selected=init
-            )
+        if cfg.mode == "cover":
+            if not caps.supports_cover:
+                raise ValueError(
+                    "mode='cover' needs exact prefix coverages (paper "
+                    f"Eq. 12); engine {engine_cfg.name!r} does not support "
+                    "it (Capabilities.supports_cover) — use "
+                    "engines.MatrixConfig()"
+                )
+            # Cover mode grows a full-budget greedy and cuts the prefix
+            # meeting ε; a warm prefix would skew that cut — no init.
+            res = engine.select_cover(feats, cfg.epsilon, metric=cfg.metric)
         else:
-            raise ValueError(f"unknown engine {cfg.engine!r}")
-        coverage = fl.coverage_l(dist, res.indices)
-        return self._checked(res.indices, res.weights, res.gains, coverage)
+            res = engine.select(
+                feats, budget,
+                metric=cfg.metric, init_selected=init, rng=cfg.seed,
+            )
+        return self._checked(
+            engine_cfg.name, res.indices, res.weights, res.gains, res.coverage
+        )
 
-    def _checked(self, idx, w, gains, coverage):
+    @staticmethod
+    def _checked(engine_name, idx, w, gains, coverage):
         """Invariant gate on every engine's output: unique indices."""
         idx_np = np.asarray(idx)
         if len(np.unique(idx_np)) != len(idx_np):
             raise AssertionError(
-                f"engine {self.config.engine!r} selected duplicate indices "
+                f"engine {engine_name!r} selected duplicate indices "
                 f"({len(idx_np) - len(np.unique(idx_np))} repeats)"
             )
         return idx, w, gains, coverage
-
-    def _cover_from_matrix(self, dist: jax.Array, sim: jax.Array):
-        """Submodular cover (paper Eq. 12): grow until L(S) ≤ ε target."""
-        eps = self.config.epsilon
-        n = dist.shape[0]
-        # Greedy with the full budget, then cut at the first prefix whose
-        # coverage meets eps (greedy order is nested, so prefixes are valid).
-        res = fl.greedy_fl_matrix(sim, n)
-        dist_sel = dist[:, res.indices]  # (n, n) in greedy order
-        run_min = jax.lax.associative_scan(jnp.minimum, dist_sel, axis=1)
-        cov_prefix = jnp.sum(run_min, axis=0)  # (n,) L(S_k) for k=1..n
-        k = int(jnp.argmax(cov_prefix <= eps)) + 1
-        if not bool(cov_prefix[k - 1] <= eps):
-            k = n  # ε unreachable: keep everything
-        idx = res.indices[:k]
-        _, w = fl.assign_and_weights(dist[:, idx])
-        return idx, w, res.gains[:k], cov_prefix[k - 1]
 
     def _select_per_class(
         self,
         feats: jax.Array,
         labels: np.ndarray,
-        init: np.ndarray | None = None,
+        init: np.ndarray | None,
+        engine_cfg: EngineConfig,
     ) -> CoresetSelection:
         """Paper §5: select within each class, budgets ∝ class frequency."""
         n = feats.shape[0]
@@ -414,7 +408,9 @@ class CraigSelector:
                 own = init[np.isin(init, pool)]
                 if own.size:
                     init_c = np.searchsorted(pool, own)
-            idx, w, _, cov = self._select_flat(sub_feats, int(b), init_c)
+            idx, w, _, cov = self._select_flat(
+                sub_feats, int(b), init_c, engine_cfg
+            )
             all_idx.append(pool[np.asarray(idx, np.int64)])
             all_w.append(np.asarray(w, np.float32))
             coverage += float(cov)
@@ -435,4 +431,5 @@ class CraigSelector:
             coverage=coverage,
             epsilon_hat=coverage,
             per_class_sizes=sizes,
+            engine=engine_cfg.to_dict(),
         )

@@ -8,15 +8,18 @@ two rounds over the data-parallel mesh axis:
   Round 1 (local):  every data shard runs greedy facility location over its
       local partition of the pool, selecting ``r_local`` candidates with local
       γ weights.  (Per-class partitioning composes with this: the trainer
-      shards each class across hosts.)  ``local_engine='sparse'`` swaps the
-      dense (n_local, n_local) greedy for the top-k graph greedy
-      (``facility_location.topk_graph`` + ``greedy_fl_topk``), dropping the
-      round-1 footprint to O(n_local·k) — the pod-scale path for shards past
-      ~10⁵ points (DESIGN.md §6).  ``local_engine='device'`` runs the
-      device-resident fused greedy (``greedy_fl_device``, DESIGN.md §3.6)
-      instead: O(n_local·block) memory like sparse, exact selections like
-      matrix, the whole round-1 loop jitted inside the shard_map body with
-      no dense (n_local, n_local) similarity.
+      shards each class across hosts.)  The round-1 body is picked by a typed
+      ``EngineConfig`` (``repro.core.engines``) — any engine in
+      ``ROUND1_ENGINES`` works, and ``local_engine='auto'`` (the default)
+      resolves it per *shard* pool size via the documented policy:
+      * ``MatrixConfig``   — dense exact greedy per shard (§3.1);
+      * ``FeaturesConfig`` — matrix-free blocked greedy (§3.4);
+      * ``SparseConfig``   — top-k graph greedy (``topk_graph`` +
+        ``greedy_fl_topk``), O(n_local·k) round-1 footprint — the pod-scale
+        path for shards past ~10⁵ points (DESIGN.md §6);
+      * ``DeviceConfig``   — device-resident fused greedy (§3.6): matrix-free
+        like sparse, exact like matrix, the whole round-1 loop jitted inside
+        the shard_map body.
 
   Round 2 (merge):  candidate features and γ weights are all-gathered
       (r_total = shards·r_local ≪ n), and a *weighted* greedy FL — each
@@ -33,6 +36,8 @@ centralized selection on clustered data.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -41,13 +46,89 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import facility_location as fl
+from repro.core.engines import (
+    DeviceConfig,
+    EngineConfig,
+    FeaturesConfig,
+    MatrixConfig,
+    SparseConfig,
+    auto_engine_config,
+)
+from repro.core.engines.legacy import resolve_distributed_engine
 
 __all__ = [
     "DistributedSelection",
     "distributed_select",
     "local_then_merge",
     "compat_shard_map",
+    "ROUND1_ENGINES",
+    "normalize_round1_config",
+    "resolve_round1_config",
 ]
+
+# Engines with a jit/shard_map-safe round-1 body.  Host-side engines (lazy)
+# and the sampled stochastic greedy have no distributed round 1; callers
+# fall back to 'auto'.
+ROUND1_ENGINES = ("matrix", "features", "sparse", "device")
+
+
+def normalize_round1_config(ec: "EngineConfig") -> "EngineConfig":
+    """Pin a round-1 config to what the shard_map body actually runs.
+
+    Round-1 bodies always use the jnp kernels — Pallas launches inside
+    shard_map are not supported — so the kernel-impl knobs
+    (``gains_impl`` on features/device, ``impl`` on the sparse graph
+    builder) are rewritten to 'jax' here rather than silently overridden
+    in the body: provenance (``CoresetSelection.engine``, checkpoints,
+    benches) then records the real execution path.  An explicit 'pallas'
+    request warns; the device engine's 'auto' default is pinned silently
+    (it means "whatever runs here").  All other knobs (q, stale_tol,
+    tile_dtype, k, block sizes) are shard_map-safe and honored as given.
+    """
+    for attr in ("gains_impl", "impl"):
+        val = getattr(ec, attr, "jax")
+        if val == "jax":
+            continue
+        if val == "pallas":
+            warnings.warn(
+                f"distributed round 1 runs the jnp kernels; "
+                f"{type(ec).__name__}({attr}='pallas') is pinned to 'jax' "
+                "inside shard_map",
+                UserWarning,
+                stacklevel=3,
+            )
+        ec = dataclasses.replace(ec, **{attr: "jax"})
+    return ec
+
+
+def resolve_round1_config(
+    local_engine, legacy_knobs: dict, n_local: int
+) -> "EngineConfig":
+    """The ONE resolve pipeline for round-1 engine configs.
+
+    Shared by ``distributed_select``, ``local_then_merge``'s legacy
+    surface, and ``CraigSelector.select_distributed`` so every entry point
+    agrees: legacy strings/knobs shim-map with a ``DeprecationWarning``,
+    ``'auto'`` resolves per shard pool size, engines with no
+    shard_map-safe round-1 body (``lazy``, ``stochastic``) warn and fall
+    back to the auto pick, and the result is pinned to what the body
+    actually runs (``normalize_round1_config``).  Idempotent on an
+    already-resolved config.
+    """
+    ec = resolve_distributed_engine(local_engine, legacy_knobs)
+    if ec is None:  # 'auto': per-shard pool size drives the pick
+        ec = auto_engine_config(max(1, n_local))
+    elif ec.name not in ROUND1_ENGINES:
+        replacement = auto_engine_config(max(1, n_local))
+        warnings.warn(
+            f"engine {ec.name!r} has no shard_map-safe round-1 body; "
+            f"distributed round 1 uses {replacement!r} instead "
+            f"(round-1 engines: {ROUND1_ENGINES})",
+            UserWarning,
+            stacklevel=3,
+        )
+        ec = replacement
+    return normalize_round1_config(ec)
 
 
 def compat_shard_map(body, *, mesh, in_specs, out_specs):
@@ -88,14 +169,16 @@ def _local_round(feats: jax.Array, r_local: int):
     return res.indices, res.weights
 
 
-def _local_round_sparse(feats: jax.Array, r_local: int, topk_k: int):
+def _local_round_sparse(feats: jax.Array, r_local: int, cfg: SparseConfig):
     """Round 1 on one shard via the top-k graph — O(n_local·k) memory.
 
     Selection runs on the sparsified objective; γ weights are then exact:
     every local point is assigned to its nearest selected medoid from
-    features (an (n_local, r_local) distance block, never (n, n)).
+    features (an (n_local, r_local) distance block, never (n, n)).  The
+    config arrives with the graph builder pinned to the jnp scan
+    (``normalize_round1_config``).
     """
-    vals, idx = fl.topk_graph(feats, topk_k, impl="jax")
+    vals, idx = fl.topk_graph(feats, cfg.k, impl=cfg.impl, block_m=cfg.block_m)
     res = fl.greedy_fl_topk(vals, idx, r_local)
     sel = feats[res.indices]  # (r_local, d)
     sq = jnp.sum(feats * feats, axis=-1)
@@ -105,20 +188,27 @@ def _local_round_sparse(feats: jax.Array, r_local: int, topk_k: int):
     return res.indices, weights
 
 
-def _local_round_device(
-    feats: jax.Array, r_local: int, device_q: int, device_stale_tol: float
-):
+def _local_round_device(feats: jax.Array, r_local: int, cfg: DeviceConfig):
     """Round 1 on one shard via the device-resident fused greedy.
 
     Exact greedy selections (q=1 or stale_tol=1.0) without a dense
     (n_local, n_local) block; γ weights come straight from the engine's
-    exact blocked assignment.  Uses the jnp sweep (shard_map-safe on every
-    backend); flip to the Pallas path by jitting the outer shard_map on TPU
-    with gains_impl='pallas'.
+    exact blocked assignment.  The config arrives pinned to the jnp sweep
+    (``normalize_round1_config``) — shard_map-safe on every backend.
     """
     res = fl.greedy_fl_device(
-        feats, r_local, q=device_q, gains_impl="jax",
-        stale_tol=device_stale_tol,
+        feats, r_local, q=cfg.q, gains_impl=cfg.gains_impl,
+        stale_tol=cfg.stale_tol, tile_dtype=cfg.tile_dtype,
+        block_n=cfg.block_n, block_m=cfg.block_m,
+    )
+    return res.indices, res.weights
+
+
+def _local_round_features(feats: jax.Array, r_local: int, cfg: FeaturesConfig):
+    """Round 1 on one shard via the matrix-free blocked greedy (§3.4);
+    the config arrives pinned to the jnp sweep (``normalize_round1_config``)."""
+    res = fl.greedy_fl_features(
+        feats, r_local, gains_impl=cfg.gains_impl, block_n=cfg.block_n
     )
     return res.indices, res.weights
 
@@ -143,10 +233,10 @@ def local_then_merge(
     r_local: int,
     r_final: int,
     axis_name: str = "data",
-    local_engine: str = "matrix",
-    topk_k: int = 64,
-    device_q: int = 1,
-    device_stale_tol: float = 0.7,
+    engine_config: EngineConfig | None = None,
+    squared_coverage: bool = False,
+    local_engine: str | None = None,
+    **legacy_knobs,
 ):
     """shard_map body: runs on one shard with a mapped ``axis_name``.
 
@@ -154,31 +244,46 @@ def local_then_merge(
       feats_sharded: (n_local, d) this shard's proxy features (fp32).
       r_local: round-1 budget per shard.
       r_final: final global budget.
-      local_engine: 'matrix' (dense round-1), 'sparse' (top-k graph
-        round-1, O(n_local·topk_k) memory), or 'device' (fused device
-        greedy, exact + matrix-free).
-      topk_k: neighbors per point for local_engine='sparse'.
-      device_q: block-greedy winners per round for local_engine='device'.
-      device_stale_tol: lazy-commit floor for local_engine='device'
-        (1.0 = exact at any q).
+      engine_config: typed round-1 engine config (``ROUND1_ENGINES``);
+        None means ``MatrixConfig()``.
+      squared_coverage: report L(S) as Σ min ‖x−m‖²/2 instead of
+        Σ min ‖x−m‖ — on unit-normalized pools that is Σ min (1 − cos θ),
+        keeping cosine coverage units identical to the local engines'.
+      local_engine / legacy flat knob kwargs: the pre-registry surface;
+        shim-mapped with a ``DeprecationWarning``
+        (``engines.legacy.resolve_distributed_engine``).
     Returns:
       (global_indices (r_final,), weights (r_final,), coverage ()).
     """
+    if local_engine is not None or legacy_knobs:
+        if engine_config is not None:
+            raise TypeError(
+                "pass engine_config or the legacy local_engine surface, "
+                "not both"
+            )
+        engine_config = resolve_round1_config(
+            # the pre-registry default was the dense matrix round 1
+            "matrix" if local_engine is None else local_engine,
+            legacy_knobs,
+            feats_sharded.shape[0],
+        )
+    ec = engine_config if engine_config is not None else MatrixConfig()
     n_local, _ = feats_sharded.shape
     shard_id = jax.lax.axis_index(axis_name)
 
-    if local_engine == "sparse":
-        local_idx, local_w = _local_round_sparse(
-            feats_sharded, r_local, topk_k
-        )
-    elif local_engine == "device":
-        local_idx, local_w = _local_round_device(
-            feats_sharded, r_local, device_q, device_stale_tol
-        )
-    elif local_engine == "matrix":
+    if isinstance(ec, SparseConfig):
+        local_idx, local_w = _local_round_sparse(feats_sharded, r_local, ec)
+    elif isinstance(ec, DeviceConfig):
+        local_idx, local_w = _local_round_device(feats_sharded, r_local, ec)
+    elif isinstance(ec, FeaturesConfig):
+        local_idx, local_w = _local_round_features(feats_sharded, r_local, ec)
+    elif isinstance(ec, MatrixConfig):
         local_idx, local_w = _local_round(feats_sharded, r_local)
     else:
-        raise ValueError(f"unknown local_engine {local_engine!r}")
+        raise ValueError(
+            f"engine {ec.name!r} has no shard_map-safe round-1 body; "
+            f"round-1 engines: {ROUND1_ENGINES}"
+        )
     local_global_idx = shard_id * n_local + local_idx
 
     # Gather candidate features / weights / global ids from all shards.
@@ -200,7 +305,9 @@ def local_then_merge(
     assign = jnp.argmin(dist, axis=1)
     local_counts = jnp.zeros((r_final,), jnp.float32).at[assign].add(1.0)
     weights = jax.lax.psum(local_counts, axis_name)
-    coverage = jax.lax.psum(jnp.sum(jnp.min(dist, axis=1)), axis_name)
+    min_dist = jnp.min(dist, axis=1)
+    residual = jnp.square(min_dist) / 2.0 if squared_coverage else min_dist
+    coverage = jax.lax.psum(jnp.sum(residual), axis_name)
     return sel_gidx.astype(jnp.int32), weights, coverage
 
 
@@ -210,23 +317,30 @@ def distributed_select(
     r_local: int,
     r_final: int,
     axis_name: str = "data",
-    local_engine: str = "matrix",
-    topk_k: int = 64,
-    device_q: int = 1,
-    device_stale_tol: float = 0.7,
+    local_engine: str | EngineConfig = "auto",
+    squared_coverage: bool = False,
+    **legacy_knobs,
 ) -> DistributedSelection:
     """Run two-round distributed selection over ``mesh[axis_name]``.
 
     ``feats`` is (n, d) with n divisible by the axis size; it is sharded over
     the first dimension.  Output indices/weights are fully replicated.
-    ``local_engine='sparse'`` keeps round 1 at O(n_local·topk_k) memory;
-    ``local_engine='device'`` keeps it matrix-free *and* exact (the fused
-    greedy of DESIGN.md §3.6).
+
+    ``local_engine`` picks the round-1 body: a typed ``EngineConfig``
+    (``MatrixConfig``/``FeaturesConfig``/``SparseConfig``/``DeviceConfig``),
+    or ``'auto'`` (default) to resolve it per shard pool size via
+    ``engines.auto_engine_config``.  Legacy engine strings plus flat knob
+    kwargs still work through the deprecation shim
+    (``engines.legacy.resolve_distributed_engine``) and warn.
     """
+    engine_config = resolve_round1_config(
+        local_engine, legacy_knobs,
+        feats.shape[0] // int(mesh.shape[axis_name]),
+    )
     body = partial(
         local_then_merge, r_local=r_local, r_final=r_final,
-        axis_name=axis_name, local_engine=local_engine, topk_k=topk_k,
-        device_q=device_q, device_stale_tol=device_stale_tol,
+        axis_name=axis_name, engine_config=engine_config,
+        squared_coverage=squared_coverage,
     )
     fn = compat_shard_map(
         body, mesh=mesh, in_specs=(P(axis_name, None),),

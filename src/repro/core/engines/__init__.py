@@ -1,0 +1,108 @@
+"""Greedy facility-location engines behind the SelectionEngine registry.
+
+The package splits the former monolithic ``core/facility_location.py``
+into one module per engine (DESIGN.md §3.1–§3.6), a shared protocol
+(``base``), a capability-driven registry with the ``engine='auto'``
+policy (``registry``), and the flat-knob deprecation shims (``legacy``).
+
+Adding an engine is a one-file plugin::
+
+    # repro/core/engines/my_engine.py
+    @dataclasses.dataclass(frozen=True)
+    class MyConfig(EngineConfig):
+        name: ClassVar[str] = "my_engine"
+        knob: int = 3
+
+    @register_engine
+    class MyEngine(SelectionEngine):
+        name, config_cls = "my_engine", MyConfig
+        capabilities = Capabilities(...)
+        def select(self, feats, budget, *, metric="l2",
+                   init_selected=None, rng=None): ...
+
+then import it here; ``CraigSelector``, ``distributed_select``, the
+benchmarks, and the trainer pick it up through the registry.
+"""
+from repro.core.engines.base import (
+    Capabilities,
+    EngineConfig,
+    FLResult,
+    SelectionEngine,
+    assign_and_weights,
+    cosine_residual_coverage,
+    coverage_l,
+    facility_location_value,
+    normalize_for_metric,
+    pairwise_distances,
+)
+from repro.core.engines.registry import (
+    auto_engine_config,
+    engine_config_from_dict,
+    get_engine,
+    list_engines,
+    make_engine,
+    parse_engine_spec,
+    register_engine,
+)
+
+# Engine modules self-register on import; matrix first (ladder baseline).
+from repro.core.engines.matrix import MatrixConfig, MatrixEngine, greedy_fl_matrix
+from repro.core.engines.lazy import LazyConfig, LazyEngine, lazy_greedy_fl
+from repro.core.engines.stochastic import (
+    StochasticConfig,
+    StochasticEngine,
+    stochastic_greedy_fl,
+)
+from repro.core.engines.features import (
+    FeaturesConfig,
+    FeaturesEngine,
+    greedy_fl_features,
+)
+from repro.core.engines.sparse import (
+    SparseConfig,
+    SparseEngine,
+    greedy_fl_topk,
+    sparse_greedy_fl,
+    sparse_greedy_fl_features,
+    topk_graph,
+)
+from repro.core.engines.device import DeviceConfig, DeviceEngine, greedy_fl_device
+
+__all__ = [
+    # protocol
+    "Capabilities",
+    "EngineConfig",
+    "FLResult",
+    "SelectionEngine",
+    # registry / policy
+    "register_engine",
+    "get_engine",
+    "list_engines",
+    "make_engine",
+    "engine_config_from_dict",
+    "parse_engine_spec",
+    "auto_engine_config",
+    # typed configs + engines
+    "MatrixConfig", "MatrixEngine",
+    "LazyConfig", "LazyEngine",
+    "StochasticConfig", "StochasticEngine",
+    "FeaturesConfig", "FeaturesEngine",
+    "SparseConfig", "SparseEngine",
+    "DeviceConfig", "DeviceEngine",
+    # functional API (shared with core.facility_location)
+    "pairwise_distances",
+    "normalize_for_metric",
+    "cosine_residual_coverage",
+    "facility_location_value",
+    "coverage_l",
+    "assign_and_weights",
+    "greedy_fl_matrix",
+    "lazy_greedy_fl",
+    "stochastic_greedy_fl",
+    "greedy_fl_features",
+    "greedy_fl_device",
+    "topk_graph",
+    "greedy_fl_topk",
+    "sparse_greedy_fl",
+    "sparse_greedy_fl_features",
+]

@@ -1,0 +1,318 @@
+"""SelectionEngine protocol, typed per-engine configs, shared FL math.
+
+The greedy facility-location engines (DESIGN.md §3) are first-class,
+swappable strategy objects.  Each engine module under
+``repro.core.engines`` defines three things:
+
+  * a frozen ``EngineConfig`` dataclass — the engine's *complete* tuning
+    surface.  Configs serialize via ``to_dict``/``from_dict`` so
+    checkpointed sampler/refresher metadata records exactly which engine
+    (and which settings) produced a selection, and restores it;
+  * a ``SelectionEngine`` subclass implementing
+    ``select(feats, budget, *, metric, init_selected, rng) -> FLResult``
+    (plus ``select_cover`` where supported);
+  * a ``Capabilities`` record — *what the engine can do* (exact vs
+    approximate, matrix-free, jit-safe, cover mode, metrics) and a
+    ``memory(n, d)`` footprint estimate.  Callers gate on capabilities
+    instead of hard-coding engine names: ``CraigSelector`` rejects
+    cover mode / metrics from them, ``auto_engine_config``
+    (``registry.py``) picks engines from them.
+
+CRAIG's guarantee (paper Thm. 1/2) is engine-independent: any greedy that
+bounds the per-element gradient estimation error ε preserves the
+convergence rate, so engines are freely swappable behind this protocol and
+a new engine is a ~1-file plugin (subclass + ``@register_engine``).
+
+Metrics: every engine speaks ``'l2'`` natively.  ``'cosine'`` is routed
+through l2 on unit-normalized features for the matrix-free engines
+(``normalize_for_metric``): on the unit sphere ‖x−y‖ = √(2·(1−cos θ)) is a
+monotone transform of cosine distance, so similarity *orderings* — and
+hence the medoid structure greedy recovers on clustered pools — are
+preserved.  Their residual coverage is converted back to cosine-distance
+units (``cosine_residual_coverage``) so ``coverage``/``epsilon_hat`` stay
+engine-independent per metric.  The dense engines build the cosine
+distance matrix directly (``pairwise_distances``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, ClassVar, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FLResult(NamedTuple):
+    """Result of a greedy facility-location run.
+
+    Attributes:
+      indices:  (r,) int32 — selected ground-set indices, in greedy order.
+      gains:    (r,) float32 — marginal gain of each selection (non-increasing
+                for exact greedy; approximately so for stochastic greedy).
+      weights:  (r,) float32 — γ_j cluster sizes (paper Alg. 1 line 8);
+                sum(weights) == n.
+      coverage: () float32 — final L(S) = Σ_i min_{j∈S} d_ij, the paper's
+                upper bound on the gradient estimation error (Eq. 8).
+    """
+
+    indices: jax.Array
+    gains: jax.Array
+    weights: jax.Array
+    coverage: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Protocol: config, capabilities, engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Base of every typed engine config (frozen, fully defaulted).
+
+    Subclasses set the class attribute ``name`` to their registry key and
+    declare the engine's knobs as dataclass fields.  ``to_dict``/
+    ``from_dict`` round-trip exactly (JSON-able), so a config can ride
+    through checkpoint metadata and be restored.
+    """
+
+    name: ClassVar[str] = "?"
+
+    def to_dict(self) -> dict:
+        """JSON-able ``{"name": ..., **fields}`` snapshot."""
+        return {"name": type(self).name, **dataclasses.asdict(self)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EngineConfig":
+        """Inverse of :meth:`to_dict`; dispatches on ``d['name']``."""
+        from repro.core.engines.registry import engine_config_from_dict
+
+        return engine_config_from_dict(d)
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a SelectionEngine can do — the registry's dispatch surface.
+
+    Attributes:
+      exact: selections reproduce exact greedy bit-for-bit at the engine's
+        *default* config (stochastic/sparse trade exactness for speed;
+        device is exact at its q=1 default and near-exact past it).
+      matrix_free: never materializes the dense (n, n) similarity.
+      jit_safe: ``select`` is jax.jit / shard_map traceable end to end
+        (host-side engines — lazy heap, sparse CSC walk — are not).
+      supports_cover: implements submodular cover (grow until
+        L(S) ≤ ε, paper Eq. 12).
+      supports_metrics: accepted ``metric=`` values ('cosine' may be
+        served via l2 on unit-normalized features, see module docstring).
+      memory: ``memory(n, d) -> bytes`` peak-footprint estimate for an
+        (n, d) pool at the engine's default config — what the
+        ``engine='auto'`` policy reasons about.
+    """
+
+    exact: bool
+    matrix_free: bool
+    jit_safe: bool
+    supports_cover: bool
+    supports_metrics: tuple[str, ...]
+    memory: Callable[[int, int], int]
+
+
+class SelectionEngine:
+    """A greedy facility-location maximizer behind the common protocol.
+
+    Subclasses set ``name`` (registry key), ``config_cls`` (their
+    EngineConfig), ``capabilities``, and implement :meth:`select`.
+    Instances are cheap, stateless wrappers binding a config.
+    """
+
+    name: ClassVar[str]
+    config_cls: ClassVar[type[EngineConfig]]
+    capabilities: ClassVar[Capabilities]
+
+    def __init__(self, config: EngineConfig | None = None):
+        if config is None:
+            config = self.config_cls()
+        if not isinstance(config, self.config_cls):
+            raise TypeError(
+                f"engine {self.name!r} expects {self.config_cls.__name__}, "
+                f"got {type(config).__name__}"
+            )
+        self.config = config
+
+    def select(
+        self,
+        feats: jax.Array,
+        budget: int,
+        *,
+        metric: str = "l2",
+        init_selected=None,
+        rng=None,
+    ) -> FLResult:
+        """Select ``budget`` medoids from (n, d) proxy features.
+
+        Args:
+          feats: (n, d) gradient-proxy features.
+          budget: number of elements to select (static; callers clamp ≤ n).
+          metric: dissimilarity, one of ``capabilities.supports_metrics``.
+          init_selected: optional warm-start prefix (indices, greedy order)
+            whose cover state is replayed before greedy resumes.
+          rng: seed / PRNG key for stochastic engines (ignored by the
+            deterministic ones).
+        """
+        raise NotImplementedError
+
+    def select_cover(
+        self, feats: jax.Array, epsilon: float, *, metric: str = "l2"
+    ) -> FLResult:
+        """Submodular cover (paper Eq. 12): grow S until L(S) ≤ epsilon.
+
+        Only engines with ``capabilities.supports_cover`` implement this.
+        """
+        raise ValueError(
+            f"engine {self.name!r} does not support mode='cover' "
+            "(Capabilities.supports_cover is False)"
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}({self.config!r})"
+
+
+# ---------------------------------------------------------------------------
+# Shared similarity / objective math (used by every engine module)
+# ---------------------------------------------------------------------------
+
+
+def pairwise_distances(feats: jax.Array, metric: str = "l2") -> jax.Array:
+    """Dense (n, n) proxy-gradient dissimilarity matrix d_ij (paper Eq. 7/9)."""
+    feats = feats.astype(jnp.float32)
+    if metric == "l2":
+        sq = jnp.sum(feats * feats, axis=-1)
+        d2 = sq[:, None] + sq[None, :] - 2.0 * feats @ feats.T
+        return jnp.sqrt(jnp.maximum(d2, 0.0))
+    if metric == "cosine":
+        nf = feats / (jnp.linalg.norm(feats, axis=-1, keepdims=True) + 1e-12)
+        return 1.0 - nf @ nf.T
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def normalize_for_metric(feats: jax.Array, metric: str) -> jax.Array:
+    """Feature-space routing for the matrix-free engines.
+
+    'l2' passes through; 'cosine' unit-normalizes rows so plain l2 greedy
+    runs on the sphere (monotone-equivalent similarity ordering — see the
+    module docstring).
+    """
+    if metric == "l2":
+        return feats
+    if metric == "cosine":
+        feats = feats.astype(jnp.float32)
+        return feats / (jnp.linalg.norm(feats, axis=-1, keepdims=True) + 1e-12)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def cosine_residual_coverage(
+    feats_normalized: jax.Array, indices: jax.Array
+) -> jax.Array:
+    """L(S) = Σ_i min_{j∈S} (1 − cos θ_ij) from unit-normalized features.
+
+    The matrix-free engines select cosine pools via l2 on the sphere, where
+    ‖x − m‖² = 2·(1 − cos θ); this converts their residual back to the
+    dense engines' cosine-distance units so ``coverage``/``epsilon_hat``
+    are engine-independent per metric (``engine='auto'`` must not change
+    units when it crosses a pool-size threshold).  O(n·r) memory and
+    jit-safe — fine for the features/device engines (their γ-assignment
+    step already materializes (n, r)); the sparse engine uses a blocked
+    equivalent to preserve its O(n·k) contract.
+    """
+    sel = feats_normalized[indices]  # (r, d)
+    sq_x = jnp.sum(feats_normalized * feats_normalized, axis=-1)
+    sq_s = jnp.sum(sel * sel, axis=-1)
+    d2 = jnp.maximum(
+        sq_x[:, None] + sq_s[None, :] - 2.0 * feats_normalized @ sel.T, 0.0
+    )
+    return jnp.sum(jnp.min(d2, axis=1)) / 2.0
+
+
+def facility_location_value(sim: jax.Array, selected_mask: jax.Array) -> jax.Array:
+    """F(S) = Σ_i max_{j∈S} s_ij with empty-set convention F(∅)=0 (s0 at 0).
+
+    Args:
+      sim: (n, n) similarity matrix (s_ij ≥ 0; s0 baseline already subtracted).
+      selected_mask: (n,) bool.
+    """
+    neg = jnp.asarray(-jnp.inf, sim.dtype)
+    masked = jnp.where(selected_mask[None, :], sim, neg)
+    best = jnp.max(masked, axis=1)
+    return jnp.sum(jnp.where(jnp.any(selected_mask), jnp.maximum(best, 0.0), 0.0))
+
+
+def coverage_l(dist: jax.Array, indices: jax.Array) -> jax.Array:
+    """L(S) = Σ_i min_{j∈S} d_ij  (paper Eq. 8) for selected ``indices``."""
+    sub = dist[:, indices]  # (n, r)
+    return jnp.sum(jnp.min(sub, axis=1))
+
+
+def assign_and_weights(dist_to_sel: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Given (n, r) distances to selected medoids, return (assignment, γ)."""
+    assign = jnp.argmin(dist_to_sel, axis=1)
+    r = dist_to_sel.shape[1]
+    weights = jnp.zeros((r,), jnp.float32).at[assign].add(1.0)
+    return assign, weights
+
+
+def _as_init_idx(init_selected, budget: int) -> jnp.ndarray:
+    """Validate/normalize a warm-start prefix for the JAX engines.
+
+    Returns a (r₀,) int32 array with r₀ ≤ budget; the length is static (it
+    comes from the array shape), so ``budget − r₀`` remains a Python int
+    under jit.
+    """
+    idx = jnp.asarray(init_selected, jnp.int32)
+    if idx.ndim != 1:
+        raise ValueError("init_selected must be 1-D")
+    if idx.shape[0] > budget:
+        raise ValueError(
+            f"init_selected has {idx.shape[0]} elements > budget {budget}"
+        )
+    return idx
+
+
+def _replay_prefix(init_selected, budget: int, n: int, col_fn, pw=None):
+    """Replay a warm-start prefix's cover state (shared by the JAX engines).
+
+    ``col_fn(e)`` returns the (n,) similarity column of element e; marginal
+    gains are recorded in prefix order (optionally ``pw``-weighted), exactly
+    as a cold greedy run would have produced them.
+
+    Returns (init_idx (r₀,), init_gains (r₀,), cur_max (n,), chosen (n,)).
+    """
+    cur_max = jnp.zeros((n,), jnp.float32)
+    chosen = jnp.zeros((n,), bool)
+    if init_selected is None:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32), cur_max, chosen
+    init_idx = _as_init_idx(init_selected, budget)
+
+    def warm(cur, e):
+        col = col_fn(e)
+        gap = jnp.maximum(col - cur, 0.0)
+        g = jnp.sum(gap) if pw is None else jnp.dot(pw, gap)
+        return jnp.maximum(cur, col), g
+
+    cur_max, init_gains = jax.lax.scan(warm, cur_max, init_idx)
+    return init_idx, init_gains, cur_max, chosen.at[init_idx].set(True)
+
+
+def _cluster_weights(
+    sim: jax.Array, indices: jax.Array, point_weights: jax.Array | None = None
+) -> jax.Array:
+    """γ_j = Σ_{i : j = argmax_{s∈S} s_is} w_i (paper Alg. 1 line 8)."""
+    sub = sim[:, indices]  # (n, r)
+    assign = jnp.argmax(sub, axis=1)  # (n,) positions into S
+    r = indices.shape[0]
+    pw = (
+        jnp.ones((sim.shape[0],), jnp.float32)
+        if point_weights is None
+        else point_weights.astype(jnp.float32)
+    )
+    return jnp.zeros((r,), jnp.float32).at[assign].add(pw)

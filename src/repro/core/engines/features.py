@@ -1,0 +1,173 @@
+"""Matrix-free blocked greedy engine from features (DESIGN.md §3.4).
+
+Per greedy step, candidate gains are computed blockwise from features —
+O(n²·d) per step but O(n·block) memory; the (n, n) similarity never
+exists.  The Pallas ``fl_gains`` kernel accelerates the sweep on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engines.base import (
+    Capabilities,
+    EngineConfig,
+    FLResult,
+    SelectionEngine,
+    _replay_prefix,
+    cosine_residual_coverage,
+    normalize_for_metric,
+)
+from repro.core.engines.registry import register_engine
+
+__all__ = ["FeaturesConfig", "FeaturesEngine", "greedy_fl_features"]
+
+
+def greedy_fl_features(
+    feats: jax.Array,
+    budget: int,
+    *,
+    sim_fn: str = "neg_l2",
+    gains_impl: str = "jax",
+    block_n: int = 512,
+    init_selected: jax.Array | None = None,
+) -> FLResult:
+    """Greedy FL directly from proxy features, never materializing (n, n).
+
+    Per greedy step, candidate gains are computed blockwise from features —
+    O(n²·d_eff) per step but O(n·block) memory.  ``gains_impl='pallas'`` uses
+    the fused Pallas kernel (``repro.kernels.ops.fl_gains``) on TPU;
+    ``'jax'`` is the pure-jnp fallback (identical math).
+
+    Args:
+      feats: (n, d) proxy features.
+      budget: r.
+      sim_fn: 'neg_l2' → s_ij = d_max − ‖x_i − x_j‖ (paper's metric) or 'dot'.
+      gains_impl: 'jax' | 'pallas'.
+      block_n: candidate block size for gain evaluation.
+      init_selected: optional warm-start prefix (see ``greedy_fl_matrix``);
+        each prefix element costs one O(n·d) similarity column, not a full
+        O(n²·d) gain sweep.
+    """
+    from repro.kernels import ops as kops  # local import; kernels optional
+
+    n, _ = feats.shape
+    feats = feats.astype(jnp.float32)
+    budget = int(min(budget, n))
+    sq = jnp.sum(feats * feats, axis=-1)  # (n,)
+
+    if sim_fn == "neg_l2":
+        # d_max upper bound: max pairwise distance ≤ 2·max‖x‖ (triangle ineq.)
+        d_max = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
+    elif sim_fn == "dot":
+        d_max = jnp.asarray(0.0, jnp.float32)
+    else:
+        raise ValueError(f"unknown sim_fn {sim_fn!r}")
+
+    def sim_block(cand_idx: jax.Array) -> jax.Array:
+        """(n, m) similarity of every point to the candidate block."""
+        cf = feats[cand_idx]  # (m, d)
+        if sim_fn == "dot":
+            return feats @ cf.T
+        d2 = sq[:, None] + sq[cand_idx][None, :] - 2.0 * (feats @ cf.T)
+        return d_max - jnp.sqrt(jnp.maximum(d2, 0.0))
+
+    n_blocks = (n + block_n - 1) // block_n
+    pad_n = n_blocks * block_n
+    all_idx = jnp.arange(pad_n) % n  # wrap padding onto valid rows
+
+    def gains_all(cur_max: jax.Array) -> jax.Array:
+        """Gains for every candidate in V, computed block by block."""
+
+        def blk(carry, b):
+            idx = jax.lax.dynamic_slice_in_dim(all_idx, b * block_n, block_n)
+            if gains_impl == "pallas":
+                g = kops.fl_gains(feats, feats[idx], cur_max, sq, sq[idx], d_max)
+            else:
+                s = sim_block(idx)
+                g = jnp.sum(jnp.maximum(s - cur_max[:, None], 0.0), axis=0)
+            return carry, g
+
+        _, gs = jax.lax.scan(blk, None, jnp.arange(n_blocks))
+        return gs.reshape(pad_n)[:n]
+
+    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
+        init_selected, budget, n, lambda e: sim_block(e[None])[:, 0]
+    )
+
+    def step(state, _):
+        cur_max, chosen = state
+        g = gains_all(cur_max)
+        g = jnp.where(chosen, -jnp.inf, g)
+        e = jnp.argmax(g)
+        s_e = sim_block(e[None])[:, 0]
+        return (jnp.maximum(cur_max, s_e), chosen.at[e].set(True)), (
+            e.astype(jnp.int32),
+            g[e],
+        )
+
+    (cur_max, _), (new_idx, new_gains) = jax.lax.scan(
+        step, (cur_max0, chosen0), None, length=budget - init_idx.shape[0]
+    )
+    indices = jnp.concatenate([init_idx, new_idx])
+    gains = jnp.concatenate([init_gains, new_gains])
+
+    # Weights: assign every i to its most-similar selected element.
+    sel_sim = sim_block(indices)  # (n, r)
+    assign = jnp.argmax(sel_sim, axis=1)
+    weights = jnp.zeros((budget,), jnp.float32).at[assign].add(1.0)
+    best = jnp.max(sel_sim, axis=1)
+    if sim_fn == "neg_l2":
+        coverage = jnp.sum(d_max - best)  # = L(S) = Σ_i min_{j∈S} ‖x_i − x_j‖
+    else:
+        coverage = -jnp.sum(best)  # dot-similarity residual (lower = better)
+    return FLResult(indices, gains.astype(jnp.float32), weights, coverage)
+
+
+@dataclasses.dataclass(frozen=True)
+class FeaturesConfig(EngineConfig):
+    """Matrix-free blocked greedy.
+
+    Attributes:
+      gains_impl: 'jax' (pure-jnp sweep) | 'pallas' (fused ``fl_gains``
+        kernel; TPU, interpret mode elsewhere).
+      block_n: candidate block size per gain-sweep tile.
+    """
+
+    name: ClassVar[str] = "features"
+    gains_impl: str = "jax"
+    block_n: int = 512
+
+
+@register_engine
+class FeaturesEngine(SelectionEngine):
+    name = "features"
+    config_cls = FeaturesConfig
+    capabilities = Capabilities(
+        exact=True,
+        matrix_free=True,
+        jit_safe=True,
+        supports_cover=False,
+        supports_metrics=("l2", "cosine"),  # cosine via normalized l2
+        memory=lambda n, d: 4 * n * (d + 512),
+    )
+
+    def select(
+        self, feats, budget, *, metric="l2", init_selected=None, rng=None
+    ) -> FLResult:
+        feats = normalize_for_metric(jnp.asarray(feats), metric)
+        res = greedy_fl_features(
+            feats,
+            budget,
+            gains_impl=self.config.gains_impl,
+            block_n=self.config.block_n,
+            init_selected=init_selected,
+        )
+        if metric == "cosine":  # report L(S) in cosine-distance units
+            res = res._replace(
+                coverage=cosine_residual_coverage(feats, res.indices)
+            )
+        return res

@@ -1,0 +1,183 @@
+"""Deprecation shims for the pre-registry flat engine-knob surface.
+
+Before the SelectionEngine registry (PR 4), every engine hung its tuning
+knobs directly off ``CraigConfig`` as engine-prefixed fields and
+``distributed_select`` re-threaded them as keyword arguments.  This module
+is the ONLY place in ``src/`` that still references those flat knob names
+— enforced by ``tests/test_no_flat_engine_knobs.py`` — and its job is to
+map them onto the typed ``EngineConfig``s with a single
+``DeprecationWarning`` per resolution.
+
+Migration guide (README §Engines has the full table)::
+
+    engine='sparse', topk_k=64, topk_impl='pallas'
+        -> engine=SparseConfig(k=64, impl='pallas')
+    engine='device', device_q=16, device_stale_tol=0.8,
+                     device_tile_dtype='bfloat16'
+        -> engine=DeviceConfig(q=16, stale_tol=0.8, tile_dtype='bfloat16')
+    engine='features', gains_impl='pallas'
+        -> engine=FeaturesConfig(gains_impl='pallas')
+    engine='stochastic', stochastic_delta=0.05
+        -> engine=StochasticConfig(delta=0.05)
+    engine='matrix' / 'lazy'
+        -> engine=MatrixConfig() / LazyConfig()
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+from repro.core.engines.base import EngineConfig
+from repro.core.engines.registry import get_engine
+
+__all__ = [
+    "LegacyEngineKnobs",
+    "resolve_engine_config",
+    "resolve_distributed_engine",
+]
+
+_LEGACY_ENGINE_STRINGS = (
+    "matrix", "lazy", "stochastic", "features", "sparse", "device",
+)
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class LegacyEngineKnobs:
+    """Deprecated flat engine knobs, inherited by ``CraigConfig``.
+
+    Kept so pre-PR-4 call sites (``CraigConfig(engine='sparse',
+    topk_k=32)``) keep constructing; :func:`resolve_engine_config` is the
+    only reader and maps them onto the typed configs.  New code sets
+    ``CraigConfig.engine`` to an ``EngineConfig`` and never touches these.
+
+    kw_only: inheriting would otherwise prepend these fields to
+    ``CraigConfig``'s positional order and silently re-bind positional
+    construction; keyword-only turns that into a loud ``TypeError``.
+    """
+
+    stochastic_delta: float = 0.01
+    gains_impl: str = "jax"
+    topk_k: int = 64
+    topk_impl: str = "jax"
+    device_q: int = 1
+    device_stale_tol: float = 0.7
+    device_tile_dtype: str = "float32"
+
+
+def _map_legacy_string(cfg, engine: str) -> EngineConfig:
+    """Legacy engine string + flat knobs → the equivalent typed config."""
+    cfg_cls = get_engine(engine).config_cls
+    if engine == "stochastic":
+        return cfg_cls(delta=cfg.stochastic_delta)
+    if engine == "features":
+        return cfg_cls(gains_impl=cfg.gains_impl)
+    if engine == "sparse":
+        return cfg_cls(k=cfg.topk_k, impl=cfg.topk_impl)
+    if engine == "device":
+        return cfg_cls(
+            q=cfg.device_q,
+            stale_tol=cfg.device_stale_tol,
+            tile_dtype=cfg.device_tile_dtype,
+            gains_impl=cfg.gains_impl,
+        )
+    return cfg_cls()  # matrix / lazy — no knobs
+
+
+def _nondefault_knobs(cfg) -> dict:
+    """Flat knobs whose value differs from the LegacyEngineKnobs default."""
+    return {
+        f.name: getattr(cfg, f.name)
+        for f in dataclasses.fields(LegacyEngineKnobs)
+        if getattr(cfg, f.name) != f.default
+    }
+
+
+def resolve_engine_config(cfg, _stacklevel: int = 3) -> EngineConfig | None:
+    """``CraigConfig.engine`` (str | EngineConfig) → typed EngineConfig.
+
+    Returns None for ``'auto'`` — the caller resolves per pool via
+    ``registry.auto_engine_config``.  Legacy strings map the flat knobs
+    onto the typed config and emit one ``DeprecationWarning``.  Flat knobs
+    combined with a typed config or ``'auto'`` have nothing to attach to;
+    they are ignored with a loud warning (half-migrated call sites).
+    ``_stacklevel`` points the warnings at the *user's* call site —
+    wrappers that add a frame (``CraigSelector.resolve_engine``) bump it.
+    """
+    engine = cfg.engine
+    if isinstance(engine, EngineConfig) or engine == "auto":
+        stray = _nondefault_knobs(cfg)
+        if stray:
+            warnings.warn(
+                f"CraigConfig(engine={engine!r}) ignores the legacy flat "
+                f"engine knobs {stray} — set them on the typed EngineConfig "
+                "instead (migration guide: README §Engines)",
+                UserWarning,
+                stacklevel=_stacklevel,
+            )
+        return engine if isinstance(engine, EngineConfig) else None
+    if engine not in _LEGACY_ENGINE_STRINGS:
+        raise ValueError(
+            f"unknown engine {engine!r}: pass an EngineConfig, 'auto', or "
+            f"one of {_LEGACY_ENGINE_STRINGS}"
+        )
+    typed = _map_legacy_string(cfg, engine)
+    warnings.warn(
+        f"CraigConfig(engine={engine!r}) with flat engine knobs is "
+        f"deprecated; use CraigConfig(engine={typed!r}) "
+        "(migration guide: README §Engines)",
+        DeprecationWarning,
+        stacklevel=_stacklevel,
+    )
+    return typed
+
+
+_DISTRIBUTED_KNOBS = ("topk_k", "device_q", "device_stale_tol")
+
+
+def resolve_distributed_engine(local_engine, knobs: dict) -> EngineConfig | None:
+    """``distributed_select``'s legacy flat-kwarg surface → typed config.
+
+    ``local_engine`` is a typed EngineConfig, ``'auto'`` (returns None —
+    the caller resolves per shard via ``auto_engine_config``), or a legacy
+    string combined with flat knob kwargs collected in ``knobs``.
+    """
+    unknown = set(knobs) - set(_DISTRIBUTED_KNOBS)
+    if unknown:
+        raise TypeError(
+            f"distributed_select got unexpected kwargs {sorted(unknown)}"
+        )
+    if isinstance(local_engine, EngineConfig):
+        if knobs:
+            raise TypeError(
+                "pass either a typed EngineConfig or legacy flat engine "
+                "kwargs, not both"
+            )
+        return local_engine
+    if local_engine == "auto":
+        if knobs:
+            raise TypeError(
+                "legacy flat engine kwargs require a legacy local_engine "
+                "string; with local_engine='auto' pass a typed EngineConfig"
+            )
+        return None
+    if local_engine not in _LEGACY_ENGINE_STRINGS:
+        raise ValueError(f"unknown local_engine {local_engine!r}")
+    cfg_cls = get_engine(local_engine).config_cls
+    if local_engine == "sparse":
+        typed = cfg_cls(k=knobs.get("topk_k", 64))
+    elif local_engine == "device":
+        typed = cfg_cls(
+            q=knobs.get("device_q", 1),
+            stale_tol=knobs.get("device_stale_tol", 0.7),
+            gains_impl="jax",  # shard_map bodies use the jnp sweep
+        )
+    else:
+        typed = cfg_cls()
+    warnings.warn(
+        f"distributed_select(local_engine={local_engine!r}, ...) with flat "
+        f"engine kwargs is deprecated; pass local_engine={typed!r} "
+        "(migration guide: README §Engines)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return typed

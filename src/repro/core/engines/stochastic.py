@@ -1,0 +1,151 @@
+"""Stochastic greedy engine (Mirzasoleiman et al. 2015a; DESIGN.md §3.3).
+
+The paper's O(|V|) fast path (§3.2, §3.4): each step evaluates gains on a
+random candidate sample of size (n/r)·ln(1/δ), a (1−1/e−δ) approximation
+in expectation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines.base import (
+    Capabilities,
+    EngineConfig,
+    FLResult,
+    SelectionEngine,
+    _cluster_weights,
+    _replay_prefix,
+    coverage_l,
+    pairwise_distances,
+)
+from repro.core.engines.registry import register_engine
+
+__all__ = ["StochasticConfig", "StochasticEngine", "stochastic_greedy_fl"]
+
+
+@partial(jax.jit, static_argnames=("budget", "sample_size"))
+def stochastic_greedy_fl(
+    sim: jax.Array,
+    budget: int,
+    key: jax.Array,
+    sample_size: int,
+    init_selected: jax.Array | None = None,
+) -> FLResult:
+    """Stochastic greedy: each step evaluates gains on a random candidate set.
+
+    With sample_size = (n/r)·log(1/δ) the result is a (1−1/e−δ) approximation
+    in expectation (Mirzasoleiman et al., AAAI'15), with O(n·log 1/δ) total
+    gain evaluations.
+
+    When every sampled candidate is already selected (small pools, large
+    budgets), the step falls back to the first unchosen element instead of
+    re-selecting a masked candidate — selections are always unique.
+
+    ``sample_size >= n`` is the δ→0 limit: the step sweeps every candidate
+    deterministically (sampling n-of-n with replacement would still miss the
+    argmax with probability ≈ 1/e) and the engine reduces to exact greedy.
+
+    Args:
+      sim: (n, n) similarities.
+      budget: r (static); clamped to n.
+      key: PRNG key for candidate sampling.
+      sample_size: candidates per step (static).
+      init_selected: optional warm-start prefix (see ``greedy_fl_matrix``).
+    """
+    n = sim.shape[0]
+    budget = int(min(budget, n))
+    sim = sim.astype(jnp.float32)
+
+    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
+        init_selected, budget, n, lambda e: sim[:, e]
+    )
+
+    full_sweep = sample_size >= n  # δ→0: evaluate everything, exact greedy
+
+    def step(state, key_t):
+        cur_max, chosen_mask = state
+        # Sample candidates (with replacement; collisions harmless), or the
+        # whole ground set once the requested sample covers it.
+        if full_sweep:
+            cand = jnp.arange(n)
+        else:
+            cand = jax.random.randint(key_t, (sample_size,), 0, n)
+        cand_sim = sim[:, cand]  # (n, m)
+        gains = jnp.sum(jnp.maximum(cand_sim - cur_max[:, None], 0.0), axis=0)
+        gains = jnp.where(chosen_mask[cand], -jnp.inf, gains)
+        best = jnp.argmax(gains)
+        # All candidates already chosen → every gain is −inf and argmax
+        # would re-select cand[0]; take the first unchosen element instead
+        # (one always exists while |S| < n).
+        all_dup = ~jnp.isfinite(gains[best])
+        fallback = jnp.argmin(chosen_mask)  # first False
+        e = jnp.where(all_dup, fallback, cand[best])
+        g = jnp.where(
+            all_dup,
+            jnp.sum(jnp.maximum(sim[:, fallback] - cur_max, 0.0)),
+            gains[best],
+        )
+        new_max = jnp.maximum(cur_max, sim[:, e])
+        return (new_max, chosen_mask.at[e].set(True)), (e.astype(jnp.int32), g)
+
+    keys = jax.random.split(key, budget - init_idx.shape[0])
+    (cur_max, _), (new_idx, new_gains) = jax.lax.scan(
+        step, (cur_max0, chosen0), keys
+    )
+    indices = jnp.concatenate([init_idx, new_idx])
+    gains = jnp.concatenate([init_gains, new_gains])
+    weights = _cluster_weights(sim, indices)
+    coverage = jnp.sum(jnp.max(sim, axis=1) - cur_max)
+    return FLResult(indices, gains.astype(jnp.float32), weights, coverage)
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticConfig(EngineConfig):
+    """Stochastic greedy.
+
+    Attributes:
+      delta: failure probability δ of the per-step sample; the sample size
+        is (n/r)·ln(1/δ), clamped to n (δ→0 reduces to exact greedy).
+    """
+
+    name: ClassVar[str] = "stochastic"
+    delta: float = 0.01
+
+
+@register_engine
+class StochasticEngine(SelectionEngine):
+    name = "stochastic"
+    config_cls = StochasticConfig
+    capabilities = Capabilities(
+        exact=False,  # (1−1/e−δ) in expectation
+        matrix_free=False,
+        jit_safe=True,
+        supports_cover=False,
+        supports_metrics=("l2", "cosine"),
+        memory=lambda n, d: 4 * n * n,
+    )
+
+    def select(
+        self, feats, budget, *, metric="l2", init_selected=None, rng=None
+    ) -> FLResult:
+        feats = jnp.asarray(feats)
+        n = feats.shape[0]
+        budget = int(min(budget, n))
+        dist = pairwise_distances(feats, metric)
+        d_max = jnp.max(dist) + 1e-6
+        m = max(
+            1, int(np.ceil(n / budget * np.log(1.0 / self.config.delta)))
+        )
+        m = min(m, n)
+        if rng is None or isinstance(rng, int):
+            rng = jax.random.PRNGKey(0 if rng is None else rng)
+        res = stochastic_greedy_fl(
+            d_max - dist, budget, rng, m, init_selected=init_selected
+        )
+        return res._replace(coverage=coverage_l(dist, res.indices))

@@ -1,76 +1,54 @@
-"""Facility-location objective and greedy maximizers for CRAIG (paper §3.2).
+"""Compatibility façade: the greedy engines moved to ``repro.core.engines``.
 
-CRAIG reduces gradient-approximation-error minimization (paper Eq. 8) to
-submodular cover / budgeted maximization of the facility-location function
+This module used to hold every greedy facility-location maximizer in one
+~1000-line file.  PR 4 split it into the ``repro.core.engines`` package —
+one module per engine behind the ``SelectionEngine`` protocol, a
+capability-driven registry, and typed per-engine configs (DESIGN.md §3).
+The functional API is unchanged and re-exported here so existing imports
+(``from repro.core import facility_location as fl``) keep working:
 
-    F(S) = L({s0}) - L(S ∪ {s0}),        L(S) = sum_i min_{j∈S} d_ij
+* ``greedy_fl_matrix``      — engines.matrix (§3.1): exact greedy over a
+                              dense similarity matrix, pure JAX.
+* ``lazy_greedy_fl``        — engines.lazy (§3.2): host-side Minoux lazy
+                              greedy; oracle + large-n CPU path.
+* ``stochastic_greedy_fl``  — engines.stochastic (§3.3): the paper's
+                              O(|V|) fast path.
+* ``greedy_fl_features``    — engines.features (§3.4): matrix-free blocked
+                              greedy (Pallas ``fl_gains`` on TPU).
+* ``topk_graph`` / ``greedy_fl_topk`` / ``sparse_greedy_fl`` /
+  ``sparse_greedy_fl_features`` — engines.sparse (§3.5): the O(n·k)
+                              million-point engine.
+* ``greedy_fl_device``      — engines.device (§3.6): device-resident fused
+                              greedy (one ``fl_gains_argmax`` launch per
+                              sweep, Minoux-bound block greedy at q > 1).
 
-over a ground set V with pairwise dissimilarities ``d_ij`` in gradient-proxy
-space.  Equivalently, with similarities ``s_ij = d_max - d_ij`` (the auxiliary
-element s0 realizing ``d_{i,s0} = d_max``):
+New code should prefer the typed surface — ``repro.core.engines``'s
+``EngineConfig`` subclasses, ``get_engine``/``list_engines``, and
+``CraigConfig(engine=SparseConfig(k=64))`` — over these raw functions;
+see README §Engines for the protocol and the migration guide.
 
-    F(S) = sum_i max_{j∈S} s_ij.
-
-The greedy engines:
-
-* ``greedy_fl_matrix``      — exact greedy over a precomputed similarity
-                              matrix, pure JAX (``lax.fori_loop``), O(r·n²).
-                              The production path for per-shard selection.
-* ``lazy_greedy_fl``        — host-side lazy (Minoux 1978) exact greedy with a
-                              priority queue; oracle + large-n CPU path.
-* ``stochastic_greedy_fl``  — stochastic greedy (Mirzasoleiman et al. 2015a),
-                              O(n log 1/δ) gain evaluations per step, pure JAX;
-                              the paper's "O(|V|)" fast path (§3.2, §3.4).
-* ``sparse_greedy_fl``      — lazy greedy over a top-k similarity graph
-                              (apricot's ``select_next_sparse`` idiom,
-                              vectorized): gains walk CSR *columns* of the
-                              sparsified graph, O(nnz/n · evals) per step and
-                              O(n·k) memory — the million-point engine
-                              (DESIGN.md §3.5).
-* ``greedy_fl_topk``        — the same sparsified objective in pure JAX
-                              (scatter-add gains over the fixed-width top-k
-                              rows), jit/shard_map-safe; powers the sparse
-                              round-1 of ``core.distributed``.
-* ``greedy_fl_device``      — device-resident fused greedy (DESIGN.md §3.6):
-                              the whole selection loop lives in one jitted
-                              ``while_loop``; a sweep round is a single fused
-                              gains-sweep + per-block argmax kernel launch
-                              (``fl_gains_argmax`` on TPU, a blockwise jnp
-                              scan elsewhere), streaming feature tiles so the
-                              (n, n) similarity never exists.  ``q > 1``
-                              amortizes each sweep over up to q commits by
-                              keeping the gains vector as device-resident
-                              Minoux bounds: winners are re-checked against
-                              the updated cover state before commit and the
-                              engine falls back to a fresh sweep when the
-                              bounds go stale.  Optional bf16 feature tiles
-                              with fp32 gain accumulation.
-
-``topk_graph`` builds the (n, k) neighbor structure blockwise — pure-jnp scan
-or the Pallas ``topk_sim`` kernel — without materializing (n, n).
-
-All JAX engines are jit-compatible and differentiable-free (selection is a
-discrete pre-processing step, per the paper).
-
-Warm starts: every engine accepts ``init_selected`` — a prefix of medoids to
-install before greedy resumes.  The prefix's ``cur_max`` cover state is
-replayed (O(r₀·n) instead of the O(r₀·n²) a cold run spends re-deriving it),
-then the remaining ``budget − r₀`` elements are selected normally.  Because
-exact greedy is nested (prefix-consistent, see
-tests/test_craig.py::test_greedy_order_prefix_quality), warm-starting from a
-prefix of the cold selection reproduces the cold selection exactly; the
-refresh path exploits this by seeding each re-selection with the previous
-refresh's high-gain prefix (DESIGN.md §4).
+Warm starts: every engine accepts ``init_selected`` — a prefix of medoids
+installed before greedy resumes; the prefix's cover state is replayed in
+O(r₀·n), and exact greedy's prefix consistency makes warm == cold on
+unchanged features (DESIGN.md §4).
 """
-from __future__ import annotations
-
-import heapq
-from functools import partial
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.engines.base import (
+    FLResult,
+    assign_and_weights,
+    coverage_l,
+    facility_location_value,
+)
+from repro.core.engines.device import greedy_fl_device
+from repro.core.engines.features import greedy_fl_features
+from repro.core.engines.lazy import lazy_greedy_fl
+from repro.core.engines.matrix import greedy_fl_matrix
+from repro.core.engines.sparse import (
+    greedy_fl_topk,
+    sparse_greedy_fl,
+    sparse_greedy_fl_features,
+    topk_graph,
+)
+from repro.core.engines.stochastic import stochastic_greedy_fl
 
 __all__ = [
     "FLResult",
@@ -87,929 +65,3 @@ __all__ = [
     "sparse_greedy_fl_features",
     "assign_and_weights",
 ]
-
-
-class FLResult(NamedTuple):
-    """Result of a greedy facility-location run.
-
-    Attributes:
-      indices:  (r,) int32 — selected ground-set indices, in greedy order.
-      gains:    (r,) float32 — marginal gain of each selection (non-increasing
-                for exact greedy; approximately so for stochastic greedy).
-      weights:  (r,) float32 — γ_j cluster sizes (paper Alg. 1 line 8);
-                sum(weights) == n.
-      coverage: () float32 — final L(S) = Σ_i min_{j∈S} d_ij, the paper's
-                upper bound on the gradient estimation error (Eq. 8).
-    """
-
-    indices: jax.Array
-    gains: jax.Array
-    weights: jax.Array
-    coverage: jax.Array
-
-
-def facility_location_value(sim: jax.Array, selected_mask: jax.Array) -> jax.Array:
-    """F(S) = Σ_i max_{j∈S} s_ij with empty-set convention F(∅)=0 (s0 at 0).
-
-    Args:
-      sim: (n, n) similarity matrix (s_ij ≥ 0; s0 baseline already subtracted).
-      selected_mask: (n,) bool.
-    """
-    neg = jnp.asarray(-jnp.inf, sim.dtype)
-    masked = jnp.where(selected_mask[None, :], sim, neg)
-    best = jnp.max(masked, axis=1)
-    return jnp.sum(jnp.where(jnp.any(selected_mask), jnp.maximum(best, 0.0), 0.0))
-
-
-def coverage_l(dist: jax.Array, indices: jax.Array) -> jax.Array:
-    """L(S) = Σ_i min_{j∈S} d_ij  (paper Eq. 8) for selected ``indices``."""
-    sub = dist[:, indices]  # (n, r)
-    return jnp.sum(jnp.min(sub, axis=1))
-
-
-# ---------------------------------------------------------------------------
-# Exact greedy over a dense similarity matrix (JAX)
-# ---------------------------------------------------------------------------
-
-
-def _as_init_idx(init_selected, budget: int) -> jnp.ndarray:
-    """Validate/normalize a warm-start prefix for the JAX engines.
-
-    Returns a (r₀,) int32 array with r₀ ≤ budget; the length is static (it
-    comes from the array shape), so ``budget − r₀`` remains a Python int
-    under jit.
-    """
-    idx = jnp.asarray(init_selected, jnp.int32)
-    if idx.ndim != 1:
-        raise ValueError("init_selected must be 1-D")
-    if idx.shape[0] > budget:
-        raise ValueError(
-            f"init_selected has {idx.shape[0]} elements > budget {budget}"
-        )
-    return idx
-
-
-def _replay_prefix(init_selected, budget: int, n: int, col_fn, pw=None):
-    """Replay a warm-start prefix's cover state (shared by the JAX engines).
-
-    ``col_fn(e)`` returns the (n,) similarity column of element e; marginal
-    gains are recorded in prefix order (optionally ``pw``-weighted), exactly
-    as a cold greedy run would have produced them.
-
-    Returns (init_idx (r₀,), init_gains (r₀,), cur_max (n,), chosen (n,)).
-    """
-    cur_max = jnp.zeros((n,), jnp.float32)
-    chosen = jnp.zeros((n,), bool)
-    if init_selected is None:
-        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32), cur_max, chosen
-    init_idx = _as_init_idx(init_selected, budget)
-
-    def warm(cur, e):
-        col = col_fn(e)
-        gap = jnp.maximum(col - cur, 0.0)
-        g = jnp.sum(gap) if pw is None else jnp.dot(pw, gap)
-        return jnp.maximum(cur, col), g
-
-    cur_max, init_gains = jax.lax.scan(warm, cur_max, init_idx)
-    return init_idx, init_gains, cur_max, chosen.at[init_idx].set(True)
-
-
-@partial(jax.jit, static_argnames=("budget",))
-def greedy_fl_matrix(
-    sim: jax.Array,
-    budget: int,
-    point_weights: jax.Array | None = None,
-    init_selected: jax.Array | None = None,
-) -> FLResult:
-    """Exact greedy maximization of F over a dense (n, n) similarity matrix.
-
-    Maintains cur_max_i = max_{j∈S} s_ij (0 for the auxiliary element), so the
-    marginal gain of candidate e is Σ_i w_i·relu(s_ie − cur_max_i).  One
-    ``scan`` step does an O(n²) relu-reduce; total O(r·n²) — matmul-shaped
-    and MXU/VPU friendly on TPU.
-
-    Args:
-      sim: (n, n) float similarities, s_ij ≥ 0. sim[i, e] = benefit of e for i.
-      budget: r, number of elements to select (static).
-      point_weights: optional (n,) per-point multiplicities (weighted FL, used
-        by the distributed two-round merge where each candidate represents a
-        cluster of γ points).  Defaults to 1.
-      init_selected: optional (r₀ ≤ r,) warm-start prefix.  Its elements are
-        installed first (marginal gains replayed in order, O(r₀·n)), then
-        greedy selects the remaining r − r₀.
-    """
-    n = sim.shape[0]
-    sim = sim.astype(jnp.float32)
-    pw = (
-        jnp.ones((n,), jnp.float32)
-        if point_weights is None
-        else point_weights.astype(jnp.float32)
-    )
-
-    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
-        init_selected, budget, n, lambda e: sim[:, e], pw=pw
-    )
-
-    def step(state, _):
-        cur_max, chosen_mask = state
-        # gains[e] = sum_i w_i · relu(sim[i, e] - cur_max[i])
-        gains = pw @ jnp.maximum(sim - cur_max[:, None], 0.0)
-        gains = jnp.where(chosen_mask, -jnp.inf, gains)
-        e = jnp.argmax(gains)
-        new_max = jnp.maximum(cur_max, sim[:, e])
-        return (new_max, chosen_mask.at[e].set(True)), (e.astype(jnp.int32), gains[e])
-
-    (cur_max, _), (new_idx, new_gains) = jax.lax.scan(
-        step, (cur_max0, chosen0), None, length=budget - init_idx.shape[0]
-    )
-    indices = jnp.concatenate([init_idx, new_idx])
-    gains = jnp.concatenate([init_gains, new_gains])
-
-    weights = _cluster_weights(sim, indices, pw)
-    # L(S) in similarity space: Σ_i (s_max_i_possible − cur_max) is not
-    # recoverable without d; callers with distances use coverage_l. Report the
-    # residual un-covered mass Σ_i (max_col_i − cur_max_i) as coverage proxy.
-    coverage = jnp.sum(jnp.max(sim, axis=1) - cur_max)
-    return FLResult(indices, gains.astype(jnp.float32), weights, coverage)
-
-
-def _cluster_weights(
-    sim: jax.Array, indices: jax.Array, point_weights: jax.Array | None = None
-) -> jax.Array:
-    """γ_j = Σ_{i : j = argmax_{s∈S} s_is} w_i (paper Alg. 1 line 8)."""
-    sub = sim[:, indices]  # (n, r)
-    assign = jnp.argmax(sub, axis=1)  # (n,) positions into S
-    r = indices.shape[0]
-    pw = (
-        jnp.ones((sim.shape[0],), jnp.float32)
-        if point_weights is None
-        else point_weights.astype(jnp.float32)
-    )
-    return jnp.zeros((r,), jnp.float32).at[assign].add(pw)
-
-
-# ---------------------------------------------------------------------------
-# Lazy greedy (host, exact, Minoux 1978) — oracle and large-n CPU path
-# ---------------------------------------------------------------------------
-
-
-def lazy_greedy_fl(
-    sim: np.ndarray, budget: int, init_selected: np.ndarray | None = None
-) -> FLResult:
-    """Exact lazy greedy with a max-heap of stale upper bounds.
-
-    Numerically identical selections to ``greedy_fl_matrix`` (ties broken by
-    lowest index) but typically evaluates far fewer gains.  ``init_selected``
-    warm-starts: the prefix is installed first (gains replayed in order) and
-    the heap is built against the warmed cover state, so the O(n²) heap
-    initialization prices in the prefix for free.
-    """
-    sim = np.asarray(sim, np.float64)
-    n = sim.shape[0]
-    budget = min(budget, n)
-    cur_max = np.zeros(n)
-    indices, gains = [], []
-    if init_selected is not None:
-        for e in np.asarray(init_selected, np.int64)[:budget]:
-            e = int(e)
-            indices.append(e)
-            gains.append(float(np.maximum(sim[:, e] - cur_max, 0.0).sum()))
-            cur_max = np.maximum(cur_max, sim[:, e])
-    r0 = len(indices)
-    in_init = set(indices)
-    # heap of (-gain, index, stamp); stamp = |S| when the gain was computed
-    heap = [
-        (-float(np.maximum(sim[:, e] - cur_max, 0.0).sum()), e, r0)
-        for e in range(n)
-        if e not in in_init
-    ]
-    heapq.heapify(heap)
-    for t in range(r0, budget):
-        while True:
-            neg_g, e, stamp = heapq.heappop(heap)
-            if stamp == t:
-                break
-            g = float(np.maximum(sim[:, e] - cur_max, 0.0).sum())
-            heapq.heappush(heap, (-g, e, t))
-        indices.append(e)
-        gains.append(-neg_g)
-        cur_max = np.maximum(cur_max, sim[:, e])
-    idx = jnp.asarray(np.array(indices, np.int32))
-    sub = sim[:, np.array(indices)]
-    assign = np.argmax(sub, axis=1)
-    weights = np.bincount(assign, minlength=budget).astype(np.float32)
-    coverage = float(np.sum(sim.max(axis=1) - cur_max))
-    return FLResult(idx, jnp.asarray(np.array(gains, np.float32)),
-                    jnp.asarray(weights), jnp.asarray(coverage, jnp.float32))
-
-
-# ---------------------------------------------------------------------------
-# Stochastic greedy (JAX) — paper's O(|V|) fast path
-# ---------------------------------------------------------------------------
-
-
-@partial(jax.jit, static_argnames=("budget", "sample_size"))
-def stochastic_greedy_fl(
-    sim: jax.Array,
-    budget: int,
-    key: jax.Array,
-    sample_size: int,
-    init_selected: jax.Array | None = None,
-) -> FLResult:
-    """Stochastic greedy: each step evaluates gains on a random candidate set.
-
-    With sample_size = (n/r)·log(1/δ) the result is a (1−1/e−δ) approximation
-    in expectation (Mirzasoleiman et al., AAAI'15), with O(n·log 1/δ) total
-    gain evaluations.
-
-    When every sampled candidate is already selected (small pools, large
-    budgets), the step falls back to the first unchosen element instead of
-    re-selecting a masked candidate — selections are always unique.
-
-    ``sample_size >= n`` is the δ→0 limit: the step sweeps every candidate
-    deterministically (sampling n-of-n with replacement would still miss the
-    argmax with probability ≈ 1/e) and the engine reduces to exact greedy.
-
-    Args:
-      sim: (n, n) similarities.
-      budget: r (static); clamped to n.
-      key: PRNG key for candidate sampling.
-      sample_size: candidates per step (static).
-      init_selected: optional warm-start prefix (see ``greedy_fl_matrix``).
-    """
-    n = sim.shape[0]
-    budget = int(min(budget, n))
-    sim = sim.astype(jnp.float32)
-
-    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
-        init_selected, budget, n, lambda e: sim[:, e]
-    )
-
-    full_sweep = sample_size >= n  # δ→0: evaluate everything, exact greedy
-
-    def step(state, key_t):
-        cur_max, chosen_mask = state
-        # Sample candidates (with replacement; collisions harmless), or the
-        # whole ground set once the requested sample covers it.
-        if full_sweep:
-            cand = jnp.arange(n)
-        else:
-            cand = jax.random.randint(key_t, (sample_size,), 0, n)
-        cand_sim = sim[:, cand]  # (n, m)
-        gains = jnp.sum(jnp.maximum(cand_sim - cur_max[:, None], 0.0), axis=0)
-        gains = jnp.where(chosen_mask[cand], -jnp.inf, gains)
-        best = jnp.argmax(gains)
-        # All candidates already chosen → every gain is −inf and argmax
-        # would re-select cand[0]; take the first unchosen element instead
-        # (one always exists while |S| < n).
-        all_dup = ~jnp.isfinite(gains[best])
-        fallback = jnp.argmin(chosen_mask)  # first False
-        e = jnp.where(all_dup, fallback, cand[best])
-        g = jnp.where(
-            all_dup,
-            jnp.sum(jnp.maximum(sim[:, fallback] - cur_max, 0.0)),
-            gains[best],
-        )
-        new_max = jnp.maximum(cur_max, sim[:, e])
-        return (new_max, chosen_mask.at[e].set(True)), (e.astype(jnp.int32), g)
-
-    keys = jax.random.split(key, budget - init_idx.shape[0])
-    (cur_max, _), (new_idx, new_gains) = jax.lax.scan(
-        step, (cur_max0, chosen0), keys
-    )
-    indices = jnp.concatenate([init_idx, new_idx])
-    gains = jnp.concatenate([init_gains, new_gains])
-    weights = _cluster_weights(sim, indices)
-    coverage = jnp.sum(jnp.max(sim, axis=1) - cur_max)
-    return FLResult(indices, gains.astype(jnp.float32), weights, coverage)
-
-
-# ---------------------------------------------------------------------------
-# Matrix-free greedy from features (uses the Pallas fl_gains kernel)
-# ---------------------------------------------------------------------------
-
-
-def greedy_fl_features(
-    feats: jax.Array,
-    budget: int,
-    *,
-    sim_fn: str = "neg_l2",
-    gains_impl: str = "jax",
-    block_n: int = 512,
-    init_selected: jax.Array | None = None,
-) -> FLResult:
-    """Greedy FL directly from proxy features, never materializing (n, n).
-
-    Per greedy step, candidate gains are computed blockwise from features —
-    O(n²·d_eff) per step but O(n·block) memory.  ``gains_impl='pallas'`` uses
-    the fused Pallas kernel (``repro.kernels.ops.fl_gains``) on TPU;
-    ``'jax'`` is the pure-jnp fallback (identical math).
-
-    Args:
-      feats: (n, d) proxy features.
-      budget: r.
-      sim_fn: 'neg_l2' → s_ij = d_max − ‖x_i − x_j‖ (paper's metric) or 'dot'.
-      gains_impl: 'jax' | 'pallas'.
-      block_n: candidate block size for gain evaluation.
-      init_selected: optional warm-start prefix (see ``greedy_fl_matrix``);
-        each prefix element costs one O(n·d) similarity column, not a full
-        O(n²·d) gain sweep.
-    """
-    from repro.kernels import ops as kops  # local import; kernels optional
-
-    n, _ = feats.shape
-    feats = feats.astype(jnp.float32)
-    budget = int(min(budget, n))
-    sq = jnp.sum(feats * feats, axis=-1)  # (n,)
-
-    if sim_fn == "neg_l2":
-        # d_max upper bound: max pairwise distance ≤ 2·max‖x‖ (triangle ineq.)
-        d_max = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
-    elif sim_fn == "dot":
-        d_max = jnp.asarray(0.0, jnp.float32)
-    else:
-        raise ValueError(f"unknown sim_fn {sim_fn!r}")
-
-    def sim_block(cand_idx: jax.Array) -> jax.Array:
-        """(n, m) similarity of every point to the candidate block."""
-        cf = feats[cand_idx]  # (m, d)
-        if sim_fn == "dot":
-            return feats @ cf.T
-        d2 = sq[:, None] + sq[cand_idx][None, :] - 2.0 * (feats @ cf.T)
-        return d_max - jnp.sqrt(jnp.maximum(d2, 0.0))
-
-    n_blocks = (n + block_n - 1) // block_n
-    pad_n = n_blocks * block_n
-    all_idx = jnp.arange(pad_n) % n  # wrap padding onto valid rows
-
-    def gains_all(cur_max: jax.Array) -> jax.Array:
-        """Gains for every candidate in V, computed block by block."""
-
-        def blk(carry, b):
-            idx = jax.lax.dynamic_slice_in_dim(all_idx, b * block_n, block_n)
-            if gains_impl == "pallas":
-                g = kops.fl_gains(feats, feats[idx], cur_max, sq, sq[idx], d_max)
-            else:
-                s = sim_block(idx)
-                g = jnp.sum(jnp.maximum(s - cur_max[:, None], 0.0), axis=0)
-            return carry, g
-
-        _, gs = jax.lax.scan(blk, None, jnp.arange(n_blocks))
-        return gs.reshape(pad_n)[:n]
-
-    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
-        init_selected, budget, n, lambda e: sim_block(e[None])[:, 0]
-    )
-
-    def step(state, _):
-        cur_max, chosen = state
-        g = gains_all(cur_max)
-        g = jnp.where(chosen, -jnp.inf, g)
-        e = jnp.argmax(g)
-        s_e = sim_block(e[None])[:, 0]
-        return (jnp.maximum(cur_max, s_e), chosen.at[e].set(True)), (
-            e.astype(jnp.int32),
-            g[e],
-        )
-
-    (cur_max, _), (new_idx, new_gains) = jax.lax.scan(
-        step, (cur_max0, chosen0), None, length=budget - init_idx.shape[0]
-    )
-    indices = jnp.concatenate([init_idx, new_idx])
-    gains = jnp.concatenate([init_gains, new_gains])
-
-    # Weights: assign every i to its most-similar selected element.
-    sel_sim = sim_block(indices)  # (n, r)
-    assign = jnp.argmax(sel_sim, axis=1)
-    weights = jnp.zeros((budget,), jnp.float32).at[assign].add(1.0)
-    best = jnp.max(sel_sim, axis=1)
-    if sim_fn == "neg_l2":
-        coverage = jnp.sum(d_max - best)  # = L(S) = Σ_i min_{j∈S} ‖x_i − x_j‖
-    else:
-        coverage = -jnp.sum(best)  # dot-similarity residual (lower = better)
-    return FLResult(indices, gains.astype(jnp.float32), weights, coverage)
-
-
-# ---------------------------------------------------------------------------
-# Device-resident fused greedy (DESIGN.md §3.6) — one kernel launch per round
-# ---------------------------------------------------------------------------
-
-
-@partial(
-    jax.jit,
-    static_argnames=(
-        "budget", "q", "gains_impl", "block_n", "block_m", "tile_dtype",
-        "stale_tol",
-    ),
-)
-def greedy_fl_device(
-    feats: jax.Array,
-    budget: int,
-    *,
-    q: int = 1,
-    gains_impl: str = "auto",
-    block_n: int = 512,
-    block_m: int = 2048,
-    tile_dtype: str = "float32",
-    stale_tol: float = 0.7,
-    init_selected: jax.Array | None = None,
-) -> FLResult:
-    """Fully jitted device-resident greedy FL from features (DESIGN.md §3.6).
-
-    The entire selection loop is one ``lax.while_loop`` on device — no
-    per-round host round-trip, no (n, n) similarity, no host-visible gains
-    vector on the Pallas path.  A *sweep* round runs one fused
-    gains + argmax pass over every candidate — on TPU a single
-    ``fl_gains_argmax`` kernel launch (gains accumulate tile-by-tile in
-    VMEM, the argmax epilogue is fused, chosen candidates are penalized
-    in-kernel), elsewhere an equivalent blockwise jnp scan with identical
-    tie semantics (lowest index within a block, lowest block across blocks
-    — i.e. ``jnp.argmax`` order) — and commits the winner.
-
-    Block-greedy mode (``q > 1``) amortizes that O(n²·d) sweep over up to
-    ``q`` commits: the sweep's full gains vector stays resident as Minoux
-    upper bounds.  Between sweeps the loop refreshes the top-P bounds
-    against the *updated* cover state in one (n, d)×(d, P) matmul and
-    commits the best refreshed winner iff its fresh gain retains at least
-    ``stale_tol`` of the best outstanding bound (bounds only overestimate,
-    so ``stale_tol=1.0`` is the exact Minoux acceptance rule — the winner
-    is the true argmax; the 0.7 default admits near-argmax winners, which
-    in practice keeps coverage within ~1% of exact while committing far
-    more often).  A failed re-check writes the fresh gains back as new
-    (tighter) bounds; once the refresh budget is spent — the bounds have
-    gone uniformly stale under heavy cover overlap — the engine falls back
-    to a fresh q=1-style sweep.
-
-    ``q=1`` sweeps before every commit and is bit-faithful to
-    ``greedy_fl_matrix``/``greedy_fl_features`` (same objective, same
-    tie-breaking) regardless of ``stale_tol``.
-
-    Args:
-      feats: (n, d) proxy features.
-      budget: r (static); clamped to n.
-      q: max winners committed per sweep (static).  1 = sweep every round;
-        larger values amortize sweeps at large budgets via the lazy bounds.
-      gains_impl: 'auto' (pallas on TPU, jax elsewhere) | 'pallas' | 'jax'.
-      block_n / block_m: pool/candidate tile sizes for the sweep.
-      tile_dtype: 'float32' | 'bfloat16' feature tiles; gains always
-        accumulate fp32.
-      stale_tol: lazy-commit floor in (0, 1]; 1.0 = exact greedy at any q.
-      init_selected: optional warm-start prefix (see ``greedy_fl_matrix``).
-    """
-    n, d = feats.shape
-    feats = feats.astype(jnp.float32)
-    budget = int(min(budget, n))
-    if gains_impl == "auto":
-        gains_impl = "pallas" if jax.default_backend() == "tpu" else "jax"
-    if gains_impl not in ("pallas", "jax"):
-        raise ValueError(f"unknown gains_impl {gains_impl!r}")
-    if tile_dtype not in ("float32", "bfloat16"):
-        raise ValueError(f"unsupported tile_dtype {tile_dtype!r}")
-    td = jnp.dtype(tile_dtype)
-
-    sq = jnp.sum(feats * feats, axis=-1)  # (n,)
-    d_max = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
-
-    def sim_cols(idx: jax.Array) -> jax.Array:
-        """(n, m) similarity of every point to elements ``idx`` ((m,))."""
-        cf = feats[idx]
-        d2 = sq[:, None] + sq[idx][None, :] - 2.0 * (feats @ cf.T)
-        return d_max - jnp.sqrt(jnp.maximum(d2, 0.0))
-
-    def sim_col(e: jax.Array) -> jax.Array:
-        """(n,) similarity of every point to element e."""
-        return sim_cols(jnp.asarray(e)[None])[:, 0]
-
-    bm = min(block_m, n)
-    n_blocks = (n + bm - 1) // bm
-    pad_m = n_blocks * bm
-    if gains_impl == "jax":
-        featp = jnp.pad(feats, ((0, pad_m - n), (0, 0)))
-        sqp = jnp.pad(sq, (0, pad_m - n))
-        featp_t = featp.astype(td)
-        feats_t = feats.astype(td)
-
-    def sweep(cur_max, chosen):
-        """One fused pass: full gains vector + per-block (best_gain,
-        best_idx) partials.  Blocks whose every candidate is chosen/padded
-        report best_gain ≤ −1e29 (real gains are ≥ 0)."""
-        if gains_impl == "pallas":
-            from repro.kernels import ops as kops  # local; kernels optional
-
-            return kops.fl_gains_argmax(
-                feats, feats, cur_max, sq, sq, d_max, chosen,
-                block_n=block_n, block_m=bm, tile_dtype=tile_dtype,
-            )
-        penp = jnp.where(
-            jnp.pad(chosen, (0, pad_m - n), constant_values=True), -1e30, 0.0
-        )
-
-        def blk(carry, b):
-            lo = b * bm
-            cf = jax.lax.dynamic_slice_in_dim(featp_t, lo, bm)
-            csq = jax.lax.dynamic_slice_in_dim(sqp, lo, bm)
-            cpen = jax.lax.dynamic_slice_in_dim(penp, lo, bm)
-            dots = jax.lax.dot_general(
-                feats_t, cf, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )  # (n, bm)
-            d2 = sq[:, None] + csq[None, :] - 2.0 * dots
-            s = d_max - jnp.sqrt(jnp.maximum(d2, 0.0))
-            g = jnp.sum(jnp.maximum(s - cur_max[:, None], 0.0), axis=0)
-            gp = g + cpen
-            p = jnp.argmax(gp)
-            return carry, (g, gp[p], (lo + p).astype(jnp.int32))
-
-        _, (g, pg, pi) = jax.lax.scan(blk, None, jnp.arange(n_blocks))
-        return g.reshape(pad_m)[:n], pg, pi
-
-    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
-        init_selected, budget, n, sim_col
-    )
-    r0 = init_idx.shape[0]
-    q = max(1, int(q))
-    # Between sweeps, stale bounds are refreshed P at a time (one
-    # (n, d) × (d, P) matmul — ~P/n of a sweep, and one loop dispatch
-    # instead of P).  The refresh budget caps the worst-case chew at ~1/4
-    # sweep before falling back to a fresh full sweep.  Between two commits
-    # each candidate can go stale at most once (a refreshed bound is exact),
-    # so the loop terminates even without the fallback.
-    refresh_p = min(128, n)
-    max_fails = max(1, n // (4 * refresh_p))
-
-    out_idx0 = jnp.zeros((budget,), jnp.int32).at[:r0].set(init_idx)
-    out_g0 = jnp.zeros((budget,), jnp.float32).at[:r0].set(init_gains)
-    neg = jnp.float32(-jnp.inf)
-
-    # Carry: cover state, chosen mask, Minoux upper bounds (−inf = invalid /
-    # chosen), commits since the last sweep, consecutive stale re-checks,
-    # output buffers, count.  commits0 = q forces a sweep on entry.
-    state0 = (
-        cur_max0, chosen0, jnp.full((n,), neg), jnp.int32(q), jnp.int32(0),
-        out_idx0, out_g0, jnp.int32(r0),
-    )
-
-    def cond(state):
-        return state[7] < budget
-
-    def body(state):
-        cur_max, chosen, ub, commits, fails, out_idx, out_g, count = state
-        need_sweep = (commits >= q) | (fails >= max_fails)
-
-        def sweep_round(_):
-            g, pg, pi = sweep(cur_max, chosen)
-            e = pi[jnp.argmax(pg)]  # exact winner (jnp.argmax tie order)
-            col = sim_col(e)
-            fresh = jnp.sum(jnp.maximum(col - cur_max, 0.0))
-            new_ub = jnp.where(chosen, neg, g).at[e].set(neg)
-            return (
-                jnp.maximum(cur_max, col),
-                chosen.at[e].set(True),
-                new_ub,
-                jnp.int32(1),
-                jnp.int32(0),
-                out_idx.at[count].set(e),
-                out_g.at[count].set(fresh),
-                count + 1,
-            )
-
-        def lazy_round(_):
-            # Refresh the top-P bounds in one matmul, then the tolerance-
-            # scaled Minoux rule: the best refreshed (exact) gain commits
-            # iff it retains ≥ stale_tol of the best bound outside the
-            # batch; at stale_tol=1.0 the winner is the true argmax
-            # (bounds only overestimate).
-            tg, tp = jax.lax.top_k(ub, refresh_p)
-            cols = sim_cols(tp)  # (n, P)
-            fresh_p = jnp.sum(
-                jnp.maximum(cols - cur_max[:, None], 0.0), axis=0
-            )
-            fresh_p = jnp.where(jnp.isfinite(tg), fresh_p, neg)  # chosen
-            j = jnp.argmax(fresh_p)
-            e = tp[j]
-            fresh = fresh_p[j]
-            col = cols[:, j]
-            rest = jnp.max(ub.at[tp].set(neg))
-            # Small slack absorbs the sweep-vs-column summation-order
-            # difference.
-            commit = fresh * (1.0 + 1e-5) + 1e-6 >= stale_tol * rest
-            new_ub = ub.at[tp].set(fresh_p).at[e].set(
-                jnp.where(commit, neg, fresh)
-            )
-            return (
-                jnp.where(commit, jnp.maximum(cur_max, col), cur_max),
-                chosen.at[e].set(chosen[e] | commit),
-                new_ub,
-                commits + commit.astype(jnp.int32),
-                jnp.where(commit, 0, fails + 1).astype(jnp.int32),
-                out_idx.at[count].set(jnp.where(commit, e, out_idx[count])),
-                out_g.at[count].set(jnp.where(commit, fresh, out_g[count])),
-                count + commit.astype(jnp.int32),
-            )
-
-        return jax.lax.cond(need_sweep, sweep_round, lazy_round, None)
-
-    cur_max, _, _, _, _, indices, gains, _ = jax.lax.while_loop(
-        cond, body, state0
-    )
-
-    # γ / coverage: exact assignment of every point to its nearest medoid.
-    sel_sim = sim_cols(indices)  # (n, r)
-    assign = jnp.argmax(sel_sim, axis=1)
-    weights = jnp.zeros((budget,), jnp.float32).at[assign].add(1.0)
-    coverage = jnp.sum(d_max - jnp.max(sel_sim, axis=1))
-    return FLResult(indices, gains, weights, coverage)
-
-
-# ---------------------------------------------------------------------------
-# Sparse top-k engine (DESIGN.md §3.5) — O(n·k) memory, million-point pools
-# ---------------------------------------------------------------------------
-
-
-def topk_graph(
-    feats: jax.Array,
-    k: int,
-    *,
-    d_max: jax.Array | None = None,
-    block_m: int = 2048,
-    impl: str = "jax",
-    interpret: bool | None = None,
-) -> tuple[jax.Array, jax.Array]:
-    """Blockwise top-k similarity graph: (vals (n, k) desc, idx (n, k) int32).
-
-    Streams (n × block_m) similarity tiles and folds each into a running
-    per-row top-k, so peak memory is O(n·(k + block_m)) — the dense (n, n)
-    matrix never exists.  ``impl='pallas'`` routes to the fused
-    ``repro.kernels.ops.topk_sim`` kernel (tile compute + merge in VMEM);
-    ``'jax'`` is the pure-jnp scan (identical output, lax.top_k merge) and
-    is shard_map-safe for the distributed round-1 path.
-
-    Args:
-      feats: (n, d) proxy features.
-      k: neighbors per row (clamped to n); every row's list includes itself.
-      d_max: similarity offset s = d_max − dist.  Defaults to the
-        2·max‖x‖ + ε distance upper bound (same as ``greedy_fl_features``).
-      block_m: column tile width for the jnp path.
-    """
-    n, _ = feats.shape
-    k = int(min(k, n))
-    feats = feats.astype(jnp.float32)
-    if impl == "pallas":
-        from repro.kernels import ops as kops  # local import; kernels optional
-
-        return kops.topk_sim(feats, k, d_max, interpret=interpret)
-    if impl != "jax":
-        raise ValueError(f"unknown topk impl {impl!r}")
-
-    sq = jnp.sum(feats * feats, axis=-1)
-    if d_max is None:
-        d_max = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
-    block_m = min(block_m, n)
-    n_blocks = (n + block_m - 1) // block_m
-    pad = n_blocks * block_m - n
-    featp = jnp.pad(feats, ((0, pad), (0, 0)))
-    sqp = jnp.pad(sq, (0, pad), constant_values=1e30)  # padded cols → sim ≪ 0
-
-    def blk(carry, b):
-        vals, idx = carry
-        cf = jax.lax.dynamic_slice_in_dim(featp, b * block_m, block_m)
-        csq = jax.lax.dynamic_slice_in_dim(sqp, b * block_m, block_m)
-        d2 = sq[:, None] + csq[None, :] - 2.0 * feats @ cf.T
-        sim = d_max - jnp.sqrt(jnp.maximum(d2, 0.0))  # (n, bm)
-        cols = b * block_m + jnp.arange(block_m, dtype=jnp.int32)
-        cat_v = jnp.concatenate([vals, sim], axis=1)
-        cat_i = jnp.concatenate(
-            [idx, jnp.broadcast_to(cols[None, :], sim.shape)], axis=1
-        )
-        new_v, pos = jax.lax.top_k(cat_v, k)
-        new_i = jnp.take_along_axis(cat_i, pos, axis=1)
-        return (new_v, new_i), None
-
-    init = (
-        jnp.full((n, k), -1e30, jnp.float32),
-        jnp.zeros((n, k), jnp.int32),
-    )
-    (vals, idx), _ = jax.lax.scan(blk, init, jnp.arange(n_blocks))
-    return vals, idx
-
-
-@partial(jax.jit, static_argnames=("budget",))
-def greedy_fl_topk(vals: jax.Array, idx: jax.Array, budget: int) -> FLResult:
-    """Exact greedy over the *sparsified* FL objective, pure JAX.
-
-    Maximizes F̂(S) = Σ_i max(max_{j∈S∩nbr(i)} ŝ_ij, 0) where ŝ is the top-k
-    graph.  Per step, every entry (i, j) contributes relu(ŝ_ij − cur_max_i)
-    to candidate j's gain via one (n, k) scatter-add — O(n·k) per step,
-    O(r·n·k) total, no dense structure.  jit- and shard_map-compatible
-    (used by the sparse round-1 of ``core.distributed``).
-
-    Weights are graph-assigned (each point to its best selected neighbor;
-    points whose neighbor list contains no selected element fall back to the
-    first medoid).  Callers holding features can recompute exact γ with
-    ``assign_and_weights``; Σγ == n either way.
-    """
-    n, k = vals.shape
-    vals = vals.astype(jnp.float32)
-    budget = int(min(budget, n))
-
-    def step(state, _):
-        cur_max, chosen = state
-        contrib = jnp.maximum(vals - cur_max[:, None], 0.0)  # (n, k)
-        gains = jnp.zeros((n,), jnp.float32).at[idx].add(contrib)
-        gains = jnp.where(chosen, -jnp.inf, gains)
-        e = jnp.argmax(gains)
-        # cover update: rows that list e as a neighbor take max(cur, ŝ_ie)
-        cov = jnp.max(jnp.where(idx == e, vals, -jnp.inf), axis=1)
-        return (jnp.maximum(cur_max, cov), chosen.at[e].set(True)), (
-            e.astype(jnp.int32),
-            gains[e],
-        )
-
-    init = (jnp.zeros((n,), jnp.float32), jnp.zeros((n,), bool))
-    (cur_max, chosen), (indices, gains) = jax.lax.scan(
-        step, init, None, length=budget
-    )
-
-    # Graph-based γ: best selected neighbor per row.
-    ent_sel = chosen[idx]  # (n, k)
-    best = jnp.where(ent_sel, vals, -jnp.inf)
-    bpos = jnp.argmax(best, axis=1)
-    assigned = jnp.take_along_axis(idx, bpos[:, None], axis=1)[:, 0]
-    orphan = ~jnp.isfinite(jnp.max(best, axis=1))
-    assigned = jnp.where(orphan, indices[0], assigned)
-    slot = jnp.zeros((n,), jnp.int32).at[indices].set(
-        jnp.arange(budget, dtype=jnp.int32)
-    )[assigned]
-    weights = jnp.zeros((budget,), jnp.float32).at[slot].add(1.0)
-    # Residual un-covered similarity mass, same convention as the dense
-    # engines (callers with features recompute true L(S) via distances).
-    coverage = jnp.sum(jnp.maximum(vals[:, 0] - cur_max, 0.0))
-    return FLResult(indices, gains.astype(jnp.float32), weights, coverage)
-
-
-def sparse_greedy_fl(
-    vals: np.ndarray,
-    idx: np.ndarray,
-    budget: int,
-    feats: np.ndarray | None = None,
-    init_selected: np.ndarray | None = None,
-) -> FLResult:
-    """Host lazy greedy (Minoux) over the top-k graph, walking CSR columns.
-
-    The (n, k) row structure is transposed once into a CSC layout — for each
-    candidate c, the rows that list c as a neighbor — so a gain evaluation
-    touches only that candidate's column (apricot's ``select_next_sparse``,
-    vectorized over the column instead of a numba scalar loop).  With the
-    Minoux priority queue most candidates are never re-evaluated; per-step
-    cost is O(nnz/n · re-evals) instead of O(n²).
-
-    Selections are identical to ``greedy_fl_topk`` (same objective, ties to
-    the lowest index).  If ``feats`` is given, γ weights and coverage are
-    computed by *exact* blocked assignment of every point to its nearest
-    selected medoid (O(n·r), no (n, n)); otherwise graph assignment is used
-    and coverage is the residual similarity mass.  ``init_selected``
-    warm-starts from a previous selection's prefix — each prefix element
-    costs one CSR-column walk, and the heap is initialized against the
-    warmed cover state.
-    """
-    vals = np.asarray(vals, np.float64)
-    idx = np.asarray(idx, np.int64)
-    n, k = vals.shape
-    budget = int(min(budget, n))
-
-    # CSC transpose: entries sorted by candidate column.
-    flat_v = vals.ravel()
-    flat_c = idx.ravel()
-    flat_r = np.repeat(np.arange(n, dtype=np.int64), k)
-    valid = flat_v > -1e29  # drop builder padding
-    flat_v, flat_c, flat_r = flat_v[valid], flat_c[valid], flat_r[valid]
-    order = np.argsort(flat_c, kind="stable")
-    col_vals = flat_v[order]
-    col_rows = flat_r[order]
-    sorted_c = flat_c[order]
-    indptr = np.searchsorted(sorted_c, np.arange(n + 1))
-
-    cur_max = np.zeros(n)
-    indices: list[int] = []
-    gains: list[float] = []
-    if init_selected is not None:
-        for c in np.asarray(init_selected, np.int64)[:budget]:
-            c = int(c)
-            lo, hi = indptr[c], indptr[c + 1]
-            indices.append(c)
-            gains.append(
-                float(
-                    np.maximum(
-                        col_vals[lo:hi] - cur_max[col_rows[lo:hi]], 0.0
-                    ).sum()
-                )
-            )
-            np.maximum.at(cur_max, col_rows[lo:hi], col_vals[lo:hi])
-    r0 = len(indices)
-    in_init = set(indices)
-    init_gain = np.zeros(n)
-    np.add.at(
-        init_gain, sorted_c, np.maximum(col_vals - cur_max[col_rows], 0.0)
-    )
-    heap = [(-g, c, r0) for c, g in enumerate(init_gain) if c not in in_init]
-    heapq.heapify(heap)
-    for t in range(r0, budget):
-        while True:
-            neg_g, c, stamp = heapq.heappop(heap)
-            if stamp == t:
-                break
-            lo, hi = indptr[c], indptr[c + 1]
-            g = float(
-                np.maximum(col_vals[lo:hi] - cur_max[col_rows[lo:hi]], 0.0).sum()
-            )
-            heapq.heappush(heap, (-g, c, t))
-        indices.append(c)
-        gains.append(-neg_g)
-        lo, hi = indptr[c], indptr[c + 1]
-        np.maximum.at(cur_max, col_rows[lo:hi], col_vals[lo:hi])
-
-    sel = np.array(indices, np.int64)
-    if feats is not None:
-        assign, mind = _blocked_assignment(np.asarray(feats), sel)
-        weights = np.bincount(assign, minlength=budget).astype(np.float32)
-        coverage = float(mind.sum())  # true L(S) = Σ_i min_{j∈S} d_ij
-    else:
-        in_sel = np.zeros(n, bool)
-        in_sel[sel] = True
-        slot_of = np.zeros(n, np.int64)
-        slot_of[sel] = np.arange(budget)
-        masked = np.where(in_sel[idx] & (vals > -1e29), vals, -np.inf)
-        rows_hit = masked.max(axis=1) > -np.inf
-        best_c = np.full(n, sel[0], np.int64)  # orphans → first medoid
-        best_c[rows_hit] = idx[np.arange(n), masked.argmax(axis=1)][rows_hit]
-        weights = np.bincount(slot_of[best_c], minlength=budget).astype(
-            np.float32
-        )
-        coverage = float(np.maximum(vals[:, 0] - cur_max, 0.0).sum())
-    return FLResult(
-        jnp.asarray(sel.astype(np.int32)),
-        jnp.asarray(np.array(gains, np.float32)),
-        jnp.asarray(weights),
-        jnp.asarray(coverage, jnp.float32),
-    )
-
-
-def _blocked_assignment(
-    feats: np.ndarray, sel: np.ndarray, block: int = 65536
-) -> tuple[np.ndarray, np.ndarray]:
-    """Exact nearest-selected-medoid assignment, O(block·r) peak memory.
-
-    Returns (assign (n,) positions into sel, min_dist (n,)).
-    """
-    feats = np.asarray(feats, np.float32)
-    sf = feats[sel]  # (r, d)
-    sq_s = (sf * sf).sum(axis=1)
-    assign = np.empty(len(feats), np.int64)
-    mind = np.empty(len(feats), np.float64)
-    for lo in range(0, len(feats), block):
-        chunk = feats[lo : lo + block]
-        d2 = (
-            (chunk * chunk).sum(axis=1)[:, None]
-            + sq_s[None, :]
-            - 2.0 * chunk @ sf.T
-        )
-        d2 = np.maximum(d2, 0.0)
-        assign[lo : lo + block] = d2.argmin(axis=1)
-        mind[lo : lo + block] = np.sqrt(d2.min(axis=1))
-    return assign, mind
-
-
-def sparse_greedy_fl_features(
-    feats: jax.Array,
-    budget: int,
-    *,
-    k: int = 64,
-    d_max: jax.Array | None = None,
-    topk_impl: str = "jax",
-    block_m: int = 2048,
-    init_selected: np.ndarray | None = None,
-) -> FLResult:
-    """End-to-end sparse engine: top-k graph build + host lazy greedy.
-
-    O(n·k + n·block_m) peak memory — the production path for pools past the
-    dense engines' ~10⁵-point ceiling.  Exact γ/coverage via blocked
-    assignment (the ``feats`` are already in hand).
-    """
-    vals, idx = topk_graph(
-        feats, k, d_max=d_max, block_m=block_m, impl=topk_impl
-    )
-    return sparse_greedy_fl(
-        np.asarray(vals),
-        np.asarray(idx),
-        budget,
-        feats=np.asarray(feats),
-        init_selected=init_selected,
-    )
-
-
-def assign_and_weights(dist_to_sel: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Given (n, r) distances to selected medoids, return (assignment, γ)."""
-    assign = jnp.argmin(dist_to_sel, axis=1)
-    r = dist_to_sel.shape[1]
-    weights = jnp.zeros((r,), jnp.float32).at[assign].add(1.0)
-    return assign, weights

@@ -15,11 +15,18 @@ onto the training critical path.  This module moves it off:
          │                          │
     training continues on the *stale* coreset in between (double buffering)
 
-The selection inside a refresh is engine-agnostic (``CraigConfig.engine``);
-with ``engine='device'`` the greedy loop is a single jitted device program
+The selection inside a refresh is engine-agnostic: the refresher just runs
+``work_fn``, and the trainer's work carries whatever typed ``EngineConfig``
+its ``CraigConfig.engine`` resolves to (``'auto'`` by default — the
+``repro.core.engines`` policy picks per pool size/backend; no
+engine-specific kwargs are re-threaded here).  With
+``engines.DeviceConfig`` the greedy loop is a single jitted device program
 (DESIGN.md §3.6), so the worker thread spends its time in one XLA dispatch
 instead of a per-round host loop — the cheapest engine to run concurrently
-with training, since it never contends for the host between rounds.
+with training, since it never contends for the host between rounds.  The
+resolved engine rides the published selection's metadata
+(``CoresetSelection.engine``), so checkpoints record which engine produced
+each staged/installed coreset.
 
 ``AsyncRefresher`` owns the worker thread and the publish slot; the trainer
 owns the install points.  ``mode='sync'`` runs the identical lifecycle with

@@ -8,10 +8,13 @@ The pipeline composes three layers:
                      refresh it iterates the weighted coreset (paper Eq. 20:
                      every epoch visits each selected element once, with its
                      per-element stepsize γ_j).  Refreshes install through
-                     ``set_coreset_from_selection`` — engine-agnostic, so the
-                     same path serves the dense engines and the O(n·k)
-                     ``engine='sparse'`` selector that large pools need
-                     (README §Engines).  The async refresh path (DESIGN.md
+                     ``set_coreset_from_selection`` — engine-agnostic behind
+                     the ``repro.core.engines`` registry, so the same path
+                     serves the dense engines and the O(n·k) sparse engine
+                     (``engines.SparseConfig``) that large pools need; the
+                     staged ``meta`` carries the resolved ``EngineConfig``
+                     dict for provenance (README §Engines).  The async
+                     refresh path (DESIGN.md
                      §4) is double-buffered: a background selection is
                      ``stage``d (versioned back buffer, any thread) and the
                      trainer ``install_pending``s it atomically at a step

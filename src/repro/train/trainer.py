@@ -15,9 +15,13 @@ Responsibilities (DESIGN.md §4):
   * warm-started selection: each refresh seeds the greedy engines with the
     previous selection's high-gain prefix (``warm_start_fraction``), whose
     cover state is replayed in O(r₀·n) instead of re-derived from scratch —
-    all six engines honor the prefix, including the device-resident fused
-    greedy (``craig.engine='device'``, DESIGN.md §3.6), whose whole
-    re-selection runs as one jitted device program on the worker thread;
+    every registered engine honors the prefix, including the
+    device-resident fused greedy (``engines.DeviceConfig``, DESIGN.md
+    §3.6), whose whole re-selection runs as one jitted device program on
+    the worker thread.  The engine itself comes from ``craig.engine`` —
+    a typed ``EngineConfig`` or ``'auto'`` (default), in which case the
+    ``repro.core.engines`` policy picks per refresh-pool size/backend, and
+    the resolved config is stamped into the refresh metadata/checkpoints;
   * per-class stratification (paper §5): pool class labels are extracted
     alongside proxies (``dataset.class_labels``) and threaded into
     ``CraigSelector.select`` whenever ``craig.per_class=True``;
@@ -209,6 +213,9 @@ class Trainer:
                 "epsilon_hat": float(sel.epsilon_hat),
                 "select_time_s": result.wall_time_s,
                 "per_class_sizes": sel.per_class_sizes,
+                # resolved EngineConfig dict (provenance; restorable via
+                # engines.EngineConfig.from_dict)
+                "engine": sel.engine,
             },
         )
 
@@ -233,6 +240,7 @@ class Trainer:
                 "epsilon_hat": meta.get("epsilon_hat", float("nan")),
                 "select_time_s": meta.get("select_time_s", float("nan")),
                 "install_stall_s": stall,
+                "engine": meta.get("engine"),
             }
         )
 

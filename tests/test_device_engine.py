@@ -230,16 +230,35 @@ def test_selector_device_warm_start_parity():
     np.testing.assert_array_equal(cold.indices, warm.indices)
 
 
-def test_device_engine_rejects_cosine_and_cover():
+def test_device_engine_rejects_cover():
     feats = np.random.RandomState(3).randn(32, 4).astype(np.float32)
-    with pytest.raises(ValueError, match="l2"):
-        CraigSelector(
-            CraigConfig(engine="device", metric="cosine", per_class=False)
-        ).select(feats)
     with pytest.raises(ValueError, match="cover"):
         CraigSelector(
             CraigConfig(engine="device", mode="cover", per_class=False)
         ).select(feats)
+
+
+def test_device_engine_cosine_matches_features_engine():
+    """metric='cosine' is served via l2 on unit-normalized features
+    (Capabilities.supports_metrics); device and features run the same exact
+    greedy on the normalized pool, so selections are bit-identical."""
+    from repro.core.engines import DeviceConfig, FeaturesConfig
+
+    feats = np.random.RandomState(5).randn(120, 8).astype(np.float32)
+    dev = CraigSelector(
+        CraigConfig(
+            fraction=0.1, engine=DeviceConfig(), metric="cosine",
+            per_class=False,
+        )
+    ).select(feats)
+    fea = CraigSelector(
+        CraigConfig(
+            fraction=0.1, engine=FeaturesConfig(), metric="cosine",
+            per_class=False,
+        )
+    ).select(feats)
+    np.testing.assert_array_equal(dev.indices, fea.indices)
+    assert dev.weights.sum() == pytest.approx(120.0)
 
 
 def test_device_engine_rejects_bad_impl_and_dtype():

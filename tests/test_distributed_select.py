@@ -15,11 +15,12 @@ pytestmark = pytest.mark.tier2  # 8-device subprocess run, >60 s
 
 SCRIPT = textwrap.dedent(
     """
-    import os
+    import os, warnings
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from repro.core.distributed import distributed_select
     from repro.core.craig import CraigConfig, CraigSelector
+    from repro.core.engines import DeviceConfig, MatrixConfig, SparseConfig
 
     from repro.launch.mesh import compat_mesh
 
@@ -30,6 +31,8 @@ SCRIPT = textwrap.dedent(
     feats = centers[assign] + 0.1 * jax.random.normal(
         jax.random.PRNGKey(2), (1024, 16))
 
+    # default local_engine='auto': n_local=128 resolves to the dense exact
+    # matrix round 1 via the documented policy
     res = distributed_select(feats, mesh, r_local=16, r_final=32)
     w = np.asarray(res.weights)
     assert w.sum() == 1024.0, w.sum()
@@ -45,13 +48,25 @@ SCRIPT = textwrap.dedent(
     ratio = float(res.coverage) / max(cen.coverage, 1e-9)
     assert ratio < 1.5, ratio
 
-    # determinism: same result twice
+    # determinism: same result twice; explicit typed config == 'auto' pick
     res2 = distributed_select(feats, mesh, r_local=16, r_final=32)
     assert np.array_equal(np.asarray(res.indices), np.asarray(res2.indices))
+    resm = distributed_select(feats, mesh, r_local=16, r_final=32,
+                              local_engine=MatrixConfig())
+    assert np.array_equal(np.asarray(res.indices), np.asarray(resm.indices))
 
-    # sparse round-1: same contract, O(n_local·k) memory, near-dense quality
-    sp = distributed_select(feats, mesh, r_local=16, r_final=32,
-                            local_engine="sparse", topk_k=32)
+    # sparse round-1: same contract, O(n_local·k) memory, near-dense
+    # quality; the legacy flat-kwarg surface must warn and match the typed
+    # SparseConfig surface bit for bit
+    with warnings.catch_warnings(record=True) as wrec:
+        warnings.simplefilter("always")
+        sp = distributed_select(feats, mesh, r_local=16, r_final=32,
+                                local_engine="sparse", topk_k=32)
+    assert any(issubclass(x.category, DeprecationWarning) for x in wrec), (
+        "legacy flat kwargs must emit a DeprecationWarning")
+    spt = distributed_select(feats, mesh, r_local=16, r_final=32,
+                             local_engine=SparseConfig(k=32))
+    assert np.array_equal(np.asarray(sp.indices), np.asarray(spt.indices))
     wsp = np.asarray(sp.weights)
     assert wsp.sum() == 1024.0, wsp.sum()
     sp_clusters = set(np.asarray(assign)[np.asarray(sp.indices)].tolist())
@@ -74,19 +89,36 @@ SCRIPT = textwrap.dedent(
                             local_engine="device")
     assert np.array_equal(np.asarray(dv.indices), np.asarray(res.indices))
     assert np.asarray(dv.weights).sum() == 1024.0
-    # block greedy (device_q=4) keeps round-1 quality: same contract at the
-    # same r_local as the dense run, coverage parity with it
+    # block greedy (q=4) keeps round-1 quality: same contract at the
+    # same r_local as the dense run, coverage parity with it; legacy
+    # flat kwargs == typed DeviceConfig bit for bit
     dv4 = distributed_select(feats, mesh, r_local=16, r_final=32,
                              local_engine="device", device_q=4)
     assert np.asarray(dv4.weights).sum() == 1024.0
     dv_ratio = float(dv4.coverage) / max(cen.coverage, 1e-9)
     assert dv_ratio < 1.5, dv_ratio
-    # selector-level wiring for engine='device' (same r_local heuristic as
-    # the sparse selector path; contract checks only)
-    sel_dv = CraigSelector(CraigConfig(fraction=32 / 1024, engine="device",
-                                       device_q=4, per_class=False))
+    dv4t = distributed_select(
+        feats, mesh, r_local=16, r_final=32,
+        local_engine=DeviceConfig(q=4, gains_impl="jax"))
+    assert np.array_equal(np.asarray(dv4.indices), np.asarray(dv4t.indices))
+    # selector-level wiring for the device engine (same r_local heuristic
+    # as the sparse selector path; contract checks only)
+    sel_dv = CraigSelector(CraigConfig(fraction=32 / 1024, per_class=False,
+                                       engine=DeviceConfig(q=4)))
     cs_dv = sel_dv.select_distributed(feats, mesh)
     assert cs_dv.weights.sum() == 1024.0, cs_dv.weights.sum()
+    assert cs_dv.engine["name"] == "device", cs_dv.engine
+    # selector engine='auto' (the default): round 1 resolved per shard
+    # pool size — dense matrix at n_local=128, identical to the dense run
+    cs_auto = CraigSelector(CraigConfig(fraction=32 / 1024,
+                                        per_class=False)).select_distributed(
+        feats, mesh)
+    assert cs_auto.engine["name"] == "matrix", cs_auto.engine
+    cs_mat = CraigSelector(
+        CraigConfig(fraction=32 / 1024, per_class=False,
+                    engine=MatrixConfig())).select_distributed(feats, mesh)
+    assert np.array_equal(np.asarray(cs_auto.indices),
+                          np.asarray(cs_mat.indices))
     print("DISTRIBUTED_OK", ratio, sp_ratio, dv_ratio)
     """
 )

@@ -1,0 +1,378 @@
+"""SelectionEngine registry: capabilities match behavior, legacy shims map
+with a single DeprecationWarning, EngineConfig dict round-trips, and the
+engine='auto' policy table."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engines as E
+from repro.core.craig import CraigConfig, CraigSelector
+from repro.core.engines.legacy import resolve_engine_config
+
+ALL_ENGINES = ("matrix", "lazy", "stochastic", "features", "sparse", "device")
+
+
+def _feats(n=96, d=6, seed=0):
+    return np.random.RandomState(seed).randn(n, d).astype(np.float32)
+
+
+# -- registry surface ---------------------------------------------------------
+
+
+def test_list_engines_complete_and_matrix_first():
+    names = E.list_engines()
+    assert set(names) == set(ALL_ENGINES)
+    assert names[0] == "matrix"  # ladder/parity baseline anchor
+
+
+def test_get_engine_unknown_names_registered_set():
+    with pytest.raises(ValueError, match="matrix"):
+        E.get_engine("quantum")
+
+
+def test_every_engine_selects_via_typed_config():
+    """All six engines, typed-config surface only: unique indices, Σγ == n,
+    and the exact engines bit-match the matrix baseline."""
+    feats = _feats(120, 8)
+    base = CraigSelector(
+        CraigConfig(fraction=0.1, engine=E.MatrixConfig(), per_class=False)
+    ).select(feats)
+    configs = {
+        "matrix": E.MatrixConfig(),
+        "lazy": E.LazyConfig(),
+        "stochastic": E.StochasticConfig(delta=0.01),
+        "features": E.FeaturesConfig(),
+        "sparse": E.SparseConfig(k=120),  # complete graph == exact greedy
+        "device": E.DeviceConfig(),
+    }
+    for name, ec in configs.items():
+        cs = CraigSelector(
+            CraigConfig(fraction=0.1, engine=ec, per_class=False)
+        ).select(feats)
+        assert cs.size == 12, name
+        assert len(np.unique(cs.indices)) == 12, name
+        assert cs.weights.sum() == pytest.approx(120.0), name
+        assert cs.engine == ec.to_dict(), name
+        if name in ("matrix", "lazy", "features", "device"):
+            np.testing.assert_array_equal(base.indices, cs.indices, err_msg=name)
+        if name == "sparse":
+            np.testing.assert_array_equal(
+                np.sort(base.indices), np.sort(cs.indices)
+            )
+
+
+# -- capabilities match behavior ----------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_ENGINES)
+def test_cover_capability_matches_behavior(name):
+    ec = E.get_engine(name).config_cls()
+    sel = CraigSelector(
+        CraigConfig(mode="cover", epsilon=1e9, engine=ec, per_class=False)
+    )
+    feats = _feats(40, 4)
+    if E.get_engine(name).capabilities.supports_cover:
+        cs = sel.select(feats)  # huge ε: one medoid suffices
+        assert cs.size >= 1
+    else:
+        with pytest.raises(ValueError, match="cover"):
+            sel.select(feats)
+
+
+@pytest.mark.parametrize("name", ALL_ENGINES)
+def test_jit_safety_capability_matches_behavior(name):
+    """Engines advertising jit_safe must trace end to end under jax.jit."""
+    eng = E.make_engine(E.get_engine(name).config_cls())
+    feats = jnp.asarray(_feats(48, 5, seed=3))
+    if eng.capabilities.jit_safe:
+        idx = jax.jit(lambda f: eng.select(f, 6, rng=0).indices)(feats)
+        eager = eng.select(feats, 6, rng=0).indices
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(eager))
+    else:
+        # host-side engines still satisfy the protocol eagerly
+        res = eng.select(feats, 6)
+        assert len(np.unique(np.asarray(res.indices))) == 6
+
+
+@pytest.mark.parametrize("name", ALL_ENGINES)
+def test_metric_capability_accepts_cosine(name):
+    caps = E.get_engine(name).capabilities
+    assert "cosine" in caps.supports_metrics
+    assert caps.memory(10_000, 32) > 0
+
+
+def test_unsupported_metric_rejected_via_capabilities():
+    with pytest.raises(ValueError, match="metric|manhattan"):
+        CraigSelector(
+            CraigConfig(
+                engine=E.MatrixConfig(), metric="manhattan", per_class=False
+            )
+        ).select(_feats(20, 3))
+
+
+def test_cosine_parity_matrix_vs_matrix_free_engines():
+    """Satellite: cosine on the matrix-free engines (l2 on unit-normalized
+    features, monotone-equivalent ordering) recovers the same cluster
+    structure as the dense matrix engine's native cosine matrix."""
+    rng = np.random.RandomState(7)
+    centers = rng.randn(6, 8).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    assign = np.arange(120) % 6
+    feats = (centers[assign] + 0.02 * rng.randn(120, 8)).astype(np.float32)
+
+    def clusters(cs):
+        return sorted(assign[np.asarray(cs.indices)].tolist())
+
+    dist_cos = np.asarray(
+        E.pairwise_distances(jnp.asarray(feats), "cosine")
+    )
+
+    def cosine_l(cs) -> float:
+        """L(S) = Σ_i min_{j∈S} (1 − cos θ_ij) for cs's own selection."""
+        return float(dist_cos[:, np.asarray(cs.indices)].min(axis=1).sum())
+
+    ref = CraigSelector(
+        CraigConfig(
+            fraction=6 / 120, engine=E.MatrixConfig(), metric="cosine",
+            per_class=False,
+        )
+    ).select(feats)
+    assert len(set(clusters(ref))) == 6
+    assert ref.coverage == pytest.approx(cosine_l(ref), rel=1e-3)
+    for ec in (E.FeaturesConfig(), E.DeviceConfig(), E.SparseConfig(k=120)):
+        cs = CraigSelector(
+            CraigConfig(
+                fraction=6 / 120, engine=ec, metric="cosine", per_class=False
+            )
+        ).select(feats)
+        assert clusters(cs) == clusters(ref), ec.name
+        # coverage is reported in the dense engines' cosine-distance units
+        # (Σ min 1−cosθ) regardless of engine — engine='auto' crossing a
+        # pool-size threshold must not change ε̂ units
+        assert cs.coverage == pytest.approx(cosine_l(cs), rel=1e-3), ec.name
+
+
+# -- legacy shims -------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "engine,knobs,expected",
+    [
+        ("matrix", {}, E.MatrixConfig()),
+        ("lazy", {}, E.LazyConfig()),
+        ("stochastic", {"stochastic_delta": 0.1}, E.StochasticConfig(delta=0.1)),
+        ("features", {"gains_impl": "pallas"},
+         E.FeaturesConfig(gains_impl="pallas")),
+        ("sparse", {"topk_k": 32, "topk_impl": "pallas"},
+         E.SparseConfig(k=32, impl="pallas")),
+        ("device",
+         {"device_q": 8, "device_stale_tol": 0.9,
+          "device_tile_dtype": "bfloat16"},
+         E.DeviceConfig(q=8, stale_tol=0.9, tile_dtype="bfloat16",
+                        gains_impl="jax")),
+        ("device", {}, E.DeviceConfig(gains_impl="jax")),
+        ("sparse", {}, E.SparseConfig()),
+        ("stochastic", {}, E.StochasticConfig()),
+        ("features", {}, E.FeaturesConfig()),
+    ],
+)
+def test_legacy_string_maps_with_single_deprecation_warning(
+    engine, knobs, expected
+):
+    cfg = CraigConfig(engine=engine, per_class=False, **knobs)
+    with pytest.warns(DeprecationWarning) as record:
+        resolved = resolve_engine_config(cfg)
+    assert len(record) == 1
+    assert "README" in str(record[0].message)
+    assert resolved == expected
+
+
+def test_typed_config_and_auto_resolve_without_warning():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_engine_config(
+            CraigConfig(engine=E.SparseConfig(k=8))
+        ) == E.SparseConfig(k=8)
+        assert resolve_engine_config(CraigConfig()) is None  # 'auto'
+
+
+def test_unknown_engine_string_raises():
+    with pytest.raises(ValueError, match="unknown engine"):
+        resolve_engine_config(CraigConfig(engine="quantum"))
+
+
+def test_legacy_and_typed_selections_identical():
+    """Acceptance: legacy strings and typed configs drive bit-identical
+    selections on fixed seeds."""
+    feats = _feats(100, 8, seed=11)
+    pairs = [
+        ("matrix", {}, E.MatrixConfig()),
+        ("lazy", {}, E.LazyConfig()),
+        ("stochastic", {"stochastic_delta": 0.05},
+         E.StochasticConfig(delta=0.05)),
+        ("features", {}, E.FeaturesConfig()),
+        ("sparse", {"topk_k": 24}, E.SparseConfig(k=24)),
+        ("device", {"device_q": 4}, E.DeviceConfig(q=4, gains_impl="jax")),
+    ]
+    for engine, knobs, typed in pairs:
+        with pytest.warns(DeprecationWarning):
+            old = CraigSelector(
+                CraigConfig(fraction=0.1, engine=engine, per_class=False,
+                            seed=3, **knobs)
+            ).select(feats)
+        new = CraigSelector(
+            CraigConfig(fraction=0.1, engine=typed, per_class=False, seed=3)
+        ).select(feats)
+        np.testing.assert_array_equal(old.indices, new.indices, err_msg=engine)
+        np.testing.assert_allclose(old.weights, new.weights, err_msg=engine)
+
+
+# -- EngineConfig serialization -----------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "ec",
+    [
+        E.MatrixConfig(),
+        E.LazyConfig(),
+        E.StochasticConfig(delta=0.2),
+        E.FeaturesConfig(gains_impl="pallas", block_n=256),
+        E.SparseConfig(k=17, impl="pallas", block_m=512),
+        E.DeviceConfig(q=16, stale_tol=1.0, tile_dtype="bfloat16"),
+    ],
+)
+def test_engine_config_dict_round_trip(ec):
+    d = ec.to_dict()
+    assert d["name"] == type(ec).name
+    import json
+
+    assert json.loads(json.dumps(d)) == d  # JSON-able (checkpoint metadata)
+    assert E.EngineConfig.from_dict(d) == ec
+    assert E.engine_config_from_dict(d) == ec
+
+
+def test_parse_engine_spec():
+    assert E.parse_engine_spec("matrix") == E.MatrixConfig()
+    assert E.parse_engine_spec("device:q=16,stale_tol=0.8") == E.DeviceConfig(
+        q=16, stale_tol=0.8
+    )
+    assert E.parse_engine_spec("sparse:k=8,impl=pallas") == E.SparseConfig(
+        k=8, impl="pallas"
+    )
+    with pytest.raises(ValueError, match="unknown engine"):
+        E.parse_engine_spec("warp:q=1")
+    with pytest.raises(ValueError, match="key=value"):
+        E.parse_engine_spec("device:q")
+
+
+# -- engine='auto' policy -----------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,backend,mode,expected",
+    [
+        (100, "cpu", "budget", "matrix"),
+        (100, "tpu", "budget", "matrix"),
+        (20_000, "cpu", "budget", "matrix"),
+        (50_000, "cpu", "budget", "features"),
+        (50_000, "gpu", "budget", "features"),
+        (50_000, "tpu", "budget", "device"),
+        (200_000, "tpu", "budget", "device"),
+        (300_000, "cpu", "budget", "sparse"),
+        (300_000, "tpu", "budget", "sparse"),
+        (50_000, "cpu", "cover", "matrix"),
+        (300_000, "tpu", "cover", "matrix"),
+    ],
+)
+def test_auto_policy_table(n, backend, mode, expected):
+    ec = E.auto_engine_config(n, backend=backend, mode=mode)
+    assert ec.name == expected
+    assert ec == E.get_engine(expected).config_cls()  # defaults, no knobs
+
+
+def test_auto_default_selects_like_matrix_on_small_pools():
+    """CraigConfig's default engine='auto' resolves to the dense exact
+    greedy for small pools — no warning, bit-identical selections."""
+    feats = _feats(90, 6, seed=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        auto = CraigSelector(
+            CraigConfig(fraction=0.1, per_class=False)
+        ).select(feats)
+    ref = CraigSelector(
+        CraigConfig(fraction=0.1, engine=E.MatrixConfig(), per_class=False)
+    ).select(feats)
+    np.testing.assert_array_equal(auto.indices, ref.indices)
+    assert auto.engine == {"name": "matrix"}
+
+
+def test_selector_resolve_engine_exposed():
+    sel = CraigSelector(CraigConfig(per_class=False))
+    assert sel.resolve_engine(500).name == "matrix"
+    assert sel.resolve_engine(50_000).name in ("features", "device")
+    assert sel.resolve_engine(10**6).name == "sparse"
+
+
+def test_auto_per_class_keys_on_largest_class():
+    """Per-class selection runs one greedy per class, so engine='auto'
+    must key on the largest class pool, not the pool union — a pool past
+    the dense threshold made of small classes stays on exact greedy."""
+    n = 25_000  # > DENSE_MAX_N, but the largest class is only 500 points
+    labels = np.arange(n) % 50
+    feats = (
+        np.random.RandomState(0).randn(50, 6)[labels]
+        + 0.1 * np.random.RandomState(1).randn(n, 6)
+    ).astype(np.float32)
+    cs = CraigSelector(
+        CraigConfig(fraction=100 / n, per_class=True)
+    ).select(feats, labels=labels)
+    assert cs.engine == {"name": "matrix"}
+    assert cs.size == 100
+    assert cs.weights.sum() == pytest.approx(float(n))
+
+
+def test_stray_flat_knobs_with_typed_or_auto_warn():
+    """Half-migrated configs: flat knobs alongside a typed config or
+    'auto' have nothing to attach to — ignored with a loud warning."""
+    with pytest.warns(UserWarning, match="ignores the legacy flat"):
+        ec = resolve_engine_config(
+            CraigConfig(engine=E.SparseConfig(), topk_k=128)
+        )
+    assert ec == E.SparseConfig()  # the typed config wins unchanged
+    with pytest.warns(UserWarning, match="device_q"):
+        assert resolve_engine_config(CraigConfig(device_q=16)) is None
+
+
+def test_craig_config_is_keyword_only():
+    """Inheriting the legacy knobs would silently re-order positional
+    fields; kw_only makes positional construction a loud error instead."""
+    with pytest.raises(TypeError):
+        CraigConfig("cover")
+
+
+def test_round1_config_pins_gains_impl():
+    """Distributed round-1 bodies run the jnp sweep: configs are pinned so
+    stamped provenance records the real execution path — explicit 'pallas'
+    warns, the 'auto' default pins silently, 'jax' passes through."""
+    from repro.core.distributed import normalize_round1_config
+
+    with pytest.warns(UserWarning, match="pinned"):
+        ec = normalize_round1_config(E.DeviceConfig(q=4, gains_impl="pallas"))
+    assert ec.gains_impl == "jax" and ec.q == 4
+    with pytest.warns(UserWarning, match="pinned"):
+        sp = normalize_round1_config(E.SparseConfig(k=9, impl="pallas"))
+    assert sp == E.SparseConfig(k=9, impl="jax")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        dv = normalize_round1_config(
+            E.DeviceConfig(tile_dtype="bfloat16")  # 'auto' pinned silently
+        )
+        assert dv.gains_impl == "jax" and dv.tile_dtype == "bfloat16"
+        assert normalize_round1_config(
+            E.FeaturesConfig()
+        ) == E.FeaturesConfig()
+        assert normalize_round1_config(E.MatrixConfig()) == E.MatrixConfig()
+        assert normalize_round1_config(E.SparseConfig(k=9)) == E.SparseConfig(k=9)

@@ -1,0 +1,33 @@
+"""Tier-1 guard: the legacy flat engine knobs live ONLY in the shim module.
+
+The SelectionEngine redesign (repro.core.engines) replaced the flat
+engine-prefixed CraigConfig knobs with typed per-engine configs; the old
+names survive solely inside ``repro/core/engines/legacy.py`` (declaration
++ mapping).  Any other reference under ``src/`` means engine-specific
+state is being re-threaded around the registry again — the exact
+duplication this refactor removed.
+"""
+import re
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+SHIM = SRC / "repro" / "core" / "engines" / "legacy.py"
+FLAT_KNOBS = re.compile(r"\b(device_q|topk_k|device_stale_tol)\b")
+
+
+def test_no_flat_engine_knobs_outside_shim():
+    assert SHIM.exists(), "legacy shim module moved? update this guard"
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        if path == SHIM:
+            continue
+        for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), start=1
+        ):
+            if FLAT_KNOBS.search(line):
+                offenders.append(f"{path.relative_to(SRC)}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "flat engine knobs referenced outside the legacy shim "
+        "(use typed EngineConfigs from repro.core.engines):\n"
+        + "\n".join(offenders)
+    )

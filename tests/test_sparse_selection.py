@@ -195,11 +195,26 @@ def test_selector_sparse_matches_matrix_engine_with_full_k():
     np.testing.assert_allclose(m.coverage, s.coverage, rtol=0.05)
 
 
-def test_sparse_engine_rejects_cosine():
-    with pytest.raises(ValueError):
-        CraigSelector(
-            CraigConfig(engine="sparse", metric="cosine", per_class=False)
-        ).select(np.asarray(_feats(40, 4)))
+def test_sparse_engine_cosine_via_normalized_l2():
+    """metric='cosine' routes through l2 on unit-normalized features
+    (monotone-equivalent ordering — Capabilities.supports_metrics).  With a
+    complete graph (k == n) that is exact greedy on the normalized pool, so
+    it must match the matrix engine run on pre-normalized features."""
+    from repro.core.engines import MatrixConfig, SparseConfig
+    from repro.core.engines.base import normalize_for_metric
+
+    feats = np.asarray(_feats(80, 6, seed=23))
+    cos = CraigSelector(
+        CraigConfig(
+            fraction=0.1, engine=SparseConfig(k=80), metric="cosine",
+            per_class=False,
+        )
+    ).select(feats)
+    ref = CraigSelector(
+        CraigConfig(fraction=0.1, engine=MatrixConfig(), per_class=False)
+    ).select(np.asarray(normalize_for_metric(jnp.asarray(feats), "cosine")))
+    np.testing.assert_array_equal(np.sort(cos.indices), np.sort(ref.indices))
+    assert cos.weights.sum() == pytest.approx(80.0)
 
 
 def test_midsize_pool_no_dense_smoke():

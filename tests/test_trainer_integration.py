@@ -63,6 +63,45 @@ def test_device_engine_refresh_during_training():
     assert len(np.unique(t._prev_selection.indices)) == 24
 
 
+def test_auto_engine_refresh_records_resolved_engine():
+    """engine='auto' (the CraigConfig default) resolves per refresh-pool
+    size — the dense matrix engine at this scale — and the resolved
+    EngineConfig dict is stamped into the refresh event and sampler meta,
+    surviving the sampler's state_dict round trip."""
+    from repro.core.engines import EngineConfig
+
+    t = _trainer(
+        None, craig=CraigConfig(fraction=0.5, per_class=False, engine="auto")
+    )
+    log = t.run(14)
+    refreshes = [m for m in log if m["event"] == "craig_refresh"]
+    assert refreshes and refreshes[0]["coreset_size"] == 24
+    assert refreshes[0]["engine"]["name"] == "matrix"
+    # the provenance dict restores to a typed config
+    assert EngineConfig.from_dict(refreshes[0]["engine"]).name == "matrix"
+    # and a staged-but-not-installed refresh keeps it through state_dict
+    import json
+
+    json.dumps(t.sampler.state_dict())  # meta (incl. engine) is JSON-able
+
+
+def test_typed_engine_config_in_trainer():
+    """A typed EngineConfig threads end to end through TrainerConfig."""
+    from repro.core.engines import DeviceConfig
+
+    t = _trainer(
+        None,
+        craig=CraigConfig(
+            fraction=0.5, per_class=False, engine=DeviceConfig(q=4)
+        ),
+    )
+    log = t.run(14)
+    refreshes = [m for m in log if m["event"] == "craig_refresh"]
+    assert refreshes and refreshes[0]["coreset_size"] == 24
+    assert refreshes[0]["engine"]["name"] == "device"
+    assert refreshes[0]["engine"]["q"] == 4
+
+
 def test_device_engine_sync_equals_async_refresh():
     """refresh_mode sync/async remain step-for-step replicas with the
     device engine doing the selection."""
