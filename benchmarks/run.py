@@ -15,6 +15,7 @@ def main() -> None:
     from benchmarks import (
         bench_convex,
         bench_data_efficiency,
+        bench_extract,
         bench_grad_error,
         bench_greedy_order,
         bench_kernels,
@@ -36,6 +37,7 @@ def main() -> None:
         bench_selection,    # §3.2 complexity ladder + sparse top-k engine
         bench_kernels,      # Pallas hot-spots
         bench_lm_pipeline,  # §3.4 non-convex pipeline
+        bench_extract,      # §3.4 proxy-extraction pipeline (DESIGN.md §9)
         bench_refresh,      # §3.4 refresh cadence off the critical path
     ]
     failed = 0

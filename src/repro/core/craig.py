@@ -197,6 +197,11 @@ class CraigSelector:
     ) -> CoresetSelection:
         """Select a weighted coreset from (n, d) proxy features.
 
+        ``feats`` may be a device-resident ``jax.Array`` (the
+        ``ProxyExtractor`` handoff, DESIGN.md §9): with a jit-safe engine
+        the feature matrix never crosses to the host — only the small
+        index/weight outputs do.  Host numpy features work identically.
+
         Args:
           labels: optional (n,) integer class labels; required for
             ``per_class=True`` to actually stratify (paper §5) — without

@@ -61,6 +61,7 @@ __all__ = [
     "distributed_select",
     "local_then_merge",
     "compat_shard_map",
+    "make_distributed_extract",
     "ROUND1_ENGINES",
     "normalize_round1_config",
     "resolve_round1_config",
@@ -150,6 +151,35 @@ def compat_shard_map(body, *, mesh, in_specs, out_specs):
     return sm(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         **{check_kw: False},
+    )
+
+
+def make_distributed_extract(select_fn, mesh: Mesh, axis_name: str = "data"):
+    """Data-parallel megabatch proxy extraction (DESIGN.md §9).
+
+    Returns ``fn(params, batches) → (M·B, D)`` where ``batches`` is a
+    megabatch pytree with leading dims (M, B, ...) and M divisible by the
+    ``axis_name`` size: each shard ``lax.scan``s ``select_fn`` over its
+    contiguous slice of the M batches, then features all-gather ON DEVICE
+    (tiled, so contiguous leading-dim sharding restores pool order) — the
+    pool sweep scales with the data axis and the gathered feature matrix
+    never visits the host.  Params are replicated, like round-2 selection.
+
+    The shard body is plain jnp (``select_fn`` must be shard_map-traceable
+    — the train/select steps are; Pallas proxy kernels run in interpret
+    mode off-TPU, same rule as ``normalize_round1_config``).
+    """
+    from repro.core.extract import make_scan_extract
+
+    scan = make_scan_extract(select_fn)  # the ONE scan body (bit parity)
+
+    def body(params, batches):
+        return jax.lax.all_gather(scan(params, batches), axis_name, tiled=True)
+
+    return jax.jit(
+        compat_shard_map(
+            body, mesh=mesh, in_specs=(P(), P(axis_name)), out_specs=P()
+        )
     )
 
 

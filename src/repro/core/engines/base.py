@@ -100,7 +100,11 @@ class Capabilities:
         device is exact at its q=1 default and near-exact past it).
       matrix_free: never materializes the dense (n, n) similarity.
       jit_safe: ``select`` is jax.jit / shard_map traceable end to end
-        (host-side engines — lazy heap, sparse CSC walk — are not).
+        (host-side engines — lazy heap, sparse CSC walk — are not).  Also
+        the device-resident-handoff gate (DESIGN.md §9): trainer refreshes
+        keep extracted features a ``jax.Array`` through
+        ``CraigSelector.select`` when this is true, and materialize the
+        one host copy the engine needs when it is false.
       supports_cover: implements submodular cover (grow until
         L(S) ≤ ε, paper Eq. 12).
       supports_metrics: accepted ``metric=`` values ('cosine' may be

@@ -8,7 +8,8 @@ onto the training critical path.  This module moves it off:
     trigger boundary          install boundary (next epoch)
          │                          │
          ├─ snapshot params ───────►│
-         │  (device_get, host copy) │
+         │  (immutable device refs; │
+         │   numpy leaves copied)   │
          │        background thread │
          │  proxy extract + greedy  │
          │  publish RefreshResult ─►│ atomic install into CoresetSampler
@@ -75,11 +76,13 @@ class RefreshResult:
 class AsyncRefresher:
     """Runs ``work_fn(params_snapshot)`` off the training critical path.
 
-    * ``mode='async'`` — ``submit`` snapshots params to host memory
-      (``jax.device_get``; the live training params keep updating) and
-      returns immediately; extraction + selection run on a background
-      worker thread (non-daemon, so interpreter shutdown joins it rather
-      than tearing down under an active XLA dispatch).
+    * ``mode='async'`` — ``submit`` snapshots params (immutable
+      ``jax.Array`` leaves by reference — they stay device-resident for
+      the worker's extraction scan; mutable numpy leaves by copy, since
+      the live training params keep updating) and returns immediately;
+      extraction + selection run on a background worker thread
+      (non-daemon, so interpreter shutdown joins it rather than tearing
+      down under an active XLA dispatch).
     * ``mode='sync'`` — the same lifecycle with the work inline in
       ``submit``; the deterministic on-critical-path baseline.
 
@@ -132,6 +135,14 @@ class AsyncRefresher:
 
         Returns the new version.  Raises if a refresh is already in flight —
         callers hold at most one back buffer.
+
+        Contract: ``jax.Array`` leaves are snapshotted by reference (they
+        are immutable), so the caller's parameter *update* must not donate
+        the submitted buffers (``jax.jit(donate_argnums=...)``) while a
+        refresh is in flight — a donated update deletes them under the
+        worker.  The trainer's ``train_step`` is jitted without donation
+        for exactly this reason; callers that must donate should pass a
+        ``jax.device_get`` copy instead.
         """
         if self.busy:
             raise RuntimeError(
@@ -141,12 +152,15 @@ class AsyncRefresher:
         version = self._version
 
         def snap_leaf(x):
-            # device arrays are immutable — device_get is snapshot enough;
-            # host numpy leaves are mutable and must be copied, or the
-            # worker would see the live training updates
+            # jax.Arrays are immutable — holding the reference IS the
+            # snapshot, and it keeps the params DEVICE-resident for the
+            # worker's extraction scan (no device→host→device bounce of the
+            # whole param tree per refresh; DESIGN.md §9).  Host numpy
+            # leaves are mutable and must be copied, or the worker would
+            # see the live training updates.
             if isinstance(x, np.ndarray):
                 return x.copy()
-            return np.asarray(jax.device_get(x))
+            return x
 
         snap = jax.tree.map(snap_leaf, params) if snapshot else params
 

@@ -24,6 +24,17 @@ memory-capacity-, limited even at V = 256k.
 
 Grid = (t_blocks, v_blocks), v inner; running (m, l, acc, accy) live in VMEM
 scratch across the v sweep of each t block.
+
+Vocab padding (``valid_v``): configs whose unembedding is padded to a tile
+multiple (V_padded > vocab_size) mask the padded logit columns to −∞ inside
+the kernel — the same padded-vocab bias ``lm_unembed_input_proxy`` applies —
+so the two proxy paths agree bit-for-bit on vocab-padded configs.
+
+Mixed precision (``compute_dtype``): the two MXU matmuls per block (h·W_v and
+p·W_vᵀ / onehot·W_vᵀ) run in ``compute_dtype`` (bf16 on the production select
+path) with fp32 accumulation via ``preferred_element_type``; the online
+softmax state (m, l) and both accumulators stay fp32 — mirroring the
+``lm_unembed_input_proxy`` contract.
 """
 from __future__ import annotations
 
@@ -43,7 +54,8 @@ _NEG_INF = -1e30
 
 
 def _ce_proxy_kernel(
-    h_ref, w_ref, y_ref, out_ref, m_scr, l_scr, acc_scr, accy_scr, *, block_v
+    h_ref, w_ref, y_ref, out_ref, m_scr, l_scr, acc_scr, accy_scr,
+    *, block_v, valid_v, compute_dtype
 ):
     vi = pl.program_id(1)
     nv = pl.num_programs(1)
@@ -55,20 +67,26 @@ def _ce_proxy_kernel(
         acc_scr[...] = jnp.zeros_like(acc_scr)
         accy_scr[...] = jnp.zeros_like(accy_scr)
 
-    h = h_ref[...]  # (bt, d)
-    w = w_ref[...]  # (d, bv)
+    h = h_ref[...]  # (bt, d) in compute_dtype
+    w = w_ref[...]  # (d, bv) in compute_dtype
     z = jax.lax.dot_general(
         h, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (bt, bv)
+    )  # (bt, bv) fp32
+    cols = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)  # (bt, bv) local
+    if valid_v is not None:
+        # padded-vocab bias (lm_unembed_input_proxy's pad_bias): columns
+        # past the real vocab get −∞ logits → zero probability mass
+        z = jnp.where(cols + vi * block_v < valid_v, z, _NEG_INF)
 
     m_prev = m_scr[...]  # (bt, 1)
     m_new = jnp.maximum(m_prev, jnp.max(z, axis=1, keepdims=True))
     corr = jnp.exp(m_prev - m_new)  # (bt, 1)
-    p = jnp.exp(z - m_new)  # (bt, bv) unnormalized
+    p = jnp.exp(z - m_new)  # (bt, bv) unnormalized, fp32
     l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    # acc ← acc·c + p @ Wᵀ
+    # acc ← acc·c + p @ Wᵀ  (MXU matmul in compute_dtype, fp32 accumulate)
     pw = jax.lax.dot_general(
-        p, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        p.astype(compute_dtype), w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )  # (bt, d)
     acc_scr[...] = acc_scr[...] * corr + pw
     m_scr[...] = m_new
@@ -76,8 +94,7 @@ def _ce_proxy_kernel(
     # Label columns: onehot within this vocab block.
     y = y_ref[...]  # (bt, 1) int32 global vocab ids
     local = y - vi * block_v  # (bt, 1)
-    cols = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)  # (bt, bv)
-    onehot = (cols == local).astype(jnp.float32)  # rows w/ label elsewhere: 0
+    onehot = (cols == local).astype(compute_dtype)  # rows w/ label elsewhere: 0
     yw = jax.lax.dot_general(
         onehot, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
@@ -89,7 +106,9 @@ def _ce_proxy_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_t", "block_v", "interpret")
+    jax.jit,
+    static_argnames=("block_t", "block_v", "interpret", "valid_v",
+                     "compute_dtype"),
 )
 def ce_proxy_pallas(
     hidden: jax.Array,
@@ -99,21 +118,34 @@ def ce_proxy_pallas(
     block_t: int = 128,
     block_v: int = 512,
     interpret: bool = False,
+    valid_v: int | None = None,
+    compute_dtype=jnp.float32,
 ) -> jax.Array:
     """Fused (softmax(hW) − onehot(y)) @ Wᵀ over vocab blocks.
 
     Args:
       hidden: (T, D), T % block_t == 0, D % 128 == 0.
       unembed: (D, V), V % block_v == 0.
-      labels: (T,) int32 in [0, V).
+      labels: (T,) int32 in [0, valid_v or V).
+      valid_v: real vocab size when V is tile-padded (1 ≤ valid_v ≤ V);
+        padded columns are −∞-masked in-kernel, matching
+        ``lm_unembed_input_proxy``'s pad bias.  None means all V columns
+        are real.
+      compute_dtype: dtype of the MXU matmuls (fp32 accumulation; softmax
+        state stays fp32) — bf16 on the production select path.
     Returns:
       (T, D) fp32 per-token proxy gradients.
     """
     T, D = hidden.shape
     V = unembed.shape[1]
     assert T % block_t == 0 and V % block_v == 0, (T, V, block_t, block_v)
+    if valid_v is not None and not 1 <= valid_v <= V:
+        raise ValueError(f"valid_v={valid_v} outside [1, V={V}]")
     grid = (T // block_t, V // block_v)
-    kernel = functools.partial(_ce_proxy_kernel, block_v=block_v)
+    kernel = functools.partial(
+        _ce_proxy_kernel, block_v=block_v, valid_v=valid_v,
+        compute_dtype=compute_dtype,
+    )
     scratch_shapes = [
         pltpu.VMEM((block_t, 1), jnp.float32),  # running max m
         pltpu.VMEM((block_t, 1), jnp.float32),  # running denom l
@@ -134,7 +166,7 @@ def ce_proxy_pallas(
         compiler_params=_TPU_PARAMS,
         interpret=interpret,
     )(
-        hidden.astype(jnp.float32),
-        unembed.astype(jnp.float32),
+        hidden.astype(compute_dtype),
+        unembed.astype(compute_dtype),
         labels.astype(jnp.int32).reshape(T, 1),
     )

@@ -236,7 +236,9 @@ def pairwise_l2(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_t", "block_v", "interpret")
+    jax.jit,
+    static_argnames=("block_t", "block_v", "interpret", "valid_v",
+                     "compute_dtype"),
 )
 def ce_proxy(
     hidden: jax.Array,
@@ -246,31 +248,33 @@ def ce_proxy(
     block_t: int = 128,
     block_v: int = 512,
     interpret: bool | None = None,
+    valid_v: int | None = None,
+    compute_dtype=jnp.float32,
 ) -> jax.Array:
     """Fused per-token CRAIG proxy (softmax(hW) − y) @ Wᵀ → (T, D) fp32.
 
-    Vocab padding uses −inf-free masking: padded logit columns come from
-    zero-padded W columns → logits 0; to keep softmax exact we pad W with
-    a large negative bias trick instead: extra columns of W are zero but we
-    clamp their probability by appending labels never pointing there and
-    subtracting their contribution is ≈ uniform-noise; to stay *exact* we
-    require V % block_v == 0 here and pad T only.
+    Vocab padding is exact: V is zero-padded up to a ``block_v`` multiple
+    and the padded columns (plus any caller-declared pad past ``valid_v``)
+    are −∞-masked inside the kernel — the same padded-vocab bias
+    ``core.proxy.lm_unembed_input_proxy`` applies, so the two proxy paths
+    agree on vocab-padded configs.  ``compute_dtype=bf16`` runs the MXU
+    matmuls in bf16 with fp32 accumulation (softmax state stays fp32).
     """
     if interpret is None:
         interpret = interpret_default()
     T, D = hidden.shape
     V = unembed.shape[1]
-    if V % block_v != 0:
-        # fall back to a block size that divides V
-        for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
-            if V % cand == 0:
-                block_v = cand
-                break
+    vv = V if valid_v is None else valid_v
+    bv = min(block_v, max(8, 1 << (V - 1).bit_length()))
     bt = min(block_t, max(8, 1 << (T - 1).bit_length()))
     hp = _pad_dim(_pad_dim(hidden, 0, bt), 1, _LANE)
-    wp = _pad_dim(unembed, 0, _LANE)
+    wp = _pad_dim(_pad_dim(unembed, 0, _LANE), 1, bv)
     lp = _pad_dim(labels.reshape(T), 0, bt)
     out = _ce.ce_proxy_pallas(
-        hp, wp, lp, block_t=bt, block_v=block_v, interpret=interpret
+        hp, wp, lp, block_t=bt, block_v=bv, interpret=interpret,
+        # mask everything past the real vocab, incl. the block padding,
+        # unless nothing was padded at all
+        valid_v=None if vv == wp.shape[1] else vv,
+        compute_dtype=compute_dtype,
     )
     return out[:T, :D]

@@ -8,6 +8,7 @@ from repro.models.model import (
     loss_fn,
     prefill,
     proxy_features,
+    proxy_features_fused,
 )
 
 __all__ = [
@@ -19,4 +20,5 @@ __all__ = [
     "loss_fn",
     "prefill",
     "proxy_features",
+    "proxy_features_fused",
 ]

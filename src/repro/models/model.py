@@ -43,6 +43,7 @@ __all__ = [
     "prefill",
     "decode_step",
     "proxy_features",
+    "proxy_features_fused",
     "init_serve_state",
 ]
 
@@ -219,6 +220,48 @@ def proxy_features(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
         hidden, unembed, labels, chunk=cfg.logit_chunk,
         valid_v=cfg.vocab_size, compute_dtype=COMPUTE_DTYPE,
     )
+
+
+def proxy_features_fused(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    compute_dtype=COMPUTE_DTYPE,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pooled unembed-input proxies via the fused ``ce_proxy`` Pallas kernel.
+
+    Same contract as :func:`proxy_features` — (B, D) fp32, mean over tokens
+    — but the CE-backward head runs the flash-style vocab-blocked kernel
+    (kernels/ce_proxy.py) instead of the chunked einsum scan: one pass over
+    W per token block, softmax never resident at (T, V).  The two paths
+    agree on vocab-padded configs (the kernel's ``valid_v`` bias mirrors
+    ``lm_unembed_input_proxy``'s; tests/test_proxy.py gates parity).  All
+    sequences share one token stream: per-token gradients are independent,
+    so (B, T) flattens to (B·T,) for the kernel and pools back per sequence.
+    """
+    from repro.kernels import ops
+
+    hidden, _ = forward(params, cfg, batch)
+    unembed = _unembed_matrix(params, cfg)
+    labels = batch["labels"]
+    B, T, D = hidden.shape
+    flat_h = hidden.reshape(B * T, D)
+
+    def one(w, y):
+        g = ops.ce_proxy(
+            flat_h, w, y.reshape(B * T), valid_v=cfg.vocab_size,
+            compute_dtype=compute_dtype, interpret=interpret,
+        )
+        return jnp.mean(g.reshape(B, T, D), axis=1)
+
+    if cfg.n_codebooks > 1:
+        feats = 0.0
+        for c in range(cfg.n_codebooks):
+            feats = feats + one(unembed[c], labels[..., c])
+        return feats / cfg.n_codebooks
+    return one(unembed, labels)
 
 
 # ---------------------------------------------------------------------------

@@ -90,12 +90,43 @@ def make_train_step(
     return train_step
 
 
-def make_select_step(cfg: ModelConfig) -> Callable:
+def make_select_step(
+    cfg: ModelConfig,
+    proxy_impl: str = "auto",
+    compute_dtype=None,
+) -> Callable:
     """select_step(params, batch) → (B, D) proxy features (fp32).
 
-    The trainer calls this over the candidate pool, then feeds features to
-    core.distributed.distributed_select / CraigSelector.
+    The trainer's ``ProxyExtractor`` (core/extract.py) scans this over the
+    candidate pool, then hands features to CraigSelector /
+    core.distributed.distributed_select.
+
+    Args:
+      proxy_impl: which CE-backward head computes the unembed-input proxy —
+        * ``'auto'`` (default): ``'pallas'`` on TPU, ``'einsum'`` elsewhere;
+        * ``'einsum'``: chunked ``lax.scan`` path
+          (``core.proxy.lm_unembed_input_proxy``) — the shard_map-safe body;
+        * ``'pallas'``: fused flash-style ``ce_proxy`` kernel
+          (kernels/ce_proxy.py; interpret mode off-TPU, so CI exercises it).
+      compute_dtype: matmul dtype override for the pallas path (fp32
+        accumulation either way); None keeps the model's COMPUTE_DTYPE
+        (bf16) — mirroring ``lm_unembed_input_proxy``.
     """
+    if proxy_impl == "auto":
+        proxy_impl = "pallas" if jax.default_backend() == "tpu" else "einsum"
+    if proxy_impl == "pallas":
+        from repro.models import proxy_features_fused
+
+        kw = {} if compute_dtype is None else {"compute_dtype": compute_dtype}
+
+        def select_step(params, batch):
+            return proxy_features_fused(params, cfg, batch, **kw)
+
+        return select_step
+    if proxy_impl != "einsum":
+        raise ValueError(
+            f"unknown proxy_impl {proxy_impl!r} (want 'auto'|'einsum'|'pallas')"
+        )
 
     def select_step(params, batch):
         return proxy_features(params, cfg, batch)

@@ -22,6 +22,13 @@ Responsibilities (DESIGN.md §4):
     a typed ``EngineConfig`` or ``'auto'`` (default), in which case the
     ``repro.core.engines`` policy picks per refresh-pool size/backend, and
     the resolved config is stamped into the refresh metadata/checkpoints;
+  * pipelined, device-resident proxy extraction (``core.extract``,
+    DESIGN.md §9): the pool sweep folds into O(1) ``lax.scan`` programs
+    (``extract_megabatch``) with double-buffered host prefetch
+    (``extract_prefetch``); features hand off to ``CraigSelector.select``
+    as a ``jax.Array`` — with a jit-safe engine
+    (``engines.Capabilities.jit_safe``) the feature matrix never visits
+    the host, and host copies exist only for labels/provenance;
   * per-class stratification (paper §5): pool class labels are extracted
     alongside proxies (``dataset.class_labels``) and threaded into
     ``CraigSelector.select`` whenever ``craig.per_class=True``;
@@ -52,6 +59,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.craig import CraigConfig, CraigSelector
+from repro.core.extract import ProxyExtractor
 from repro.core.refresh import AsyncRefresher, RefreshResult
 from repro.data.pipeline import CoresetSampler
 from repro.models.config import ModelConfig
@@ -72,6 +80,10 @@ class TrainerConfig:
     )
     use_craig: bool = True
     proxy_pool_batches: int = 8  # batches of the pool scanned per refresh
+    proxy_impl: str = "auto"  # select-step CE head: auto|einsum|pallas
+    extract_megabatch: int = 0  # pool batches per extraction dispatch
+    # (0 = the whole pool in ONE lax.scan program — DESIGN.md §9)
+    extract_prefetch: bool = True  # double-buffered host batch assembly
     refresh_mode: Literal["sync", "async"] = "async"  # DESIGN.md §4 lifecycle
     warm_start_fraction: float = 0.5  # share of the budget warm-started from
     # the previous refresh's high-gain prefix (0 = cold every refresh)
@@ -101,10 +113,22 @@ class Trainer:
         self.eval_dataset = eval_dataset
         self.optimizer = optimizer
         self.sampler = CoresetSampler(dataset.n_docs, tcfg.batch_size, tcfg.seed)
+        # No donate_argnums here: the AsyncRefresher snapshots params by
+        # reference (immutable jax.Arrays), so a donating update would
+        # delete the worker's snapshot mid-refresh (core/refresh.py).
         self.train_step = jax.jit(
             make_train_step(cfg, optimizer, microbatches=tcfg.microbatches)
         )
-        self.select_step = jax.jit(make_select_step(cfg))
+        # Pipelined pool sweep (DESIGN.md §9): O(1) scan programs, prefetch,
+        # device-resident features.  The extractor owns the select-step
+        # compilation; megabatch 0 folds the whole default pool into one.
+        self.extractor = ProxyExtractor(
+            make_select_step(cfg, proxy_impl=tcfg.proxy_impl),
+            dataset,
+            tcfg.batch_size,
+            megabatch=tcfg.extract_megabatch or max(1, tcfg.proxy_pool_batches),
+            prefetch=tcfg.extract_prefetch,
+        )
         self.params = init_params_fn()
         self.opt_state = optimizer.init(self.params)
         self.step = 0
@@ -164,31 +188,26 @@ class Trainer:
         stride = max(1, self.dataset.n_docs // n_pool)
         return np.arange(0, self.dataset.n_docs, stride)[:n_pool]
 
-    def _extract_pool(
-        self, params, pool_idx: np.ndarray
-    ) -> tuple[np.ndarray, np.ndarray | None]:
-        """Proxy features (and class labels, when available) for the pool."""
-        feats = []
-        bs = self.tcfg.batch_size
-        for lo in range(0, len(pool_idx), bs):
-            chunk = pool_idx[lo : lo + bs]
-            if len(chunk) < bs:  # pad, then drop
-                chunk = np.concatenate([chunk, pool_idx[: bs - len(chunk)]])
-            batch = self.dataset.batch(chunk)
-            f = self.select_step(params, batch)
-            feats.append(np.asarray(f))
-        feats = np.concatenate(feats)[: len(pool_idx)]
-        labels = None
+    def _pool_labels(self, pool_idx: np.ndarray) -> np.ndarray | None:
+        """Class labels for the pool (host-side; the stratification key)."""
         if self.tcfg.craig.per_class and hasattr(self.dataset, "class_labels"):
-            labels = np.asarray(self.dataset.class_labels(pool_idx))
-        return feats, labels
+            return np.asarray(self.dataset.class_labels(pool_idx))
+        return None
 
     def _refresh_work(self, params):
         """Extraction + selection; runs on the refresher's worker thread in
-        async mode (params is a host snapshot — live params keep training)."""
+        async mode (params is a snapshot — live params keep training).
+
+        Device-resident handoff: features stay a ``jax.Array`` end to end
+        through ``CraigSelector.select`` — with a jit-safe engine
+        (``Capabilities.jit_safe``) the feature matrix never crosses to the
+        host at all, and the host-side engines pull to host only what their
+        algorithm needs (a pre-emptive numpy copy here would just be
+        re-uploaded by the selector's ``jnp.asarray``)."""
         pool_idx = self._pool_indices()
-        feats, labels = self._extract_pool(params, pool_idx)
+        labels = self._pool_labels(pool_idx)
         selector = CraigSelector(self.tcfg.craig)
+        feats = self.extractor.extract(params, pool_idx)
         init = None
         prev = self._prev_selection
         if self.tcfg.warm_start_fraction > 0 and prev is not None:
@@ -284,6 +303,13 @@ class Trainer:
                 "weights": np.asarray(prev.weights).tolist(),
                 "coverage": float(prev.coverage),
                 "epsilon_hat": float(prev.epsilon_hat),
+                # provenance must survive restart: the resolved EngineConfig
+                # dict and the per-class stratification record (JSON keys
+                # stringify; restore re-ints them)
+                "engine": prev.engine,
+                "per_class_sizes": None
+                if prev.per_class_sizes is None
+                else {str(k): int(v) for k, v in prev.per_class_sizes.items()},
             },
         }
         self.ckpt.save(self.step, tree, extras, blocking=blocking)
@@ -308,12 +334,17 @@ class Trainer:
         if ps is not None:
             from repro.core.craig import CoresetSelection
 
+            pcs = ps.get("per_class_sizes")
             self._prev_selection = CoresetSelection(
                 indices=np.asarray(ps["indices"], np.int64),
                 weights=np.asarray(ps["weights"], np.float32),
                 order=np.arange(len(ps["indices"])),
                 coverage=float(ps["coverage"]),
                 epsilon_hat=float(ps["epsilon_hat"]),
+                per_class_sizes=None
+                if pcs is None
+                else {int(k): int(v) for k, v in pcs.items()},
+                engine=ps.get("engine"),
             )
         return True
 

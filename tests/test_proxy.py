@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.proxy import (
     classifier_last_layer_proxy,
@@ -131,3 +132,68 @@ def test_lm_proxy_bf16_compute_close_to_fp32():
         return np.linalg.norm(d[:, None] - d[None], axis=-1)
     corr = np.corrcoef(pdist(f32).ravel(), pdist(bf16).ravel())[0, 1]
     assert corr > 0.99, corr
+
+
+# ---------------------------------------------------------------------------
+# Fused ce_proxy kernel ↔ lm_unembed_input_proxy parity (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "T,D,V",
+    [
+        (8, 8, 16),     # everything block-aligned
+        (10, 12, 20),   # non-multiple T, D, V tails
+        (33, 16, 100),  # T and V straddle several blocks
+        (16, 8, 129),   # V one past a block boundary
+    ],
+)
+def test_ce_proxy_kernel_matches_lm_proxy(T, D, V):
+    """The two proxy paths — fused Pallas kernel (per-token, pooled here)
+    and chunked einsum scan — compute the same §3.4 quantity, including on
+    vocab-padded configs (the kernel's valid_v bias == lm's pad_bias)."""
+    from repro.kernels import ops
+
+    Vp = V + 12  # tile-padded unembedding, real vocab = V
+    keys = jax.random.split(jax.random.PRNGKey(T * 1000 + V), 3)
+    hidden = jax.random.normal(keys[0], (T, D)) * 0.5
+    W = jax.random.normal(keys[1], (D, Vp)) * 0.2
+    labels = jax.random.randint(keys[2], (T,), 0, V)
+
+    got = ops.ce_proxy(
+        hidden, W, labels, block_t=8, block_v=16, valid_v=V, interpret=True
+    )  # (T, D) per-token
+    want = lm_unembed_input_proxy(
+        hidden[None], W, labels[None], chunk=5, valid_v=V
+    )  # (1, D) token mean
+    np.testing.assert_allclose(
+        np.asarray(got).mean(0), np.asarray(want)[0], rtol=1e-4, atol=1e-5
+    )
+
+
+def test_ce_proxy_kernel_bf16_compute_close_to_fp32():
+    """bf16 compute_dtype (MXU matmuls only; fp32 softmax/accumulators)
+    stays tolerance-close to the fp32 kernel — mirroring the
+    lm_unembed_input_proxy bf16 contract."""
+    from repro.kernels import ops
+
+    T, D, V = 32, 16, 64
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    hidden = jax.random.normal(keys[0], (T, D)) * 0.5
+    W = jax.random.normal(keys[1], (D, V)) * 0.1
+    labels = jax.random.randint(keys[2], (T,), 0, V)
+    f32 = ops.ce_proxy(hidden, W, labels, block_t=8, block_v=16, interpret=True)
+    bf16 = ops.ce_proxy(
+        hidden, W, labels, block_t=8, block_v=16, interpret=True,
+        compute_dtype=jnp.bfloat16,
+    )
+    np.testing.assert_allclose(
+        np.asarray(bf16), np.asarray(f32), rtol=0.1, atol=5e-3
+    )
+    # and the bf16 kernel still agrees with the bf16 einsum path
+    lm_bf16 = lm_unembed_input_proxy(
+        hidden[None], W, labels[None], chunk=8, compute_dtype=jnp.bfloat16
+    )
+    np.testing.assert_allclose(
+        np.asarray(bf16).mean(0), np.asarray(lm_bf16)[0], rtol=0.1, atol=5e-3
+    )

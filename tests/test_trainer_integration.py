@@ -232,3 +232,25 @@ def test_eval_harness_tracks_heldout_loss():
     assert all(np.isfinite(e["eval_loss"]) for e in evals)
     # eval loss should improve as training progresses
     assert evals[-1]["eval_loss"] <= evals[0]["eval_loss"] + 0.05
+
+
+def test_restore_keeps_selection_provenance(tmp_path):
+    """Regression: restore_or_init used to drop ``engine`` and
+    ``per_class_sizes`` when rebuilding the warm-start CoresetSelection
+    from checkpoint extras — a restarted trainer lost the provenance of
+    the selection it warm-starts from."""
+    craig = CraigConfig(fraction=0.5, per_class=True)
+    t1 = _trainer(tmp_path, craig=craig, select_every_epochs=1)
+    t1.run(8)  # ≥1 refresh; prev_selection carries engine + class sizes
+    t1._save(blocking=True)
+    prev1 = t1._prev_selection
+    assert prev1 is not None
+    assert prev1.engine is not None and prev1.per_class_sizes is not None
+
+    t2 = _trainer(tmp_path, seed=9, craig=craig, select_every_epochs=1)
+    assert t2.restore_or_init()
+    prev2 = t2._prev_selection
+    assert prev2.engine == prev1.engine
+    # JSON stringifies int keys; restore must re-int them
+    assert prev2.per_class_sizes == prev1.per_class_sizes
+    np.testing.assert_array_equal(prev2.indices, prev1.indices)
