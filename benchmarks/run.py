@@ -1,12 +1,16 @@
 """Benchmark driver — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.  The module → paper
+Prints ``name,us_per_call,derived`` CSV lines.  ``--smoke`` forwards to
+every module whose ``run()`` accepts a ``smoke`` parameter (CI-on-CPU
+scale); the rest run at their single scale.  The module → paper
 figure/table mapping is documented in EXPERIMENTS.md §Benchmark-map;
 roofline numbers come from ``python -m repro.roofline`` over the dry-run
 artifacts (EXPERIMENTS.md §Roofline).
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import traceback
 
@@ -23,8 +27,14 @@ def main() -> None:
         bench_mlp,
         bench_refresh,
         bench_selection,
+        bench_streaming,
         bench_subset_size,
     )
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-on-CPU scale for the modules that support it")
+    args = ap.parse_args()
 
     print("name,us_per_call,derived")
     modules = [
@@ -39,11 +49,15 @@ def main() -> None:
         bench_lm_pipeline,  # §3.4 non-convex pipeline
         bench_extract,      # §3.4 proxy-extraction pipeline (DESIGN.md §9)
         bench_refresh,      # §3.4 refresh cadence off the critical path
+        bench_streaming,    # §10 sieve-streaming ingest + objective gate
     ]
     failed = 0
     for mod in modules:
+        kw = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kw["smoke"] = True
         try:
-            mod.run()
+            mod.run(**kw)
         except Exception:  # noqa: BLE001 — report all benches even if one breaks
             failed += 1
             print(f"{mod.__name__},nan,ERROR", file=sys.stderr)

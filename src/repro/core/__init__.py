@@ -9,6 +9,7 @@ from repro.core.engines import (
     Capabilities,
     EngineConfig,
     SelectionEngine,
+    StreamingSelector,
     auto_engine_config,
     get_engine,
     list_engines,
@@ -37,6 +38,7 @@ __all__ = [
     "Capabilities",
     "EngineConfig",
     "SelectionEngine",
+    "StreamingSelector",
     "auto_engine_config",
     "get_engine",
     "list_engines",

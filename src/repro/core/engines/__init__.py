@@ -67,6 +67,15 @@ from repro.core.engines.sparse import (
     topk_graph,
 )
 from repro.core.engines.device import DeviceConfig, DeviceEngine, greedy_fl_device
+from repro.core.engines.streaming import (
+    StreamingConfig,
+    StreamingEngine,
+    StreamingSelector,
+    StreamingState,
+    init_streaming_state,
+    ingest_delta,
+    streaming_result,
+)
 
 __all__ = [
     # protocol
@@ -89,6 +98,10 @@ __all__ = [
     "FeaturesConfig", "FeaturesEngine",
     "SparseConfig", "SparseEngine",
     "DeviceConfig", "DeviceEngine",
+    "StreamingConfig", "StreamingEngine",
+    # streaming state machine (sieve-streaming, DESIGN.md §10)
+    "StreamingSelector", "StreamingState",
+    "init_streaming_state", "ingest_delta", "streaming_result",
     # functional API (shared with core.facility_location)
     "pairwise_distances",
     "normalize_for_metric",

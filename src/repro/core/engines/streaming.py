@@ -1,0 +1,725 @@
+"""Sieve-streaming facility-location engine (DESIGN.md §10).
+
+The batch engines re-sweep the whole pool per refresh; under continuous
+ingestion (ROADMAP north-star) that cost grows with the pool while the
+information per refresh does not.  Sieve-streaming (Badanidiyuru et al.,
+KDD'14) maintains a *geometric grid of threshold sieves* instead: for each
+guess ``v = (1+eps)^j`` of OPT, a sieve greedily admits an arriving element
+when its marginal gain clears ``(v/2 − f(S_v)) / (k − |S_v|)``.  One sieve's
+guess lands within (1+eps) of OPT and its set achieves ``(1/2 − O(eps))·OPT``
+— a one-pass, O(Δn·k)-per-delta guarantee with no re-sweep of prior data.
+
+Adaptation to CRAIG's facility location: past points cannot be revisited, so
+the objective is tracked as the running per-point mean coverage — each sieve
+accumulates ``Σ_i max_{j∈S_v} s_ij`` over the deltas it has seen (``fval``),
+marginal gains are estimated batch-locally on the arriving delta (CREST,
+arXiv:2306.01244: selection over pool subsets arriving over time preserves
+the data-efficiency guarantees when deltas are representative samples), and
+the max-singleton estimate ``m`` that anchors the grid is the running max
+*mean* similarity — scale-stable as the stream grows.  When ``m`` rises, the
+live window of OPT guesses ``[m, 2km]`` shifts: each sieve slot holds an
+absolute level and re-anchors by jumping a multiple of L levels (retiring its
+selections), so the L slots always hold L consecutive levels of the current
+window — a circular buffer over the geometric grid, O(L) per element.
+
+With a single delta equal to the full pool, the estimates are exact and
+``select`` *is* textbook sieve-streaming, hence the property-test gate
+``F(S) ≥ (1/2 − eps)·F(greedy)`` (tests/test_selection_properties.py).
+
+Three surfaces:
+
+  * ``init_streaming_state`` / ``ingest_delta`` / ``streaming_result`` — the
+    functional core.  ``StreamingState`` is an arrays-only NamedTuple (a
+    pytree): ``ingest_delta`` is jit-compiled once per delta shape, and the
+    state serializes losslessly for checkpoints (``StreamingSelector``).
+  * ``StreamingEngine`` (``engine='streaming'``) — the registry plugin: a
+    one-shot ``select`` (init → single-delta ingest → finalize) behind the
+    common protocol; not exact, matrix-free, jit-safe.
+  * ``StreamingSelector`` — the stateful host wrapper the coreset service
+    builds on: sequential ``ingest(delta)`` calls, per-class stratified
+    budgets (paper §5) apportioned at ``result`` time from observed class
+    arrival counts, and a JSON-able ``state_dict`` that resumes
+    bit-identically mid-stream.
+
+Finalization (``streaming_result``) maps the best sieve back to a full
+``FLResult``: it replays the warm prefix, takes the sieve's picks in
+admission order, backfills any remaining budget with worst-covered points
+(farthest-point traversal), and computes γ weights / residual coverage
+against the pool — the only step that touches all n rows, and the only one
+whose cost scales with the pool rather than the delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import ClassVar, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines.base import (
+    Capabilities,
+    EngineConfig,
+    FLResult,
+    SelectionEngine,
+    _replay_prefix,
+    cosine_residual_coverage,
+    normalize_for_metric,
+)
+from repro.core.engines.registry import register_engine
+
+__all__ = [
+    "LVL_UNSET",
+    "StreamingConfig",
+    "StreamingEngine",
+    "StreamingSelector",
+    "StreamingState",
+    "init_streaming_state",
+    "ingest_delta",
+    "num_sieves",
+    "streaming_result",
+]
+
+# Sentinel level for a sieve slot that has never been anchored (no element
+# seen yet).  Any real absolute level ``floor(log m / log(1+eps))`` is far
+# above it, so the first element cold-starts the whole grid.
+LVL_UNSET = -(2**30)
+
+
+class StreamingState(NamedTuple):
+    """Serializable sieve-streaming state — arrays only, hence a pytree.
+
+    Static meta (budget, eps) is *not* carried here: it is baked into the
+    array shapes (L, k) at :func:`init_streaming_state` time and travels
+    alongside in ``StreamingSelector.state_dict`` / engine configs.
+
+    Attributes:
+      n_seen: () int32 — points ingested so far.
+      d_max: () float32 — similarity offset ``2·max‖x‖ + 1e-6``, frozen at
+        the first ingest so sieve values stay comparable across deltas
+        (later similarities clip at 0).
+      m: () float32 — running max singleton *mean* similarity (grid anchor).
+      lvl: (L,) int32 — absolute threshold level per sieve slot
+        (``v = (1+eps)^lvl``); ``LVL_UNSET`` before the first element.
+      count: (L,) int32 — elements admitted per sieve.
+      fval: (L,) float32 — Σ coverage of past delta points at their ingest
+        time, per sieve (the running objective estimate, in sum units).
+      fval_pre: () float32 — same accumulator for the warm prefix alone;
+        the O(1) reset value when a sieve retires.
+      sel_idx: (L, k) int32 — admitted indices per sieve (-1 = empty slot).
+      sel_feats: (L, k, d) float32 — their features (past points are gone;
+        the sieves keep the only copy).
+      pre_idx: (r0,) int32 — warm-start prefix indices (excluded from sieve
+        admission; replayed at finalize).
+      pre_feats: (r0, d) float32 — prefix features.
+    """
+
+    n_seen: jax.Array
+    d_max: jax.Array
+    m: jax.Array
+    lvl: jax.Array
+    count: jax.Array
+    fval: jax.Array
+    fval_pre: jax.Array
+    sel_idx: jax.Array
+    sel_feats: jax.Array
+    pre_idx: jax.Array
+    pre_feats: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        """k — sieve capacity (budget minus warm-prefix length)."""
+        return self.sel_idx.shape[1]
+
+    @property
+    def num_levels(self) -> int:
+        """L — number of sieve slots."""
+        return self.lvl.shape[0]
+
+
+def num_sieves(budget: int, eps: float, levels: int = 0) -> int:
+    """Sieve-count default: span the OPT window ``[m, 2·budget·m]``.
+
+    The geometric grid needs ``log(2k)/log(1+eps)`` levels to cover the
+    window; capped at 64 (OPT sits far below ``k·m`` on real pools) and
+    floored at 4.  ``levels > 0`` overrides.
+    """
+    if levels > 0:
+        return int(levels)
+    k = max(int(budget), 2)
+    want = math.ceil(math.log(2.0 * k) / math.log1p(eps)) + 1
+    return max(4, min(64, want))
+
+
+def init_streaming_state(
+    budget: int,
+    dim: int,
+    *,
+    eps: float = 0.15,
+    levels: int = 0,
+    init_selected=None,
+    init_feats=None,
+) -> StreamingState:
+    """Empty sieve grid for ``budget`` selections over ``dim``-d features.
+
+    ``init_selected``/``init_feats`` seed a warm-start prefix: those
+    elements are treated as already selected (every sieve's coverage starts
+    from theirs; they are excluded from admission) and are replayed first at
+    :func:`streaming_result`, preserving the warm-start-prefix contract of
+    the batch engines.
+    """
+    budget = int(budget)
+    if budget < 1:
+        raise ValueError(f"budget must be ≥ 1, got {budget}")
+    if init_selected is None:
+        pre_idx = jnp.zeros((0,), jnp.int32)
+        pre_feats = jnp.zeros((0, dim), jnp.float32)
+    else:
+        pre_idx = jnp.asarray(init_selected, jnp.int32).ravel()
+        if init_feats is None:
+            raise ValueError("init_selected needs init_feats (past rows are gone)")
+        pre_feats = jnp.asarray(init_feats, jnp.float32).reshape(-1, dim)
+        if pre_feats.shape[0] != pre_idx.shape[0]:
+            raise ValueError(
+                f"init_feats rows {pre_feats.shape[0]} != "
+                f"init_selected length {pre_idx.shape[0]}"
+            )
+        if pre_idx.shape[0] > budget:
+            raise ValueError(
+                f"init_selected has {pre_idx.shape[0]} elements > budget {budget}"
+            )
+    k = budget - pre_idx.shape[0]
+    L = num_sieves(budget, eps, levels)
+    return StreamingState(
+        n_seen=jnp.zeros((), jnp.int32),
+        d_max=jnp.zeros((), jnp.float32),
+        m=jnp.zeros((), jnp.float32),
+        lvl=jnp.full((L,), LVL_UNSET, jnp.int32),
+        count=jnp.zeros((L,), jnp.int32),
+        fval=jnp.zeros((L,), jnp.float32),
+        fval_pre=jnp.zeros((), jnp.float32),
+        sel_idx=jnp.full((L, k), -1, jnp.int32),
+        sel_feats=jnp.zeros((L, k, dim), jnp.float32),
+        pre_idx=pre_idx,
+        pre_feats=pre_feats,
+    )
+
+
+def _sim_to(feats: jax.Array, sq: jax.Array, x: jax.Array, d_max) -> jax.Array:
+    """(Δn,) clipped similarity of every delta point to one element x."""
+    d2 = sq + jnp.sum(x * x) - 2.0 * (feats @ x)
+    return jnp.maximum(d_max - jnp.sqrt(jnp.maximum(d2, 0.0)), 0.0)
+
+
+def _ingest_delta(state: StreamingState, feats, idx, eps) -> StreamingState:
+    """One-pass sieve update over a megabatch delta (jit-compiled).
+
+    Work is O(Δn·(Δn + L)·d′) with d′ the feature dim — independent of
+    ``n_seen``: prior data is never revisited.
+    """
+    feats = jnp.asarray(feats, jnp.float32)
+    dn, dim = feats.shape
+    L, k = state.num_levels, state.capacity
+    r0 = state.pre_idx.shape[0]
+    idx = jnp.asarray(idx, jnp.int32)
+    sq = jnp.sum(feats * feats, axis=-1)
+
+    # freeze the similarity offset at first ingest (later sims clip at 0)
+    d_max = jnp.where(
+        state.n_seen == 0, 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6, state.d_max
+    )
+
+    # prefix coverage of the delta (the floor every sieve shares)
+    if r0 > 0:
+        psq = jnp.sum(state.pre_feats * state.pre_feats, axis=-1)
+        d2p = sq[:, None] + psq[None, :] - 2.0 * (feats @ state.pre_feats.T)
+        simp = jnp.maximum(d_max - jnp.sqrt(jnp.maximum(d2p, 0.0)), 0.0)
+        cov_pre = jnp.max(simp, axis=1)
+        is_pre = jnp.any(idx[:, None] == state.pre_idx[None, :], axis=1)
+    else:
+        cov_pre = jnp.zeros((dn,), jnp.float32)
+        is_pre = jnp.zeros((dn,), bool)
+    pre_sum = jnp.sum(cov_pre)
+
+    if k == 0:  # budget == prefix: nothing to sieve, just account coverage
+        return state._replace(
+            n_seen=state.n_seen + dn,
+            d_max=d_max,
+            fval=state.fval + pre_sum,
+            fval_pre=state.fval_pre + pre_sum,
+        )
+
+    # coverage of the delta by each sieve's existing selections
+    ssq = jnp.sum(state.sel_feats * state.sel_feats, axis=-1)  # (L, k)
+    dots = jnp.einsum("nd,lkd->lnk", feats, state.sel_feats)
+    d2s = sq[None, :, None] + ssq[:, None, :] - 2.0 * dots
+    sims = jnp.maximum(d_max - jnp.sqrt(jnp.maximum(d2s, 0.0)), 0.0)
+    valid = jnp.arange(k)[None, None, :] < state.count[:, None, None]
+    cov0 = jnp.max(jnp.where(valid, sims, 0.0), axis=2)  # (L, Δn)
+    cov0 = jnp.maximum(cov0, cov_pre[None, :])
+
+    n_seen_f = state.n_seen.astype(jnp.float32)
+    log1p_eps = math.log1p(float(eps))
+    slot_arange = jnp.arange(L, dtype=jnp.int32)
+
+    # The scan carries only the O(L·Δn) cover rows and O(L) scalars; the
+    # big (L, k[, d]) selection arrays are never read inside the body, so
+    # they are reconstructed post-scan from the accept/retire history —
+    # carrying them would copy L·k·d floats per element.
+    def step(carry, xs):
+        m, lvl, count, fval, covsum, cov = carry
+        x, ispre = xs
+        col = _sim_to(feats, sq, x, d_max)  # (Δn,)
+
+        # grid anchor: running max singleton mean; re-anchor the window
+        m = jnp.maximum(m, jnp.mean(col))
+        j_lo = jnp.floor(jnp.log(m) / log1p_eps).astype(jnp.int32)
+        unset = lvl == LVL_UNSET
+        w = jnp.maximum(-((lvl - j_lo) // L), 0)
+        lvl = jnp.where(unset, j_lo + slot_arange, lvl + w * L)
+        retire = unset | (w > 0)
+        count = jnp.where(retire, 0, count)
+        cov = jnp.where(retire[:, None], cov_pre[None, :], cov)
+        covsum = jnp.where(retire, pre_sum, covsum)
+        fval = jnp.where(retire, state.fval_pre, fval)
+
+        # threshold admission, vectorized over the L sieves
+        v = jnp.exp(lvl.astype(jnp.float32) * log1p_eps)
+        g = jnp.sum(jnp.maximum(col[None, :] - cov, 0.0), axis=1)  # (L,)
+        g_mean = g / dn
+        f_cur = (fval + covsum) / (n_seen_f + dn)
+        thresh = (0.5 * v - f_cur) / jnp.maximum(k - count, 1).astype(jnp.float32)
+        accept = (count < k) & (g_mean >= thresh) & (g_mean > 0.0) & (~ispre)
+
+        count = count + accept.astype(jnp.int32)
+        cov_new = jnp.maximum(cov, col[None, :])
+        cov = jnp.where(accept[:, None], cov_new, cov)
+        covsum = jnp.where(accept, jnp.sum(cov_new, axis=1), covsum)
+        return (m, lvl, count, fval, covsum, cov), (accept, retire)
+
+    carry0 = (
+        state.m,
+        state.lvl,
+        state.count,
+        state.fval,
+        jnp.sum(cov0, axis=1),
+        cov0,
+    )
+    (m, lvl, count, fval, covsum, _), (acc_hist, ret_hist) = jax.lax.scan(
+        step, carry0, (feats, is_pre)
+    )
+
+    # Reconstruct (sel_idx, sel_feats) from the (Δn, L) histories: a sieve
+    # keeps only admissions after its last retirement; those fill slots in
+    # arrival order, starting at the pre-delta count for never-retired
+    # sieves and at 0 otherwise.  One O(Δn·L·d) scatter, not Δn of them.
+    t_col = jnp.arange(dn, dtype=jnp.int32)[:, None]
+    last_ret = jnp.max(jnp.where(ret_hist, t_col, -1), axis=0)  # (L,)
+    keep = acc_hist & (t_col >= last_ret[None, :])  # (Δn, L)
+    retired = last_ret >= 0
+    base = jnp.where(retired, 0, state.count)  # slot offset at (re)start
+    slot = base[None, :] + jnp.cumsum(keep.astype(jnp.int32), axis=0) - 1
+    slot_safe = jnp.where(keep, jnp.clip(slot, 0, k - 1), k)  # k = dump slot
+
+    sel_idx = jnp.where(retired[:, None], -1, state.sel_idx)
+    sel_feats = jnp.where(retired[:, None, None], 0.0, state.sel_feats)
+    l_grid = jnp.broadcast_to(jnp.arange(L)[None, :], (dn, L))
+    sel_idx = (
+        jnp.concatenate([sel_idx, jnp.full((L, 1), -1, jnp.int32)], axis=1)
+        .at[l_grid.ravel(), slot_safe.ravel()]
+        .set(jnp.broadcast_to(idx[:, None], (dn, L)).ravel())[:, :k]
+    )
+    sel_feats = (
+        jnp.concatenate([sel_feats, jnp.zeros((L, 1, dim), jnp.float32)], axis=1)
+        .at[l_grid.ravel(), slot_safe.ravel()]
+        .set(jnp.broadcast_to(feats[:, None, :], (dn, L, dim)).reshape(-1, dim))[
+            :, :k
+        ]
+    )
+    return state._replace(
+        n_seen=state.n_seen + dn,
+        d_max=d_max,
+        m=m,
+        lvl=lvl,
+        count=count,
+        fval=fval + covsum,
+        fval_pre=state.fval_pre + pre_sum,
+        sel_idx=sel_idx,
+        sel_feats=sel_feats,
+    )
+
+
+ingest_delta = jax.jit(_ingest_delta, static_argnums=(3,))
+
+
+def streaming_result(state: StreamingState, feats: jax.Array, budget: int) -> FLResult:
+    """Finalize: best sieve → full FLResult against the pool.
+
+    ``feats`` is the (n,) pool the stored indices refer to (the service
+    keeps it; the one-shot engine has it by construction).  Order: warm
+    prefix (replayed), then the best sieve's picks in admission order, then
+    worst-covered backfill (farthest-point) for any unfilled budget.  γ and
+    coverage use this call's own offset, so the frozen ingest-time ``d_max``
+    never leaks into reported units.
+    """
+    feats = jnp.asarray(feats, jnp.float32)
+    n, _ = feats.shape
+    budget = int(min(int(budget), n))
+    if budget < 1:
+        raise ValueError(f"budget must be ≥ 1, got {budget}")
+    k = state.capacity
+    r0 = state.pre_idx.shape[0]
+    if r0 > budget:
+        raise ValueError(f"warm prefix {r0} exceeds finalize budget {budget}")
+
+    sq = jnp.sum(feats * feats, axis=-1)
+    d_maxf = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
+
+    def sim_cols(e_arr: jax.Array) -> jax.Array:
+        """(n, m) similarity of every pool point to elements ``e_arr``."""
+        cf = feats[e_arr]
+        d2 = sq[:, None] + jnp.sum(cf * cf, axis=-1)[None, :] - 2.0 * (feats @ cf.T)
+        return d_maxf - jnp.sqrt(jnp.maximum(d2, 0.0))
+
+    init_idx, init_gains, cur_max0, chosen0 = _replay_prefix(
+        state.pre_idx if r0 > 0 else None,
+        budget,
+        n,
+        lambda e: sim_cols(e[None])[:, 0],
+    )
+
+    best = jnp.argmax(state.fval)
+    cand = jnp.clip(state.sel_idx[best], -1, n - 1)  # (k,)
+    ccount = state.count[best]
+
+    def step(carry, t):
+        cur_max, chosen = carry
+        resid = jnp.where(chosen, -jnp.inf, d_maxf - cur_max)
+        back_e = jnp.argmax(resid).astype(jnp.int32)
+        if k > 0:
+            se = cand[jnp.clip(t, 0, k - 1)]
+            se_safe = jnp.clip(se, 0, n - 1)
+            use = (t < ccount) & (se >= 0) & (~chosen[se_safe])
+            e = jnp.where(use, se_safe, back_e)
+        else:
+            e = back_e
+        col = sim_cols(e[None])[:, 0]
+        gain = jnp.sum(jnp.maximum(col - cur_max, 0.0))
+        return (jnp.maximum(cur_max, col), chosen.at[e].set(True)), (
+            e.astype(jnp.int32),
+            gain,
+        )
+
+    (cur_max, _), (new_idx, new_gains) = jax.lax.scan(
+        step, (cur_max0, chosen0), jnp.arange(budget - r0)
+    )
+    indices = jnp.concatenate([init_idx, new_idx])
+    gains = jnp.concatenate([init_gains, new_gains]).astype(jnp.float32)
+
+    sel_sim = sim_cols(indices)  # (n, budget)
+    assign = jnp.argmax(sel_sim, axis=1)
+    weights = jnp.zeros((budget,), jnp.float32).at[assign].add(1.0)
+    coverage = jnp.sum(d_maxf - jnp.max(sel_sim, axis=1))
+    return FLResult(indices, gains, weights, coverage)
+
+
+# ---------------------------------------------------------------------------
+# Registry plugin: one-shot select behind the common protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingConfig(EngineConfig):
+    """Sieve-streaming engine knobs.
+
+    Attributes:
+      eps: geometric grid density — thresholds are ``(1+eps)^j``.  Smaller
+        eps → more sieves → tighter ``(1/2 − O(eps))`` guarantee, linearly
+        more state and per-element work.
+      levels: sieve-slot count override (0 = auto: span ``[m, 2·budget·m]``,
+        capped at 64 — see :func:`num_sieves`).
+    """
+
+    name: ClassVar[str] = "streaming"
+    eps: float = 0.15
+    levels: int = 0
+
+
+@register_engine
+class StreamingEngine(SelectionEngine):
+    name = "streaming"
+    config_cls = StreamingConfig
+    capabilities = Capabilities(
+        exact=False,  # (1/2 − eps) sieve guarantee, not exact greedy
+        matrix_free=True,
+        jit_safe=True,
+        supports_cover=False,
+        supports_metrics=("l2", "cosine"),  # cosine via normalized l2
+        # state is L·k·d plus the pool row it sweeps: L≈48, k≈n/20 heuristic
+        memory=lambda n, d: 4 * (n * d + 48 * d * max(n // 20, 64)),
+    )
+
+    def select(
+        self, feats, budget, *, metric="l2", init_selected=None, rng=None
+    ) -> FLResult:
+        feats = normalize_for_metric(jnp.asarray(feats), metric)
+        n = feats.shape[0]
+        budget = int(min(int(budget), n))
+        if init_selected is not None:
+            init_idx = jnp.asarray(init_selected, jnp.int32).ravel()[:budget]
+            state = init_streaming_state(
+                budget,
+                feats.shape[1],
+                eps=self.config.eps,
+                levels=self.config.levels,
+                init_selected=init_idx,
+                init_feats=feats[init_idx],
+            )
+        else:
+            state = init_streaming_state(
+                budget, feats.shape[1],
+                eps=self.config.eps, levels=self.config.levels,
+            )
+        if state.capacity > 0:
+            # the whole pool as ONE delta: estimates are exact — this is
+            # textbook sieve-streaming over the pool in index order
+            state = ingest_delta(
+                state, feats, jnp.arange(n, dtype=jnp.int32), self.config.eps
+            )
+        res = streaming_result(state, feats, budget)
+        if metric == "cosine":  # report L(S) in cosine-distance units
+            res = res._replace(
+                coverage=cosine_residual_coverage(feats, res.indices)
+            )
+        return res
+
+
+# ---------------------------------------------------------------------------
+# Stateful host wrapper: the coreset service's selection core
+# ---------------------------------------------------------------------------
+
+_FLAT = "__flat__"
+
+_STATE_DTYPES = {
+    "n_seen": np.int32, "d_max": np.float32, "m": np.float32,
+    "lvl": np.int32, "count": np.int32, "fval": np.float32,
+    "fval_pre": np.float32, "sel_idx": np.int32, "sel_feats": np.float32,
+    "pre_idx": np.int32, "pre_feats": np.float32,
+}
+
+
+def _state_to_dict(state: StreamingState) -> dict:
+    """JSON-able snapshot: shapes + flat lists (float32↔float round-trips
+    exactly, so restores are bit-identical)."""
+    out = {}
+    for name in StreamingState._fields:
+        arr = np.asarray(getattr(state, name))
+        out[name] = {"shape": list(arr.shape), "data": arr.ravel().tolist()}
+    return out
+
+
+def _state_from_dict(d: dict) -> StreamingState:
+    kw = {}
+    for name in StreamingState._fields:
+        spec = d[name]
+        arr = np.asarray(spec["data"], _STATE_DTYPES[name]).reshape(spec["shape"])
+        kw[name] = jnp.asarray(arr)
+    return StreamingState(**kw)
+
+
+class StreamingSelector:
+    """Stateful sieve-streaming selection over a pool arriving in deltas.
+
+    The contract mirrors ``CraigSelector`` where it can: γ sums to the pool
+    size, per-class mode stratifies budgets ∝ observed class frequency
+    (paper §5, apportioned with the same largest-remainder rule), and the
+    warm-start prefix (flat mode) is preserved at the front of the result.
+    The difference is lifecycle: ``ingest`` is called once per arriving
+    megabatch (O(Δn·k) work, no re-sweep), and ``result`` finalizes against
+    the accumulated pool on demand.
+
+    Pool indexing: deltas are assigned positions in arrival order, so the
+    ``feats`` passed to :meth:`result` must be the ingested deltas
+    concatenated in ingest order (the coreset service maintains exactly
+    that buffer).
+
+    ``state_dict`` / ``load_state_dict`` round-trip the full mid-stream
+    state (JSON-able — rides ``CheckpointManager`` extras) bit-identically.
+    """
+
+    def __init__(
+        self,
+        budget: int,
+        dim: int,
+        *,
+        config: StreamingConfig | None = None,
+        metric: str = "l2",
+        per_class: bool = False,
+        init_selected=None,
+        init_feats=None,
+    ):
+        config = config or StreamingConfig()
+        caps = StreamingEngine.capabilities
+        if metric not in caps.supports_metrics:
+            raise ValueError(
+                f"engine 'streaming' supports metrics {caps.supports_metrics}, "
+                f"got {metric!r}"
+            )
+        if per_class and init_selected is not None:
+            raise ValueError(
+                "warm-start prefix is flat-mode only (per-class budgets are "
+                "apportioned at result time, after arrival counts are known)"
+            )
+        self.budget = int(budget)
+        self.dim = int(dim)
+        self.config = config
+        self.metric = metric
+        self.per_class = bool(per_class)
+        self._n_seen = 0
+        self._states: dict = {}
+        self._rows: dict = {}  # label -> np.int64 global positions, arrival order
+        if not per_class:
+            init_feats = (
+                None
+                if init_feats is None
+                else normalize_for_metric(
+                    jnp.asarray(init_feats, jnp.float32), metric
+                )
+            )
+            self._states[_FLAT] = init_streaming_state(
+                self.budget, self.dim,
+                eps=config.eps, levels=config.levels,
+                init_selected=init_selected, init_feats=init_feats,
+            )
+
+    @property
+    def n_seen(self) -> int:
+        """Total points ingested so far."""
+        return self._n_seen
+
+    def ingest(self, feats, labels=None) -> int:
+        """Ingest one megabatch delta; returns the running pool size.
+
+        O(Δn·(Δn + L)·d) — independent of the pool ingested so far.
+        """
+        feats = normalize_for_metric(jnp.asarray(feats, jnp.float32), self.metric)
+        dn = feats.shape[0]
+        if feats.ndim != 2 or feats.shape[1] != self.dim:
+            raise ValueError(f"expected (Δn, {self.dim}) features, got {feats.shape}")
+        if self.per_class:
+            if labels is None:
+                raise ValueError("per_class=True ingest needs labels")
+            labels = np.asarray(labels).ravel()
+            if labels.shape[0] != dn:
+                raise ValueError(f"labels length {labels.shape[0]} != Δn {dn}")
+            for c in np.unique(labels):
+                key = int(c)
+                mask = labels == c
+                rows = self._rows.setdefault(key, [])
+                if key not in self._states:
+                    self._states[key] = init_streaming_state(
+                        self.budget, self.dim,
+                        eps=self.config.eps, levels=self.config.levels,
+                    )
+                local = len(rows) + np.arange(int(mask.sum()), dtype=np.int32)
+                self._states[key] = ingest_delta(
+                    self._states[key], feats[np.nonzero(mask)[0]],
+                    jnp.asarray(local), self.config.eps,
+                )
+                rows.extend((self._n_seen + np.nonzero(mask)[0]).tolist())
+        else:
+            idx = self._n_seen + jnp.arange(dn, dtype=jnp.int32)
+            self._states[_FLAT] = ingest_delta(
+                self._states[_FLAT], feats, idx, self.config.eps
+            )
+        self._n_seen += int(dn)
+        return self._n_seen
+
+    def result(self, feats) -> FLResult:
+        """Finalize the current selection against the accumulated pool.
+
+        ``feats`` must be the ingested deltas concatenated in arrival
+        order (rows align with the positions ``ingest`` assigned).
+        """
+        feats = normalize_for_metric(jnp.asarray(feats, jnp.float32), self.metric)
+        n = feats.shape[0]
+        if n != self._n_seen:
+            raise ValueError(
+                f"pool has {n} rows but {self._n_seen} were ingested — "
+                "result() needs the ingested deltas concatenated in order"
+            )
+        if n == 0:
+            raise ValueError("nothing ingested yet")
+        if not self.per_class:
+            res = streaming_result(
+                self._states[_FLAT], feats, min(self.budget, n)
+            )
+            if self.metric == "cosine":
+                res = res._replace(
+                    coverage=cosine_residual_coverage(feats, res.indices)
+                )
+            return res
+
+        # paper §5: stratified budgets ∝ observed class arrival counts
+        from repro.core.craig import _apportion_budgets  # lazy: avoid cycle
+
+        classes = sorted(self._states)
+        counts = np.array([len(self._rows[c]) for c in classes], np.int64)
+        budgets = _apportion_budgets(counts, min(self.budget, n))
+        all_idx, all_gains, all_w = [], [], []
+        coverage = 0.0
+        for c, b in zip(classes, budgets):
+            if b == 0:
+                continue
+            rows = np.asarray(self._rows[c], np.int64)
+            sub = feats[rows]
+            r = streaming_result(self._states[c], sub, int(b))
+            all_idx.append(rows[np.asarray(r.indices, np.int64)])
+            all_gains.append(np.asarray(r.gains, np.float32))
+            all_w.append(np.asarray(r.weights, np.float32))
+            coverage += float(
+                cosine_residual_coverage(sub, r.indices)
+                if self.metric == "cosine"
+                else r.coverage
+            )
+        return FLResult(
+            jnp.asarray(np.concatenate(all_idx), jnp.int32),
+            jnp.asarray(np.concatenate(all_gains)),
+            jnp.asarray(np.concatenate(all_w)),
+            jnp.asarray(coverage, jnp.float32),
+        )
+
+    # -- serialization -------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able full snapshot (config + per-class sieve states)."""
+        return {
+            "budget": self.budget,
+            "dim": self.dim,
+            "metric": self.metric,
+            "per_class": self.per_class,
+            "n_seen": self._n_seen,
+            "config": self.config.to_dict(),
+            "states": {
+                str(key): _state_to_dict(st) for key, st in self._states.items()
+            },
+            "rows": {str(key): list(rows) for key, rows in self._rows.items()},
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        """Inverse of :meth:`state_dict` — resumes bit-identically."""
+        cfg = EngineConfig.from_dict(d["config"])
+        if not isinstance(cfg, StreamingConfig):
+            raise ValueError(f"not a streaming state_dict: {d['config']!r}")
+        self.budget = int(d["budget"])
+        self.dim = int(d["dim"])
+        self.metric = d["metric"]
+        self.per_class = bool(d["per_class"])
+        self.config = cfg
+        self._n_seen = int(d["n_seen"])
+        self._states = {
+            (key if key == _FLAT else int(key)): _state_from_dict(sd)
+            for key, sd in d["states"].items()
+        }
+        self._rows = {int(key): list(rows) for key, rows in d["rows"].items()}

@@ -21,6 +21,9 @@ The functional API is unchanged and re-exported here so existing imports
 * ``greedy_fl_device``      — engines.device (§3.6): device-resident fused
                               greedy (one ``fl_gains_argmax`` launch per
                               sweep, Minoux-bound block greedy at q > 1).
+* ``init_streaming_state`` / ``ingest_delta`` / ``streaming_result``
+                            — engines.streaming (§10): one-pass
+                              sieve-streaming over arriving deltas.
 
 New code should prefer the typed surface — ``repro.core.engines``'s
 ``EngineConfig`` subclasses, ``get_engine``/``list_engines``, and
@@ -49,6 +52,12 @@ from repro.core.engines.sparse import (
     topk_graph,
 )
 from repro.core.engines.stochastic import stochastic_greedy_fl
+from repro.core.engines.streaming import (
+    StreamingState,
+    init_streaming_state,
+    ingest_delta,
+    streaming_result,
+)
 
 __all__ = [
     "FLResult",
@@ -64,4 +73,8 @@ __all__ = [
     "sparse_greedy_fl",
     "sparse_greedy_fl_features",
     "assign_and_weights",
+    "StreamingState",
+    "init_streaming_state",
+    "ingest_delta",
+    "streaming_result",
 ]

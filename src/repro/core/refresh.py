@@ -91,9 +91,15 @@ class AsyncRefresher:
     callback fires on the worker thread the moment a job succeeds (the
     trainer uses it to stage the selection into the sampler so checkpoints
     see it without polling).  Worker exceptions are captured and re-raised
-    on the caller's thread at the next :meth:`wait`/:meth:`collect` — a
-    failed selection must fail training, not silently train on stale data
-    forever.
+    on the caller's thread at the next :meth:`wait`/:meth:`collect`/
+    :meth:`submit` — a failed selection must fail training, not silently
+    train on stale data forever.
+
+    With an ``ingest_fn``, the refresher additionally serves the streaming
+    path (DESIGN.md §10): :meth:`ingest` queues pool deltas and drains the
+    queue as one coalesced ``ingest_fn(deltas)`` job whenever the worker
+    is idle — same single job slot, same publish/install lifecycle, one
+    version per drain.  The coreset service builds on this.
     """
 
     def __init__(
@@ -101,16 +107,19 @@ class AsyncRefresher:
         work_fn: Callable[[Any], Any],
         mode: Literal["sync", "async"] = "async",
         on_complete: Callable[[RefreshResult], None] | None = None,
+        ingest_fn: Callable[[list], Any] | None = None,
     ):
         if mode not in ("sync", "async"):
             raise ValueError(f"unknown refresh mode {mode!r}")
         self._work_fn = work_fn
         self._mode = mode
         self._on_complete = on_complete
+        self._ingest_fn = ingest_fn
         self._version = 0
         self._thread: threading.Thread | None = None
         self._result: RefreshResult | None = None
         self._lock = threading.Lock()
+        self._pending: list = []
 
     # -- state ---------------------------------------------------------------
 
@@ -133,8 +142,13 @@ class AsyncRefresher:
     def submit(self, params: Any, *, snapshot: bool = True) -> int:
         """Snapshot ``params`` and start (or run, in sync mode) the refresh.
 
-        Returns the new version.  Raises if a refresh is already in flight —
-        callers hold at most one back buffer.
+        Returns the new version.  While a job is in flight ``submit`` is a
+        *reject*, not a queue: it raises a ``RuntimeError`` naming the
+        in-flight version — callers hold at most one back buffer, and a
+        caller that wants coalescing wants the :meth:`ingest` path instead.
+        A worker failure from a previous job is re-raised here first (as at
+        :meth:`wait`/:meth:`collect`) — submitting new work must never
+        silently overwrite an uncollected failure.
 
         Contract: ``jax.Array`` leaves are snapshotted by reference (they
         are immutable), so the caller's parameter *update* must not donate
@@ -144,9 +158,11 @@ class AsyncRefresher:
         for exactly this reason; callers that must donate should pass a
         ``jax.device_get`` copy instead.
         """
+        self._raise_if_failed()
         if self.busy:
             raise RuntimeError(
-                "refresh already in flight; collect it before submitting"
+                f"refresh v{self._version} already in flight; collect it "
+                "before submitting (use ingest() for coalescing semantics)"
             )
         self._version += 1
         version = self._version
@@ -190,6 +206,75 @@ class AsyncRefresher:
             self._thread.start()
         return version
 
+    # -- streaming ingest (coalescing) ---------------------------------------
+
+    @property
+    def pending_deltas(self) -> int:
+        """Deltas queued for the next coalesced ingest drain."""
+        with self._lock:
+            return len(self._pending)
+
+    def ingest(self, *deltas: Any) -> int | None:
+        """Queue pool deltas and drain them through ``ingest_fn``.
+
+        The streaming counterpart of :meth:`submit` (DESIGN.md §10): where
+        submit *rejects* while a job is in flight, ``ingest`` *coalesces* —
+        deltas enqueue unconditionally, and whenever no job is in flight
+        the whole queue drains as ONE job, ``ingest_fn(deltas)``,
+        publishing a single ``RefreshResult`` through the same slot /
+        ``on_complete`` path (one version per drain, not per delta).
+
+        Returns the drained version, or ``None`` if the deltas were queued
+        behind an in-flight job — they drain at the next
+        ingest/:meth:`wait`/:meth:`collect` touch point.  Worker failures
+        surface exactly like submit's: re-raised on the caller's thread at
+        the next drain attempt, ``wait``, or ``collect``.
+        """
+        if self._ingest_fn is None:
+            raise RuntimeError(
+                "this refresher has no ingest_fn; pass one at construction "
+                "to use the streaming ingest path"
+            )
+        if not deltas:
+            raise ValueError("ingest() needs at least one delta")
+        with self._lock:
+            self._pending.extend(deltas)
+        return self._drain()
+
+    def _drain(self) -> int | None:
+        """Start one coalesced ingest job if idle and deltas are queued."""
+        if self.busy:
+            return None
+        self._raise_if_failed()
+        with self._lock:
+            if not self._pending:
+                return None
+            batch, self._pending = self._pending, []
+        self._version += 1
+        version = self._version
+
+        def job() -> None:
+            t0 = time.time()
+            try:
+                value = self._ingest_fn(batch)
+                res = RefreshResult(version, value, time.time() - t0)
+                if self._on_complete is not None:
+                    self._on_complete(res)
+            except BaseException as e:  # noqa: BLE001 — re-raised at wait()
+                res = RefreshResult(version, None, time.time() - t0, error=e)
+            with self._lock:
+                self._result = res
+
+        if self._mode == "sync":
+            job()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(
+                target=job, name=f"craig-ingest-v{version}", daemon=False
+            )
+            self._thread.start()
+        return version
+
     def reset_version(self, version: int) -> None:
         """Fast-forward the version counter (monotonicity across restarts:
         a restored trainer seeds this from the checkpointed sampler state so
@@ -200,14 +285,21 @@ class AsyncRefresher:
         self._version = max(self._version, int(version))
 
     def wait(self, timeout: float | None = None) -> None:
-        """Block until no refresh is in flight; re-raise a worker failure."""
-        t = self._thread
-        if t is not None:
-            t.join(timeout)
-            if t.is_alive():
-                raise TimeoutError(f"refresh still running after {timeout}s")
-            self._thread = None
-        self._raise_if_failed()
+        """Block until no job is in flight and no queued deltas remain;
+        re-raise a worker failure."""
+        while True:
+            t = self._thread
+            if t is not None:
+                t.join(timeout)
+                if t.is_alive():
+                    raise TimeoutError(
+                        f"refresh still running after {timeout}s"
+                    )
+                self._thread = None
+            self._raise_if_failed()
+            if self._ingest_fn is not None and self._drain() is not None:
+                continue
+            return
 
     def collect(self, block: bool = False) -> RefreshResult | None:
         """Pop the published result, if any.  ``block=True`` waits first."""

@@ -1,4 +1,12 @@
-"""Serving substrate: prefill/decode steps + generation loop."""
+"""Serving substrate: prefill/decode steps + generation loop, plus the
+coreset service (streaming selection behind a versioned delta API)."""
+from repro.serve.coreset_service import CoresetService, CoresetUpdate
 from repro.serve.serve_step import greedy_generate, make_prefill_step, make_serve_step
 
-__all__ = ["greedy_generate", "make_prefill_step", "make_serve_step"]
+__all__ = [
+    "CoresetService",
+    "CoresetUpdate",
+    "greedy_generate",
+    "make_prefill_step",
+    "make_serve_step",
+]

@@ -1,0 +1,205 @@
+"""Coreset-as-a-service: submit pool deltas, get back (indices, γ, version).
+
+The minimal service surface over the streaming selection stack
+(DESIGN.md §10): a ``CoresetService`` owns
+
+  * a :class:`~repro.core.engines.streaming.StreamingSelector` — the
+    sieve-streaming state machine (O(Δn·k) per delta, no re-sweep);
+  * the accumulated pool buffer (finalization needs the rows the selected
+    indices point at — the only per-pool-size memory in the stack);
+  * an :class:`~repro.core.refresh.AsyncRefresher` in ingest mode — deltas
+    submitted while a job is in flight coalesce into the next drain, and
+    every drain publishes one versioned selection through the same
+    single-slot / ``on_complete`` lifecycle the trainer's refreshes use;
+  * a staged→installed double buffer mirroring ``CoresetSampler``'s
+    semantics: drains *stage* the newest selection, :meth:`coreset`
+    *installs* it at the caller's boundary — readers never observe a
+    half-written update.
+
+``launch/serve.py --coreset`` wraps this in a JSON-lines stdin/stdout
+protocol; tests drive it in-process and as a subprocess round-trip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Literal
+
+import numpy as np
+
+from repro.core.engines.streaming import StreamingConfig, StreamingSelector
+from repro.core.refresh import AsyncRefresher, RefreshResult
+
+__all__ = ["CoresetService", "CoresetUpdate"]
+
+
+def _no_submit(_params):  # pragma: no cover - guard, never runs in tests
+    raise RuntimeError(
+        "CoresetService drives its refresher through the ingest path; "
+        "submit() has no meaning here"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CoresetUpdate:
+    """One installed selection: what a service client trains on.
+
+    ``version`` is the refresher's drain counter (one per coalesced ingest
+    job, monotone); ``n_seen`` the pool size the selection covers;
+    ``weights`` the γ cluster sizes (Σγ == n_seen).
+    """
+
+    version: int
+    indices: np.ndarray
+    weights: np.ndarray
+    coverage: float
+    n_seen: int
+
+
+class CoresetService:
+    """Submit pool deltas; read back the current (indices, γ, version).
+
+    Args:
+      budget: coreset size k — fixed for the service lifetime (the sieve
+        capacity is baked into the state shapes).
+      dim: proxy-feature dimension of arriving deltas.
+      config: streaming engine knobs (sieve grid density).
+      metric: 'l2' | 'cosine' (cosine via unit-normalized l2).
+      per_class: stratified per-class budgets ∝ observed class arrival
+        (paper §5); deltas must then carry labels.
+      mode: 'sync' — drains run inline in :meth:`submit_delta` (the
+        deterministic baseline); 'async' — drains run on the refresher's
+        worker thread and coalesce while it is busy.
+    """
+
+    def __init__(
+        self,
+        budget: int,
+        dim: int,
+        *,
+        config: StreamingConfig | None = None,
+        metric: str = "l2",
+        per_class: bool = False,
+        mode: Literal["sync", "async"] = "sync",
+    ):
+        self.budget = int(budget)
+        self.dim = int(dim)
+        self.selector = StreamingSelector(
+            budget, dim, config=config, metric=metric, per_class=per_class
+        )
+        self._pool: list[np.ndarray] = []  # deltas in ingest order (worker-owned)
+        self._lock = threading.Lock()
+        self._staged: CoresetUpdate | None = None
+        self._installed: CoresetUpdate | None = None
+        self.refresher = AsyncRefresher(
+            _no_submit, mode=mode,
+            ingest_fn=self._ingest_job, on_complete=self._stage,
+        )
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def submit_delta(self, feats, labels=None) -> int | None:
+        """Queue one (Δn, dim) delta; returns the drained version, or None
+        if it coalesced behind an in-flight job (async mode)."""
+        feats = np.asarray(feats, np.float32)
+        if feats.ndim != 2 or feats.shape[1] != self.dim:
+            raise ValueError(f"expected (Δn, {self.dim}) features, got {feats.shape}")
+        labels = None if labels is None else np.asarray(labels).ravel()
+        return self.refresher.ingest((feats, labels))
+
+    def coreset(self, block: bool = True) -> CoresetUpdate | None:
+        """Install and return the newest published selection.
+
+        ``block=True`` drains any queued/in-flight ingests first (worker
+        failures re-raise here).  Returns None if nothing has been
+        published yet.
+        """
+        if block:
+            self.refresher.wait()
+        with self._lock:
+            if self._staged is not None:
+                self._installed, self._staged = self._staged, None
+            return self._installed
+
+    @property
+    def version(self) -> int:
+        """Version of the most recently *installed* selection (0 = none)."""
+        with self._lock:
+            return 0 if self._installed is None else self._installed.version
+
+    @property
+    def n_seen(self) -> int:
+        """Pool size ingested so far (includes staged-but-not-installed)."""
+        return self.selector.n_seen
+
+    # -- worker side ---------------------------------------------------------
+
+    def _ingest_job(self, deltas: list):
+        """One coalesced drain: ingest every queued delta, finalize once."""
+        for feats, labels in deltas:
+            self.selector.ingest(feats, labels=labels)
+            self._pool.append(feats)
+        res = self.selector.result(np.concatenate(self._pool, axis=0))
+        return (
+            np.asarray(res.indices, np.int64),
+            np.asarray(res.weights, np.float32),
+            float(res.coverage),
+        )
+
+    def _stage(self, res: RefreshResult) -> None:
+        indices, weights, coverage = res.value
+        with self._lock:
+            self._staged = CoresetUpdate(
+                version=res.version,
+                indices=indices,
+                weights=weights,
+                coverage=coverage,
+                n_seen=self.selector.n_seen,
+            )
+
+    # -- serialization -------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot: selector state + pool buffer + install state.
+
+        Callers drain (``coreset(block=True)``) before snapshotting, same
+        as the trainer's checkpoint discipline — an in-flight drain always
+        materializes before the save.
+        """
+        self.refresher.wait()
+        with self._lock:
+            installed = self._installed
+        return {
+            "selector": self.selector.state_dict(),
+            "pool": [d.tolist() for d in self._pool],
+            "installed": None
+            if installed is None
+            else {
+                "version": installed.version,
+                "indices": installed.indices.tolist(),
+                "weights": installed.weights.tolist(),
+                "coverage": installed.coverage,
+                "n_seen": installed.n_seen,
+            },
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self.selector.load_state_dict(d["selector"])
+        self._pool = [
+            np.asarray(p, np.float32).reshape(-1, self.dim) for p in d["pool"]
+        ]
+        inst = d["installed"]
+        with self._lock:
+            self._staged = None
+            self._installed = (
+                None
+                if inst is None
+                else CoresetUpdate(
+                    version=int(inst["version"]),
+                    indices=np.asarray(inst["indices"], np.int64),
+                    weights=np.asarray(inst["weights"], np.float32),
+                    coverage=float(inst["coverage"]),
+                    n_seen=int(inst["n_seen"]),
+                )
+            )
+        self.refresher.reset_version(self.version)

@@ -85,3 +85,39 @@ def test_missing_checkpoint_raises(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     with pytest.raises(FileNotFoundError):
         mgr.restore({"x": jnp.zeros(1)})
+
+
+def test_streaming_selector_rides_extras_kill_and_resume(tmp_path):
+    """Mid-stream sieve state checkpoints through the extras channel and a
+    'killed' service resumes bit-identically against the uninterrupted run
+    (engines.streaming state is JSON-able by construction)."""
+    from repro.core.engines.streaming import StreamingSelector
+
+    rng = np.random.RandomState(0)
+    deltas = [rng.randn(30, 5).astype(np.float32) for _ in range(4)]
+    pool = np.concatenate(deltas)
+
+    straight = StreamingSelector(12, 5)
+    for d in deltas:
+        straight.ingest(d)
+
+    sel = StreamingSelector(12, 5)
+    sel.ingest(deltas[0])
+    sel.ingest(deltas[1])
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(2, _tree(), extras={"streaming": sel.state_dict()})
+    del sel  # the "kill"
+
+    _, extras = CheckpointManager(str(tmp_path)).restore(
+        jax.tree.map(jnp.zeros_like, _tree())
+    )
+    resumed = StreamingSelector(12, 5)
+    resumed.load_state_dict(extras["streaming"])
+    assert resumed.n_seen == 60
+    resumed.ingest(deltas[2])
+    resumed.ingest(deltas[3])
+
+    ra, rb = straight.result(pool), resumed.result(pool)
+    np.testing.assert_array_equal(np.asarray(ra.indices), np.asarray(rb.indices))
+    np.testing.assert_array_equal(np.asarray(ra.weights), np.asarray(rb.weights))
+    assert float(np.asarray(rb.weights).sum()) == pytest.approx(120.0)

@@ -12,7 +12,9 @@ from repro.core import engines as E
 from repro.core.craig import CraigConfig, CraigSelector
 from repro.core.engines.legacy import resolve_engine_config
 
-ALL_ENGINES = ("matrix", "lazy", "stochastic", "features", "sparse", "device")
+ALL_ENGINES = (
+    "matrix", "lazy", "stochastic", "features", "sparse", "device", "streaming",
+)
 
 
 def _feats(n=96, d=6, seed=0):
@@ -47,6 +49,7 @@ def test_every_engine_selects_via_typed_config():
         "features": E.FeaturesConfig(),
         "sparse": E.SparseConfig(k=120),  # complete graph == exact greedy
         "device": E.DeviceConfig(),
+        "streaming": E.StreamingConfig(),  # (1/2 − eps) sieve, not exact
     }
     for name, ec in configs.items():
         cs = CraigSelector(
@@ -242,6 +245,7 @@ def test_legacy_and_typed_selections_identical():
         E.FeaturesConfig(gains_impl="pallas", block_n=256),
         E.SparseConfig(k=17, impl="pallas", block_m=512),
         E.DeviceConfig(q=16, stale_tol=1.0, tile_dtype="bfloat16"),
+        E.StreamingConfig(eps=0.1, levels=24),
     ],
 )
 def test_engine_config_dict_round_trip(ec):

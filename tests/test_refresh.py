@@ -134,6 +134,98 @@ def test_refresher_snapshot_isolates_params():
 
 
 # ---------------------------------------------------------------------------
+# Streaming ingest path (coalescing) + submit failure precedence
+# ---------------------------------------------------------------------------
+
+
+def test_refresher_ingest_coalesces_behind_busy_job():
+    """Deltas queued while a job is in flight drain as ONE coalesced job —
+    one version per drain, not per delta."""
+    release = threading.Event()
+    batches = []
+
+    def ingest(deltas):
+        batches.append(list(deltas))
+        release.wait(5.0)
+        return len(deltas)
+
+    r = AsyncRefresher(lambda p: None, mode="async", ingest_fn=ingest)
+    assert r.ingest("a") == 1  # idle → drains immediately
+    assert r.ingest("b") is None  # busy → queued
+    assert r.ingest("c") is None
+    assert r.pending_deltas == 2
+    release.set()
+    r.wait()  # joins v1, then drains the queue as v2
+    assert r.pending_deltas == 0
+    assert r.version == 2
+    assert batches == [["a"], ["b", "c"]]
+    res = r.collect()
+    assert res.version == 2 and res.value == 2
+
+
+def test_refresher_ingest_sync_one_version_per_call():
+    seen = []
+    r = AsyncRefresher(lambda p: None, mode="sync",
+                       ingest_fn=lambda ds: seen.append(list(ds)))
+    assert r.ingest("a") == 1
+    assert r.ingest("b", "c") == 2  # multi-delta call still one drain
+    assert seen == [["a"], ["b", "c"]]
+
+
+def test_refresher_ingest_requires_ingest_fn_and_deltas():
+    r = AsyncRefresher(lambda p: None, mode="sync")
+    with pytest.raises(RuntimeError, match="ingest_fn"):
+        r.ingest("a")
+    r2 = AsyncRefresher(lambda p: None, mode="sync", ingest_fn=lambda ds: None)
+    with pytest.raises(ValueError, match="at least one"):
+        r2.ingest()
+
+
+def test_refresher_busy_error_names_version_and_hints_ingest():
+    """Regression: submit-while-busy must name the in-flight version and
+    point at the coalescing alternative, not just say 'in flight'."""
+    release = threading.Event()
+    r = AsyncRefresher(lambda p: release.wait(5.0), mode="async")
+    r.submit({}, snapshot=False)
+    with pytest.raises(RuntimeError, match=r"v1.*in flight.*ingest"):
+        r.submit({}, snapshot=False)
+    release.set()
+    r.wait()
+
+
+def test_refresher_submit_raises_pending_failure_first():
+    """Regression: submitting on top of an uncollected worker failure must
+    re-raise the failure, never silently start new work over it."""
+
+    def boom(params):
+        raise ValueError("proxy extraction exploded")
+
+    r = AsyncRefresher(boom, mode="async")
+    r.submit({}, snapshot=False)
+    deadline = time.time() + 5.0
+    while r.busy and time.time() < deadline:
+        time.sleep(0.01)
+    with pytest.raises(RuntimeError, match="refresh v1 failed"):
+        r.submit({}, snapshot=False)
+    r.submit({}, snapshot=False)  # failure consumed → reusable
+    with pytest.raises(RuntimeError, match="failed"):
+        r.wait()
+
+
+def test_refresher_ingest_failure_surfaces_at_collect_block():
+    def bad_ingest(deltas):
+        raise ValueError("sieve exploded")
+
+    r = AsyncRefresher(lambda p: None, mode="async", ingest_fn=bad_ingest)
+    r.ingest("a")
+    with pytest.raises(RuntimeError, match="refresh v1 failed"):
+        r.collect(block=True)
+    assert r.ingest("b") == 2  # failure consumed → path reusable
+    with pytest.raises(RuntimeError, match="v2 failed"):
+        r.wait()
+
+
+# ---------------------------------------------------------------------------
 # Sampler versioned double buffer
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,159 @@
+"""Selection-quality property harness over EVERY registered engine.
+
+Drives each engine through the registry surface (``list_engines``) so a
+new engine plugin is automatically held to the selection contract without
+edits here:
+
+* **objective gate** vs host lazy greedy on the same pool:
+  ``F(S_engine) ≥ factor · F(S_lazy)`` with ``factor = 1/2 − ε`` for the
+  sieve-streaming engine (its one-pass guarantee, Badanidiyuru et al.) and
+  ``(1 − 1/e) − ε`` for every other engine (the Nemhauser tier — exact and
+  near-exact engines clear it with huge margin at these sizes);
+* **γ is a partition histogram**: Σγ == n, γ ≥ 0 (paper Alg. 1 line 8);
+* **indices are unique and in-pool**;
+* **a warm-start prefix survives verbatim** at the front of the selection.
+
+The grid of seeds × shapes runs deterministically in tier 1; when
+``hypothesis`` is installed the same contract is additionally fuzzed over
+random pools.  Larger shapes ride the tier-2 lane.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engines as E
+from repro.core import facility_location as fl
+from repro.core.craig import pairwise_distances
+
+try:  # fuzz lane is optional — the deterministic grid always runs
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - env without requirements-dev
+    HAVE_HYPOTHESIS = False
+
+EPS_SLACK = 0.10  # tolerance eaten out of each theoretical factor
+
+
+def _gate(name: str) -> float:
+    """Quality floor for ``name``, derived from its advertised guarantee."""
+    if name == "streaming":
+        return 0.5 - EPS_SLACK  # sieve-streaming: (1/2 − O(ε))·OPT
+    return (1.0 - 1.0 / np.e) - 0.05  # Nemhauser tier
+
+
+def _config_for(name: str, n: int) -> E.EngineConfig:
+    cls = E.get_engine(name).config_cls
+    if name == "sparse":
+        return cls(k=n)  # complete graph → exact greedy at these sizes
+    if name == "stochastic":
+        return cls(delta=0.01)  # δ→0 limit: effectively the full ground set
+    return cls()
+
+
+def _make_feats(n: int, d: int, kind: str, seed: int) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    if kind == "clustered":
+        c = rng.randn(max(4, n // 12), d).astype(np.float32) * 4.0
+        feats = c[rng.randint(0, len(c), n)] + 0.3 * rng.randn(n, d)
+    else:
+        feats = rng.randn(n, d)
+    return feats.astype(np.float32)
+
+
+def _sim(feats: np.ndarray) -> np.ndarray:
+    d = np.asarray(pairwise_distances(jnp.asarray(feats)))
+    return d.max() + 1e-6 - d
+
+
+def _objective(sim: np.ndarray, idx) -> float:
+    mask = np.zeros(sim.shape[0], bool)
+    mask[np.asarray(idx)] = True
+    return float(fl.facility_location_value(jnp.asarray(sim), jnp.asarray(mask)))
+
+
+def _check_contract(name: str, feats: np.ndarray, budget: int) -> None:
+    """The full property set for one engine on one pool."""
+    n = feats.shape[0]
+    eng = E.make_engine(_config_for(name, n))
+    res = eng.select(jnp.asarray(feats), budget, rng=0)
+    idx = np.asarray(res.indices)
+    assert idx.shape == (budget,), name
+    assert len(np.unique(idx)) == budget, name  # unique …
+    assert idx.min() >= 0 and idx.max() < n, name  # … and in-pool
+    w = np.asarray(res.weights)
+    assert w.sum() == pytest.approx(float(n)), name  # Σγ == n
+    assert (w >= 0).all(), name
+    sim = _sim(feats)
+    f_eng = _objective(sim, idx)
+    f_ref = _objective(sim, fl.lazy_greedy_fl(sim, budget).indices)
+    assert f_eng >= _gate(name) * f_ref - 1e-4, (name, f_eng, f_ref)
+
+
+# -- deterministic grid (tier 1) ----------------------------------------------
+
+SHAPES = [
+    (48, 6, 8, "random", 0),
+    (64, 4, 10, "clustered", 1),
+    (40, 8, 6, "random", 2),
+]
+
+
+@pytest.mark.parametrize("n,d,budget,kind,seed", SHAPES)
+@pytest.mark.parametrize("name", E.list_engines())
+def test_objective_gate_and_partition(name, n, d, budget, kind, seed):
+    _check_contract(name, _make_feats(n, d, kind, seed), budget)
+
+
+@pytest.mark.parametrize("name", E.list_engines())
+def test_warm_start_prefix_preserved(name):
+    """init_selected is installed verbatim at the front before greedy (or
+    the sieve finalize) resumes — the refresh warm-start contract."""
+    n, prefix, budget = 56, [7, 23], 8
+    feats = _make_feats(n, 5, "clustered", 3)
+    eng = E.make_engine(_config_for(name, n))
+    res = eng.select(jnp.asarray(feats), budget, init_selected=prefix, rng=0)
+    idx = np.asarray(res.indices)
+    np.testing.assert_array_equal(idx[:2], prefix, err_msg=name)
+    assert len(np.unique(idx)) == budget, name
+    assert np.asarray(res.weights).sum() == pytest.approx(float(n)), name
+
+
+# -- slow shapes (tier 2) -----------------------------------------------------
+
+SLOW_SHAPES = [
+    (400, 16, 40, "clustered", 4),
+    (512, 8, 32, "random", 5),
+]
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("n,d,budget,kind,seed", SLOW_SHAPES)
+@pytest.mark.parametrize("name", E.list_engines())
+def test_objective_gate_slow_shapes(name, n, d, budget, kind, seed):
+    _check_contract(name, _make_feats(n, d, kind, seed), budget)
+
+
+# -- hypothesis fuzz lane (optional) ------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(
+        n=st.integers(16, 48),
+        d=st.integers(2, 8),
+        seed=st.integers(0, 50),
+        kind=st.sampled_from(["random", "clustered"]),
+        data=st.data(),
+    )
+    def test_fuzz_contract_all_engines(n, d, seed, kind, data):
+        budget = data.draw(st.integers(2, max(2, n // 4)))
+        feats = _make_feats(n, d, kind, seed)
+        for name in E.list_engines():
+            _check_contract(name, feats, budget)
+
+else:  # keep the lane visible in reports instead of silently absent
+
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+    def test_fuzz_contract_all_engines():
+        pass

@@ -1,0 +1,269 @@
+"""Sieve-streaming engine (engines.streaming) + the coreset service.
+
+Engine-level: single-megabatch selection recovers cluster structure at
+parity with the features engine, multi-delta ingestion is order-robust,
+per-class budgets stratify by *observed* arrival, and the serializable
+``StreamingState``/``StreamingSelector`` round-trip bit-identically
+mid-stream.  Service-level: versioned staged→installed publishes, async
+coalescing, worker-failure surfacing, and (tier 2) a subprocess JSON-lines
+round-trip through ``launch/serve.py --coreset``.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engines as E
+from repro.core import facility_location as fl
+from repro.core.craig import _apportion_budgets, pairwise_distances
+from repro.core.engines.streaming import (
+    StreamingSelector,
+    init_streaming_state,
+    num_sieves,
+)
+from repro.serve import CoresetService
+
+
+def _clusters(n, d, n_clusters, seed, spread=0.25):
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(n_clusters, d).astype(np.float32) * 6.0
+    labels = np.arange(n) % n_clusters
+    feats = centers[labels] + spread * rng.randn(n, d).astype(np.float32)
+    return feats.astype(np.float32), labels
+
+
+def _objective(feats, idx):
+    dist = np.asarray(pairwise_distances(jnp.asarray(feats)))
+    sim = dist.max() + 1e-6 - dist
+    mask = np.zeros(len(feats), bool)
+    mask[np.asarray(idx)] = True
+    return float(fl.facility_location_value(jnp.asarray(sim), jnp.asarray(mask)))
+
+
+# -- engine: selection quality ------------------------------------------------
+
+
+def test_one_shot_cluster_parity_with_features_engine():
+    """One megabatch at a fine sieve grid: one medoid per well-separated
+    cluster, objective at parity with the exact features engine."""
+    feats, labels = _clusters(96, 5, 8, seed=0)
+    eng = E.make_engine(E.StreamingConfig(eps=0.05, levels=96))
+    res = eng.select(jnp.asarray(feats), 8, rng=0)
+    idx = np.asarray(res.indices)
+    assert sorted(labels[idx]) == list(range(8))  # one per cluster
+    exact = E.make_engine(E.FeaturesConfig()).select(jnp.asarray(feats), 8)
+    ratio = _objective(feats, idx) / _objective(feats, np.asarray(exact.indices))
+    assert ratio >= 0.9, ratio
+
+
+def test_num_sieves_auto_cap_and_override():
+    assert num_sieves(10, 0.15, 32) == 32  # explicit levels win
+    assert num_sieves(4, 0.15, 0) >= 4
+    assert num_sieves(100_000, 0.01, 0) == 64  # auto grid caps at 64
+
+
+def test_multi_delta_order_invariance_bounds():
+    """Shuffled delta arrival orders land within a tight objective band of
+    each other and all clear the streaming gate vs lazy greedy."""
+    feats, _ = _clusters(120, 6, 10, seed=1, spread=0.6)
+    budget, chunk = 12, 30
+    f_lazy = None
+    objectives = []
+    for perm_seed in (0, 1, 2):
+        order = np.random.RandomState(perm_seed).permutation(len(feats))
+        sel = StreamingSelector(budget, feats.shape[1])
+        for lo in range(0, len(feats), chunk):
+            sel.ingest(feats[order[lo : lo + chunk]])
+        res = sel.result(feats[order])
+        idx = order[np.asarray(res.indices)]  # back to pool coordinates
+        assert np.asarray(res.weights).sum() == pytest.approx(float(len(feats)))
+        objectives.append(_objective(feats, idx))
+    if f_lazy is None:
+        dist = np.asarray(pairwise_distances(jnp.asarray(feats)))
+        sim = dist.max() + 1e-6 - dist
+        f_lazy = _objective(feats, np.asarray(fl.lazy_greedy_fl(sim, budget).indices))
+    objectives = np.asarray(objectives)
+    assert (objectives >= 0.4 * f_lazy).all(), objectives / f_lazy
+    assert objectives.min() >= 0.8 * objectives.max(), objectives
+
+
+def test_per_class_budgets_follow_observed_arrival():
+    """Stratified budgets apportion to class frequencies as *ingested*
+    (paper §5), even when one class arrives mostly late."""
+    rng = np.random.RandomState(2)
+    feats0 = rng.randn(140, 4).astype(np.float32)  # class 0: 70%
+    feats1 = 5.0 + rng.randn(60, 4).astype(np.float32)  # class 1: 30%, late
+    sel = StreamingSelector(20, 4, per_class=True)
+    sel.ingest(feats0[:100], labels=np.zeros(100, np.int64))
+    sel.ingest(
+        np.concatenate([feats0[100:], feats1]),
+        labels=np.concatenate([np.zeros(40), np.ones(60)]).astype(np.int64),
+    )
+    pool = np.concatenate([feats0[:100], feats0[100:], feats1])
+    pool_labels = np.concatenate([np.zeros(140), np.ones(60)]).astype(np.int64)
+    res = sel.result(pool)
+    idx = np.asarray(res.indices)
+    counts = np.bincount(pool_labels[idx], minlength=2)
+    expect = _apportion_budgets(np.asarray([140, 60]), 20)
+    np.testing.assert_array_equal(counts, expect)  # 14 / 6
+    assert np.asarray(res.weights).sum() == pytest.approx(200.0)
+    assert len(np.unique(idx)) == 20
+
+
+def test_streaming_engine_jit_parity():
+    """The whole select() path traces under jax.jit (capability jit_safe)."""
+    feats = jnp.asarray(np.random.RandomState(3).randn(64, 5).astype(np.float32))
+    eng = E.make_engine(E.StreamingConfig())
+    eager = eng.select(feats, 9, rng=0)
+    jitted = jax.jit(lambda f: eng.select(f, 9, rng=0).indices)(feats)
+    np.testing.assert_array_equal(np.asarray(jitted), np.asarray(eager.indices))
+
+
+# -- state round-trips --------------------------------------------------------
+
+
+def test_selector_state_dict_resume_bit_identical():
+    """Kill-and-resume mid-stream: restore from a JSON round-trip, ingest the
+    remaining deltas, and get the exact selection of the uninterrupted run."""
+    rng = np.random.RandomState(4)
+    deltas = [rng.randn(40, 6).astype(np.float32) for _ in range(4)]
+    pool = np.concatenate(deltas)
+
+    a = StreamingSelector(15, 6)
+    for d in deltas:
+        a.ingest(d)
+
+    b = StreamingSelector(15, 6)
+    b.ingest(deltas[0])
+    b.ingest(deltas[1])
+    snap = json.loads(json.dumps(b.state_dict()))  # through real JSON
+    c = StreamingSelector(15, 6)
+    c.load_state_dict(snap)
+    c.ingest(deltas[2])
+    c.ingest(deltas[3])
+
+    ra, rc = a.result(pool), c.result(pool)
+    np.testing.assert_array_equal(np.asarray(ra.indices), np.asarray(rc.indices))
+    np.testing.assert_array_equal(np.asarray(ra.weights), np.asarray(rc.weights))
+
+
+def test_per_class_state_dict_round_trip():
+    rng = np.random.RandomState(5)
+    sel = StreamingSelector(10, 3, per_class=True)
+    sel.ingest(rng.randn(50, 3).astype(np.float32),
+               labels=rng.randint(0, 3, 50))
+    snap = json.loads(json.dumps(sel.state_dict()))
+    back = StreamingSelector(10, 3, per_class=True)
+    back.load_state_dict(snap)
+    assert back.n_seen == sel.n_seen
+
+
+def test_result_requires_full_ingested_pool():
+    sel = StreamingSelector(5, 2)
+    sel.ingest(np.zeros((8, 2), np.float32))
+    with pytest.raises(ValueError, match="8"):
+        sel.result(np.zeros((6, 2), np.float32))
+
+
+def test_init_streaming_state_validates_prefix():
+    with pytest.raises(ValueError):
+        init_streaming_state(2, 3, init_selected=[0, 1, 2])  # prefix > budget
+
+
+# -- coreset service ----------------------------------------------------------
+
+
+def test_service_versions_and_double_buffer():
+    rng = np.random.RandomState(6)
+    svc = CoresetService(10, 4)
+    assert svc.coreset() is None and svc.version == 0
+    v1 = svc.submit_delta(rng.randn(30, 4))
+    assert v1 == 1 and svc.version == 0  # staged, not yet installed
+    u1 = svc.coreset()
+    assert (u1.version, svc.version, u1.n_seen) == (1, 1, 30)
+    assert u1.weights.sum() == pytest.approx(30.0)
+    v2 = svc.submit_delta(rng.randn(20, 4))
+    u2 = svc.coreset()
+    assert (v2, u2.version, u2.n_seen) == (2, 2, 50)
+    assert u2.weights.sum() == pytest.approx(50.0)
+    assert svc.coreset() is u2  # no new publish → installed unchanged
+
+
+def test_service_async_coalesces_and_drains():
+    rng = np.random.RandomState(7)
+    svc = CoresetService(8, 3, mode="async")
+    for _ in range(4):
+        svc.submit_delta(rng.randn(16, 3))
+    u = svc.coreset(block=True)
+    assert u is not None and u.n_seen == 64
+    assert u.weights.sum() == pytest.approx(64.0)
+    assert 1 <= u.version <= 4  # coalesced drains publish ≤ one version each
+
+
+def test_service_worker_failure_surfaces():
+    svc = CoresetService(6, 2, per_class=True)
+    with pytest.raises(RuntimeError, match="failed"):
+        svc.submit_delta(np.zeros((10, 2), np.float32))  # per_class, no labels
+
+
+def test_service_state_dict_resume_bit_identical():
+    rng = np.random.RandomState(8)
+    d1, d2 = rng.randn(25, 3).astype(np.float32), rng.randn(25, 3).astype(np.float32)
+    a = CoresetService(7, 3)
+    a.submit_delta(d1)
+    a.coreset()
+    snap = json.loads(json.dumps(a.state_dict()))
+    b = CoresetService(7, 3)
+    b.load_state_dict(snap)
+    assert b.version == a.version
+    va, vb = a.submit_delta(d2), b.submit_delta(d2)
+    ua, ub = a.coreset(), b.coreset()
+    assert va == vb == 2
+    np.testing.assert_array_equal(ua.indices, ub.indices)
+    np.testing.assert_array_equal(ua.weights, ub.weights)
+
+
+def test_service_rejects_bad_delta_shape():
+    svc = CoresetService(4, 3)
+    with pytest.raises(ValueError, match=r"\(Δn, 3\)"):
+        svc.submit_delta(np.zeros((5, 2), np.float32))
+
+
+# -- subprocess round-trip (tier 2) ------------------------------------------
+
+
+@pytest.mark.tier2
+def test_coreset_service_subprocess_round_trip():
+    """launch/serve.py --coreset over real pipes: deltas in, selection out."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    rng = np.random.RandomState(9)
+    reqs = [
+        {"op": "delta", "feats": rng.randn(24, 4).tolist()},
+        {"op": "delta", "feats": rng.randn(16, 4).tolist()},
+        {"op": "coreset"},
+        {"op": "bogus"},
+        {"op": "quit"},
+    ]
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--coreset",
+         "--budget", "6", "--dim", "4"],
+        input="\n".join(json.dumps(r) for r in reqs) + "\n",
+        env=env, capture_output=True, text=True, timeout=480,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    resp = [json.loads(ln) for ln in out.stdout.splitlines() if ln.strip()]
+    assert len(resp) == 5
+    assert resp[0] == {"ok": True, "version": 1, "n_seen": 24}
+    assert resp[1] == {"ok": True, "version": 2, "n_seen": 40}
+    sel = resp[2]
+    assert sel["ok"] and sel["version"] == 2 and sel["n_seen"] == 40
+    assert len(sel["indices"]) == 6 == len(set(sel["indices"]))
+    assert sum(sel["gamma"]) == pytest.approx(40.0)
+    assert resp[3]["ok"] is False and "bogus" in resp[3]["error"]
+    assert resp[4] == {"ok": True, "bye": True}
