@@ -1,0 +1,34 @@
+"""repro-lint: project-specific static analysis (DESIGN.md §11).
+
+CRAIG's speedup claim survives only while the selection/extraction hot
+paths stay device-resident, the Pallas kernels keep their tiling/precision
+contracts, and the async refresh machinery stays race-free.  Those are
+*repo invariants*, not general Python style — so they are checked by a
+project-owned rule engine over ``ast`` instead of an off-the-shelf linter:
+
+  * :mod:`repro.analysis.index` — shared file/symbol index (one parse per
+    file, import resolution, qualified-name lookup) every rule reads;
+  * :mod:`repro.analysis.engine` — the ``Rule`` protocol and runner;
+  * :mod:`repro.analysis.findings` / :mod:`repro.analysis.suppress` —
+    structured ``Finding`` records and the narrow inline suppression
+    syntax ``# repro-lint: disable=RULE  # reason``;
+  * :mod:`repro.analysis.rules` — the four concrete passes: jit-safety,
+    Pallas contract, concurrency, API hygiene;
+  * :mod:`repro.analysis.report` — human and JSON reporters;
+  * ``python -m repro.analysis`` — the CLI (exit 0 clean / 1 findings /
+    2 usage or internal error) that CI gates on.
+"""
+from repro.analysis.engine import AnalysisResult, Rule, all_rules, run_analysis
+from repro.analysis.findings import Finding, SEVERITIES
+from repro.analysis.index import FileIndex, ModuleInfo
+
+__all__ = [
+    "AnalysisResult",
+    "Rule",
+    "all_rules",
+    "run_analysis",
+    "Finding",
+    "SEVERITIES",
+    "FileIndex",
+    "ModuleInfo",
+]

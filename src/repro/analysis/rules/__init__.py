@@ -1,0 +1,24 @@
+"""The four concrete repro-lint passes (DESIGN.md §11).
+
+Registration order is documentation order; ``repro.analysis.engine.
+all_rules`` instantiates this list.
+"""
+from repro.analysis.rules.jit_safety import JitSafetyRule
+from repro.analysis.rules.pallas_contract import PallasContractRule
+from repro.analysis.rules.concurrency import ConcurrencyRule
+from repro.analysis.rules.api_hygiene import ApiHygieneRule
+
+ALL_RULES = (
+    JitSafetyRule,
+    PallasContractRule,
+    ConcurrencyRule,
+    ApiHygieneRule,
+)
+
+__all__ = [
+    "ALL_RULES",
+    "JitSafetyRule",
+    "PallasContractRule",
+    "ConcurrencyRule",
+    "ApiHygieneRule",
+]

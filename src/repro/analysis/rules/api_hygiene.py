@@ -1,0 +1,247 @@
+"""Pass 4 — API hygiene: a declarative deprecated-name / forbidden-import
+table, plus the engine-registration contract.
+
+This subsumes the old ``tests/test_no_flat_engine_knobs.py`` grep (the
+flat engine knobs that the SelectionEngine redesign confined to the legacy
+shim) and generalizes it: each table row is one invariant with its own
+rule_id, allowlist and rationale, so the next "this name must not escape
+its module" guard is a one-line entry instead of a new test file.
+
+Checks:
+  * ``flat-engine-knob`` — the legacy flat CraigConfig knobs
+    (``device_q``/``topk_k``/``device_stale_tol``) appear as identifiers
+    only inside ``core/engines/legacy.py``.  AST-based, so prose in
+    docstrings no longer trips the guard but re-threaded kwargs do.
+  * ``forbidden-import`` — ``jax.experimental.pallas`` imports stay in
+    ``repro/kernels/`` (every other module goes through the ops wrappers,
+    which own padding/tiling/interpret-mode policy); the legacy shim is
+    imported only by its two existing consumers (``core/craig.py``,
+    ``core/distributed.py``) so deprecation debt cannot quietly spread.
+  * ``engine-capabilities`` — every ``SelectionEngine`` subclass in
+    ``repro/core/engines/`` declares a ``capabilities = Capabilities(...)``
+    class attribute and is decorated ``@register_engine``: the registry's
+    capability dispatch (and the jit-safety pass above) are only sound if
+    no engine bypasses registration.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable, Iterator
+
+from repro.analysis.engine import Rule
+from repro.analysis.findings import Finding
+from repro.analysis.index import FileIndex, ModuleInfo
+
+DEPRECATED_NAME_RULE = "flat-engine-knob"
+FORBIDDEN_IMPORT_RULE = "forbidden-import"
+ENGINE_CAPS_RULE = "engine-capabilities"
+
+
+@dataclasses.dataclass(frozen=True)
+class DeprecatedNames:
+    """Identifiers that must not appear outside their allowlisted homes."""
+
+    rule_id: str
+    names: frozenset[str]
+    allow_paths: tuple[str, ...]  # path suffixes where the names are legal
+    hint: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ForbiddenImport:
+    """A module (prefix) importable only from allowlisted paths."""
+
+    module: str
+    allow_paths: tuple[str, ...]
+    hint: str
+
+
+# The declarative rule table.  Adding a guard == adding a row.
+DEPRECATED_NAME_TABLE: tuple[DeprecatedNames, ...] = (
+    DeprecatedNames(
+        rule_id=DEPRECATED_NAME_RULE,
+        names=frozenset({"device_q", "topk_k", "device_stale_tol"}),
+        allow_paths=("repro/core/engines/legacy.py",),
+        hint=(
+            "legacy flat engine knob; use the typed EngineConfigs from "
+            "repro.core.engines (the shim maps old names once, with a "
+            "DeprecationWarning)"
+        ),
+    ),
+)
+
+FORBIDDEN_IMPORT_TABLE: tuple[ForbiddenImport, ...] = (
+    ForbiddenImport(
+        module="jax.experimental.pallas",
+        allow_paths=("repro/kernels/",),
+        hint=(
+            "Pallas stays inside repro.kernels — call the ops wrappers, "
+            "which own padding, tiling and interpret-mode policy"
+        ),
+    ),
+    ForbiddenImport(
+        module="repro.core.engines.legacy",
+        allow_paths=(
+            "repro/core/engines/",
+            "repro/core/craig.py",
+            "repro/core/distributed.py",
+        ),
+        hint=(
+            "the legacy-knob shim has exactly two consumers; new code "
+            "takes typed EngineConfigs instead of resurrecting flat knobs"
+        ),
+    ),
+)
+
+_ENGINES_DIR = "repro/core/engines/"
+_ENGINE_EXEMPT = ("base.py", "registry.py", "legacy.py", "__init__.py")
+
+
+class ApiHygieneRule(Rule):
+    rule_ids = (
+        DEPRECATED_NAME_RULE,
+        FORBIDDEN_IMPORT_RULE,
+        ENGINE_CAPS_RULE,
+    )
+    description = (
+        "deprecated-name/forbidden-import table (incl. the flat-engine-"
+        "knob guard) and the engine Capabilities registration contract"
+    )
+
+    def run(self, index: FileIndex) -> Iterable[Finding]:
+        findings: list[Finding] = []
+        for mod in index.modules:
+            findings.extend(_check_deprecated_names(mod))
+            findings.extend(_check_forbidden_imports(mod))
+            findings.extend(_check_engine_registration(mod))
+        return findings
+
+
+def _allowed(mod: ModuleInfo, allow_paths: tuple[str, ...]) -> bool:
+    p = str(mod.abspath).replace("\\", "/")
+    return any(a in p for a in allow_paths)
+
+
+# ---------------------------------------------------------------------------
+# deprecated names
+# ---------------------------------------------------------------------------
+
+
+def _check_deprecated_names(mod: ModuleInfo) -> Iterator[Finding]:
+    for row in DEPRECATED_NAME_TABLE:
+        if _allowed(mod, row.allow_paths):
+            continue
+        for node in ast.walk(mod.tree):
+            name = _identifier_of(node)
+            if name in row.names:
+                yield Finding(
+                    mod.path,
+                    getattr(node, "lineno", 1),
+                    row.rule_id,
+                    f"deprecated name '{name}': {row.hint}",
+                )
+
+
+def _identifier_of(node: ast.AST) -> str | None:
+    """Identifier-position occurrences: names, attributes, keyword args,
+    function parameters and annotated fields — not docstrings/comments."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.keyword):
+        return node.arg
+    if isinstance(node, ast.arg):
+        return node.arg
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        return node.name
+    return None
+
+
+# ---------------------------------------------------------------------------
+# forbidden imports
+# ---------------------------------------------------------------------------
+
+
+def _check_forbidden_imports(mod: ModuleInfo) -> Iterator[Finding]:
+    for row in FORBIDDEN_IMPORT_TABLE:
+        if _allowed(mod, row.allow_paths):
+            continue
+        for node in ast.walk(mod.tree):
+            hit = None
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == row.module or alias.name.startswith(
+                        row.module + "."
+                    ):
+                        hit = alias.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                if node.module == row.module or node.module.startswith(
+                    row.module + "."
+                ):
+                    hit = node.module
+                elif any(
+                    f"{node.module}.{a.name}" == row.module
+                    for a in node.names
+                ):
+                    hit = row.module
+            if hit is not None:
+                yield Finding(
+                    mod.path,
+                    node.lineno,
+                    FORBIDDEN_IMPORT_RULE,
+                    f"import of '{hit}' is confined to "
+                    f"{', '.join(row.allow_paths)}: {row.hint}",
+                )
+
+
+# ---------------------------------------------------------------------------
+# engine registration contract
+# ---------------------------------------------------------------------------
+
+
+def _check_engine_registration(mod: ModuleInfo) -> Iterator[Finding]:
+    p = str(mod.abspath).replace("\\", "/")
+    if _ENGINES_DIR not in p or p.endswith(_ENGINE_EXEMPT):
+        return
+    for cls in mod.classes.values():
+        if not _subclasses_selection_engine(mod, cls):
+            continue
+        has_caps = any(
+            isinstance(stmt, ast.Assign)
+            and any(
+                isinstance(t, ast.Name) and t.id == "capabilities"
+                for t in stmt.targets
+            )
+            for stmt in cls.body
+        )
+        registered = any(
+            (mod.qualify(dec) or "").endswith("register_engine")
+            for dec in cls.decorator_list
+        )
+        if not has_caps:
+            yield Finding(
+                mod.path,
+                cls.lineno,
+                ENGINE_CAPS_RULE,
+                f"engine {cls.name} declares no 'capabilities = "
+                "Capabilities(...)'; the registry's capability dispatch "
+                "(and the jit-safety pass) need it",
+            )
+        if not registered:
+            yield Finding(
+                mod.path,
+                cls.lineno,
+                ENGINE_CAPS_RULE,
+                f"engine {cls.name} is not decorated @register_engine; "
+                "unregistered engines bypass capability gating and "
+                "engine='auto'",
+            )
+
+
+def _subclasses_selection_engine(mod: ModuleInfo, cls: ast.ClassDef) -> bool:
+    return any(
+        (mod.qualify(b) or "").rpartition(".")[2] == "SelectionEngine"
+        for b in cls.bases
+    )

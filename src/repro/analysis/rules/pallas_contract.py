@@ -1,0 +1,288 @@
+"""Pass 2 — Pallas contract: every ``pl.pallas_call`` site self-consistent.
+
+A mis-tiled ``pallas_call`` rarely fails loudly: an index_map whose arity
+silently zips against the wrong grid axis, a kernel signature drifting out
+of sync with its specs after an edit, or a bf16 accumulator all produce
+*numbers* — wrong or slow ones — and CPU interpret-mode CI (DESIGN.md §8)
+can't catch what only manifests as TPU-tile misalignment.  These are
+checkable statically because the repo's kernels follow one shape
+(kernels/*.py: literal ``grid=`` tuples, list-literal specs, lambda index
+maps), so the pass enforces:
+
+  * ``pallas-index-map-arity`` — each BlockSpec index_map lambda takes
+    exactly grid-rank arguments, and returns a tuple of the block shape's
+    rank;
+  * ``pallas-kernel-arity`` — kernel positional parameters ==
+    len(in_specs) + #outputs + len(scratch_shapes) (refs arrive in that
+    order; ``functools.partial``-bound keywords and factory closures are
+    resolved first);
+  * ``pallas-accumulator-dtype`` — no bf16/fp16 ``ShapeDtypeStruct``
+    outputs or VMEM scratch: tiles may be bf16, but running accumulators
+    stay fp32 (the ``fl_gains``/``ce_proxy`` discipline, DESIGN.md §9);
+  * ``pallas-dot-preferred-type`` — every ``dot_general``/``pl.dot``
+    inside a kernel body passes ``preferred_element_type`` resolving to
+    fp32, so MXU matmuls accumulate fp32 even on bf16 tiles.
+
+Sites that don't match the recognized shape (computed spec lists, grids
+the index can't resolve) are skipped, not guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.engine import Rule
+from repro.analysis.findings import Finding
+from repro.analysis.index import FileIndex, ModuleInfo, resolve_callable
+
+INDEX_MAP_RULE = "pallas-index-map-arity"
+KERNEL_ARITY_RULE = "pallas-kernel-arity"
+ACCUM_DTYPE_RULE = "pallas-accumulator-dtype"
+DOT_PREFERRED_RULE = "pallas-dot-preferred-type"
+
+_PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+_BLOCKSPEC_SUFFIX = "BlockSpec"
+_LOW_PRECISION = frozenset({"bfloat16", "float16"})
+_DOT_CALLS = frozenset(
+    {
+        "jax.lax.dot_general",
+        "jax.lax.dot",
+        "jax.numpy.dot",
+        "jax.numpy.matmul",
+        "jax.numpy.einsum",
+        "jax.experimental.pallas.dot",
+    }
+)
+
+
+class PallasContractRule(Rule):
+    rule_ids = (
+        INDEX_MAP_RULE,
+        KERNEL_ARITY_RULE,
+        ACCUM_DTYPE_RULE,
+        DOT_PREFERRED_RULE,
+    )
+    description = (
+        "pallas_call sites: index_map arity vs grid rank, kernel signature "
+        "vs BlockSpec/scratch counts, fp32 accumulators on bf16 tiles"
+    )
+
+    def run(self, index: FileIndex) -> Iterable[Finding]:
+        findings: list[Finding] = []
+        for mod in index.modules:
+            for node in ast.walk(mod.tree):
+                if (
+                    isinstance(node, ast.Call)
+                    and mod.qualify(node.func) == _PALLAS_CALL
+                ):
+                    findings.extend(_check_site(index, mod, node))
+        return findings
+
+
+def _check_site(
+    index: FileIndex, mod: ModuleInfo, call: ast.Call
+) -> Iterator[Finding]:
+    kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+    grid_rank = _grid_rank(mod, kwargs.get("grid"), call)
+
+    in_specs = _as_list(mod, kwargs.get("in_specs"), call)
+    out_specs = _as_list(mod, kwargs.get("out_specs"), call)
+    scratch = _as_list(mod, kwargs.get("scratch_shapes"), call)
+    out_shape = _as_list(mod, kwargs.get("out_shape"), call)
+
+    # --- index_map arity / return rank per BlockSpec -----------------------
+    for spec in (in_specs or []) + (out_specs or []):
+        yield from _check_blockspec(mod, spec, grid_rank)
+
+    # --- kernel signature vs spec counts -----------------------------------
+    # Skip (don't guess) when any count-bearing kwarg is present but its
+    # value couldn't be resolved to a literal list.
+    unresolved = any(
+        kwargs.get(k) is not None and v is None
+        for k, v in (
+            ("in_specs", in_specs),
+            ("out_specs", out_specs),
+            ("scratch_shapes", scratch),
+            ("out_shape", out_shape),
+        )
+    )
+    if in_specs is not None and call.args and not unresolved:
+        n_outs = (
+            len(out_specs)
+            if out_specs is not None
+            else (len(out_shape) if out_shape is not None else 1)
+        )
+        n_scratch = len(scratch) if scratch is not None else 0
+        expected = len(in_specs) + n_outs + n_scratch
+        resolved = resolve_callable(index, mod, call.args[0], call)
+        if resolved is not None:
+            kmod, kdef = resolved
+            got = _positional_arity(kdef)
+            if got is not None and got != expected:
+                yield Finding(
+                    mod.path,
+                    call.lineno,
+                    KERNEL_ARITY_RULE,
+                    f"kernel '{_kernel_name(kdef)}' takes {got} positional "
+                    f"ref(s) but specs imply {expected} "
+                    f"({len(in_specs)} in + {n_outs} out + {n_scratch} "
+                    "scratch); refs arrive in exactly that order",
+                )
+
+    # --- accumulator dtypes -------------------------------------------------
+    for struct in out_shape or []:
+        yield from _check_struct_dtype(
+            mod, struct, "out_shape output", ACCUM_DTYPE_RULE
+        )
+    for buf in scratch or []:
+        yield from _check_struct_dtype(
+            mod, buf, "VMEM scratch buffer", ACCUM_DTYPE_RULE
+        )
+
+    # --- dot precision inside the kernel ------------------------------------
+    if call.args:
+        resolved = resolve_callable(index, mod, call.args[0], call)
+        if resolved is not None:
+            kmod, kdef = resolved
+            for dnode in ast.walk(kdef):
+                if not isinstance(dnode, ast.Call):
+                    continue
+                fq = kmod.qualify(dnode.func)
+                if fq not in _DOT_CALLS:
+                    continue
+                pref = next(
+                    (
+                        kw.value
+                        for kw in dnode.keywords
+                        if kw.arg == "preferred_element_type"
+                    ),
+                    None,
+                )
+                if pref is None:
+                    yield Finding(
+                        kmod.path,
+                        dnode.lineno,
+                        DOT_PREFERRED_RULE,
+                        f"{fq.rpartition('.')[2]} in kernel "
+                        f"'{_kernel_name(kdef)}' has no "
+                        "preferred_element_type; bf16 tiles would "
+                        "accumulate in bf16 on the MXU — pass "
+                        "preferred_element_type=jnp.float32",
+                    )
+                else:
+                    pq = kmod.qualify(pref) or ""
+                    if pq.rpartition(".")[2] in _LOW_PRECISION:
+                        yield Finding(
+                            kmod.path,
+                            dnode.lineno,
+                            DOT_PREFERRED_RULE,
+                            "preferred_element_type is low-precision; "
+                            "accumulate fp32 (DESIGN.md §9 discipline)",
+                        )
+
+
+def _check_blockspec(
+    mod: ModuleInfo, spec: ast.AST, grid_rank: int | None
+) -> Iterator[Finding]:
+    if not isinstance(spec, ast.Call):
+        return
+    fq = mod.qualify(spec.func) or ""
+    if not fq.endswith(_BLOCKSPEC_SUFFIX):
+        return
+    shape = spec.args[0] if spec.args else None
+    imap = None
+    if len(spec.args) > 1:
+        imap = spec.args[1]
+    for kw in spec.keywords:
+        if kw.arg == "index_map":
+            imap = kw.value
+    if not isinstance(imap, ast.Lambda):
+        return
+    arity = len(imap.args.args)
+    if grid_rank is not None and arity != grid_rank:
+        yield Finding(
+            mod.path,
+            imap.lineno,
+            INDEX_MAP_RULE,
+            f"index_map takes {arity} argument(s) but the grid has rank "
+            f"{grid_rank}; each lambda parameter is one grid axis",
+        )
+    if isinstance(shape, ast.Tuple) and isinstance(imap.body, ast.Tuple):
+        if len(imap.body.elts) != len(shape.elts):
+            yield Finding(
+                mod.path,
+                imap.lineno,
+                INDEX_MAP_RULE,
+                f"index_map returns {len(imap.body.elts)} coordinate(s) "
+                f"for a rank-{len(shape.elts)} block shape",
+            )
+
+
+def _check_struct_dtype(
+    mod: ModuleInfo, node: ast.AST, what: str, rule_id: str
+) -> Iterator[Finding]:
+    """Flag bf16/fp16 dtypes on ShapeDtypeStruct / pltpu.VMEM constructors."""
+    if not isinstance(node, ast.Call):
+        return
+    dtype = None
+    if len(node.args) >= 2:
+        dtype = node.args[1]
+    for kw in node.keywords:
+        if kw.arg == "dtype":
+            dtype = kw.value
+    if dtype is None:
+        return
+    dq = (mod.qualify(dtype) or "").rpartition(".")[2]
+    if dq in _LOW_PRECISION:
+        yield Finding(
+            mod.path,
+            node.lineno,
+            rule_id,
+            f"{what} is {dq}: accumulators must stay fp32 even when "
+            "feature tiles are bf16 (fl_gains/ce_proxy discipline)",
+        )
+
+
+def _grid_rank(
+    mod: ModuleInfo, grid: ast.AST | None, scope: ast.AST
+) -> int | None:
+    if grid is None:
+        return None
+    if isinstance(grid, ast.Name):
+        grid = mod.resolve_local(grid.id, scope)
+    if isinstance(grid, ast.Tuple):
+        return len(grid.elts)
+    if isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+        return 1
+    return None
+
+
+def _as_list(
+    mod: ModuleInfo, node: ast.AST | None, scope: ast.AST
+) -> list[ast.AST] | None:
+    """Literal list/tuple → elements; single expression → [it]; a local
+    name is first resolved to its binding; other shapes → None (unknown)."""
+    if isinstance(node, ast.Name):
+        node = mod.resolve_local(node.id, scope)
+    if node is None:
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    if isinstance(node, ast.Call):
+        return [node]
+    return None
+
+
+def _positional_arity(fn: ast.AST) -> int | None:
+    if isinstance(fn, ast.Lambda) or isinstance(
+        fn, (ast.FunctionDef, ast.AsyncFunctionDef)
+    ):
+        a = fn.args
+        if a.vararg is not None:
+            return None
+        return len(a.posonlyargs) + len(a.args)
+    return None
+
+
+def _kernel_name(fn: ast.AST) -> str:
+    return getattr(fn, "name", "<lambda>")

@@ -59,6 +59,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(root, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     # -- save ---------------------------------------------------------------
 
@@ -75,30 +76,38 @@ class CheckpointManager:
         host = [(p, np.asarray(jax.device_get(v))) for p, v in leaves]
 
         def write():
-            final = os.path.join(self.root, f"step_{step:08d}")
-            tmp = final + ".tmp"
-            if os.path.exists(tmp):
-                shutil.rmtree(tmp)
-            os.makedirs(os.path.join(tmp, "arrays"))
-            manifest = {"step": step, "leaves": [], "extras": extras or {}}
-            for i, (path, arr) in enumerate(host):
-                fn = f"{i:05d}.npy"
-                np.save(os.path.join(tmp, "arrays", fn), arr)
-                manifest["leaves"].append(
-                    {"path": path, "file": fn, "dtype": str(arr.dtype),
-                     "shape": list(arr.shape)}
-                )
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.replace(tmp, final)
-            # atomic LATEST pointer
-            ptr_tmp = os.path.join(self.root, "LATEST.tmp")
-            with open(ptr_tmp, "w") as f:
-                f.write(os.path.basename(final))
-            os.replace(ptr_tmp, os.path.join(self.root, "LATEST"))
-            self._gc()
+            try:
+                final = os.path.join(self.root, f"step_{step:08d}")
+                tmp = final + ".tmp"
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(os.path.join(tmp, "arrays"))
+                manifest = {
+                    "step": step, "leaves": [], "extras": extras or {}
+                }
+                for i, (path, arr) in enumerate(host):
+                    fn = f"{i:05d}.npy"
+                    np.save(os.path.join(tmp, "arrays", fn), arr)
+                    manifest["leaves"].append(
+                        {"path": path, "file": fn, "dtype": str(arr.dtype),
+                         "shape": list(arr.shape)}
+                    )
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                # atomic LATEST pointer
+                ptr_tmp = os.path.join(self.root, "LATEST.tmp")
+                with open(ptr_tmp, "w") as f:
+                    f.write(os.path.basename(final))
+                os.replace(ptr_tmp, os.path.join(self.root, "LATEST"))
+                self._gc()
+            except BaseException as e:
+                # Surface on the trainer thread at the next wait()/save():
+                # a checkpoint that silently failed to land is worse than a
+                # crashed run (restores would rewind arbitrarily far).
+                self._error = e
 
         self.wait()
         if blocking:
@@ -111,6 +120,9 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
 
     def _gc(self) -> None:
         steps = sorted(

@@ -120,7 +120,7 @@ def lm_unembed_input_proxy(
             "bcd,dv->bcv", h.astype(compute_dtype), unembed.astype(compute_dtype)
         ).astype(jnp.float32)
         if pad_bias is not None:
-            logits = logits + pad_bias
+            logits = logits + pad_bias[None, None]
         p = jax.nn.softmax(logits, axis=-1)
         delta = p - jax.nn.one_hot(y, V, dtype=jnp.float32)  # (B, c, V)
         g = jnp.einsum(

@@ -231,7 +231,9 @@ class CoresetSampler:
                 self._indices = np.asarray(s["indices"], np.int64)
                 self._weights = np.asarray(s["weights"], np.float32)
         # version/pending are absent in pre-refresh checkpoints
-        self.version = int(s.get("version", 0 if s["indices"] is None else 1))
+        version = int(s.get("version", 0 if s["indices"] is None else 1))
+        with self._lock:
+            self.version = version
         p = s.get("pending")
         if p is not None:
             self.stage(
@@ -242,7 +244,8 @@ class CoresetSampler:
                 keep_order=True,  # already canonicalized when staged
             )
         else:
-            self._pending = None
+            with self._lock:
+                self._pending = None
 
     def skip_to(self, epoch: int, step_in_epoch: int) -> None:
         """Straggler/restart skip-ahead: O(1), no data regeneration."""
@@ -269,29 +272,62 @@ class GlobalBatcher:
         return batch
 
 
+class _WorkerFailed:
+    """Queue sentinel carrying the prefetch worker's exception."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class _WorkerDone:
+    """Queue sentinel: the wrapped iterator is exhausted."""
+
+
 class Prefetcher:
-    """Depth-k background prefetch of host batches."""
+    """Depth-k background prefetch of host batches.
+
+    Worker outcomes travel through the queue itself: an exception or
+    exhaustion in the wrapped iterator is re-raised (or raises
+    StopIteration) from ``next()`` on the consumer thread instead of dying
+    silently on the worker and leaving ``next()`` blocked forever.
+    """
 
     def __init__(self, it, depth: int = 2):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
 
         def worker():
-            for item in it:
-                if self._stop.is_set():
-                    return
-                self._q.put(item)
+            try:
+                for item in it:
+                    if self._stop.is_set():
+                        return
+                    self._q.put(item)
+                self._q.put(_WorkerDone())
+            except BaseException as e:
+                self._q.put(_WorkerFailed(e))
 
-        self._t = threading.Thread(target=worker, daemon=True)
+        self._t = threading.Thread(
+            target=worker, name="prefetcher", daemon=True
+        )
         self._t.start()
 
     def next(self):
-        return self._q.get()
+        item = self._q.get()
+        if isinstance(item, _WorkerFailed):
+            raise RuntimeError("prefetch worker failed") from item.exc
+        if isinstance(item, _WorkerDone):
+            raise StopIteration
+        return item
 
     def close(self):
         self._stop.set()
-        try:
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
+        # Drain until the worker (possibly blocked on a full queue) observes
+        # the stop flag and exits; daemon status still covers a source
+        # iterator wedged inside its own next().
+        while self._t.is_alive():
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._t.join(timeout=0.1)

@@ -38,7 +38,7 @@ def rms_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
         jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True
     )
     inv = jax.lax.rsqrt(var + eps).astype(dtype)
-    return x * inv * params["scale"].astype(dtype)
+    return x * inv * _channel(params["scale"].astype(dtype), x.ndim)
 
 
 def layer_norm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
@@ -47,7 +47,15 @@ def layer_norm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
     mu = jnp.mean(x32, axis=-1, keepdims=True)
     var = jnp.var(x32, axis=-1, keepdims=True)
     inv = jax.lax.rsqrt(var + eps).astype(dtype)
-    return (x - mu.astype(dtype)) * inv * params["scale"].astype(dtype)
+    return (x - mu.astype(dtype)) * inv * _channel(
+        params["scale"].astype(dtype), x.ndim
+    )
+
+
+def _channel(v: jax.Array, ndim: int) -> jax.Array:
+    """Explicitly broadcast a (C,) per-channel vector to rank ``ndim``
+    (required under jax_numpy_rank_promotion='raise')."""
+    return v.reshape((1,) * (ndim - 1) + (-1,))
 
 
 def dense_init(key: jax.Array, shape: tuple[int, ...], scale: str = "fan_in"):
@@ -90,7 +98,7 @@ def apply_rope(
     """
     d_head = x.shape[-1]
     inv = rope_frequencies(d_head, theta)  # (d/2,)
-    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, T, d/2)
+    ang = positions.astype(jnp.float32)[..., None] * inv[None, None]  # (B, T, d/2)
     sin = jnp.sin(ang)[:, :, None, :]  # (B, T, 1, d/2)
     cos = jnp.cos(ang)[:, :, None, :]
     return _rope_rotate(x, sin, cos)
@@ -124,7 +132,7 @@ def apply_mrope(
     pos_sel = jnp.einsum(
         "bst,ks->btk", pos, jax.nn.one_hot(stream_id, 3, dtype=jnp.float32)
     )
-    ang = pos_sel * inv  # (B, T, d/2)
+    ang = pos_sel * inv[None, None]  # (B, T, d/2)
     sin = jnp.sin(ang)[:, :, None, :]
     cos = jnp.cos(ang)[:, :, None, :]
     return _rope_rotate(x, sin, cos)

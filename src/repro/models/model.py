@@ -145,7 +145,7 @@ def _chunked_ce(
         )
         logits = constrain(logits, "batch", None, "tp")
         if pad_mask is not None:
-            logits = logits + pad_mask
+            logits = logits + pad_mask[None, None]
         lse = jax.nn.logsumexp(logits, axis=-1)
         # gold logit via one-hot reduce — NOT take_along_axis: a gather along
         # the model-sharded vocab dim forces SPMD to replicate full logits.

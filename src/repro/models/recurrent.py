@@ -83,9 +83,11 @@ def _rglru_scan(params, u: jax.Array) -> jax.Array:
     """
     dtype = u.dtype
     u32 = u.astype(jnp.float32)
-    r_g = jax.nn.sigmoid(u32 @ params["w_a"] + params["b_a"])
-    i_g = jax.nn.sigmoid(u32 @ params["w_i"] + params["b_i"])
-    log_a = _C_RGLRU * r_g * jax.nn.log_sigmoid(params["lam"])  # (B,T,R) ≤ 0
+    r_g = jax.nn.sigmoid(u32 @ params["w_a"] + params["b_a"][None, None])
+    i_g = jax.nn.sigmoid(u32 @ params["w_i"] + params["b_i"][None, None])
+    log_a = (
+        _C_RGLRU * r_g * jax.nn.log_sigmoid(params["lam"])[None, None]
+    )  # (B,T,R) ≤ 0
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_g * u32)
 
@@ -104,7 +106,7 @@ def _causal_conv(w: jax.Array, x: jax.Array) -> jax.Array:
     pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
     out = jnp.zeros_like(x)
     for k in range(K):  # K is tiny (4); unrolled adds, no conv op needed
-        out = out + pads[:, k : k + x.shape[1], :] * w[k]
+        out = out + pads[:, k : k + x.shape[1], :] * w[k][None, None]
     return out
 
 
@@ -138,9 +140,9 @@ def griffin_decode(
     w = params["conv"].astype(dtype)
     u_c = jnp.einsum("bkr,kr->br", hist, w)
     u32 = u_c.astype(jnp.float32)
-    r_g = jax.nn.sigmoid(u32 @ params["w_a"] + params["b_a"])
-    i_g = jax.nn.sigmoid(u32 @ params["w_i"] + params["b_i"])
-    a = jnp.exp(_C_RGLRU * r_g * jax.nn.log_sigmoid(params["lam"]))
+    r_g = jax.nn.sigmoid(u32 @ params["w_a"] + params["b_a"][None])
+    i_g = jax.nn.sigmoid(u32 @ params["w_i"] + params["b_i"][None])
+    a = jnp.exp(_C_RGLRU * r_g * jax.nn.log_sigmoid(params["lam"])[None])
     h = a * state["h"] + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i_g * u32)
     out = (gate * h.astype(dtype)) @ params["w_out"].astype(dtype)
     new_state = {"h": h, "conv": hist[:, 1:]}
@@ -211,7 +213,7 @@ def _mlstm_chunk_parallel(q, k, v, log_i, log_f, chunk=256):
             csum_f[..., :, None] - csum_f[..., None, :] + lic[..., None, :]
         )  # (B,H,C,C)
         mask = jnp.tril(jnp.ones((C, C), bool))
-        log_D = jnp.where(mask, log_D, -jnp.inf)
+        log_D = jnp.where(mask[None, None], log_D, -jnp.inf)
         # inter-chunk contribution decay for queries: exp(csum_f[t] + m_prev)
         log_carry = csum_f + mst[..., None]  # (B,H,C)
         m_t = jnp.maximum(jnp.max(log_D, axis=-1), log_carry)  # (B,H,C)
@@ -272,7 +274,7 @@ def mlstm(params: dict, cfg: MLSTMConfig, x: jax.Array) -> jax.Array:
     q = jnp.einsum("btd,dhk->bhtk", inner_act, params["wq"].astype(dtype))
     k = jnp.einsum("btd,dhk->bhtk", inner_act, params["wk"].astype(dtype))
     v = jnp.einsum("btd,dhk->bhtk", inner, params["wv"].astype(dtype))
-    gf = (inner.astype(jnp.float32) @ params["w_if"]) + params["b_if"]
+    gf = (inner.astype(jnp.float32) @ params["w_if"]) + params["b_if"][None, None]
     log_i, log_f = jnp.split(gf, 2, axis=-1)  # (B, T, H) each
     log_i = jnp.moveaxis(log_i, -1, 1)  # (B, H, T)
     log_f = jnp.moveaxis(jax.nn.log_sigmoid(log_f), -1, 1)
@@ -282,7 +284,7 @@ def mlstm(params: dict, cfg: MLSTMConfig, x: jax.Array) -> jax.Array:
     )  # (B, H, T, d)
     h = jnp.moveaxis(h, 1, 2).reshape(B, T, -1).astype(dtype)
     h = rms_norm(params["out_norm"], h)
-    h = h + params["skip_scale"].astype(dtype) * inner_act
+    h = h + params["skip_scale"].astype(dtype)[None, None] * inner_act
     h = h * jax.nn.silu(gate)
     return h @ params["w_down"].astype(dtype)
 
@@ -314,7 +316,7 @@ def mlstm_decode(
     q = jnp.einsum("bd,dhk->bhk", inner_act, params["wq"].astype(dtype)).astype(jnp.float32)
     k = jnp.einsum("bd,dhk->bhk", inner_act, params["wk"].astype(dtype)).astype(jnp.float32)
     v = jnp.einsum("bd,dhk->bhk", inner_c, params["wv"].astype(dtype)).astype(jnp.float32)
-    gf = (inner_c.astype(jnp.float32) @ params["w_if"]) + params["b_if"]
+    gf = (inner_c.astype(jnp.float32) @ params["w_if"]) + params["b_if"][None]
     log_i, log_f_raw = jnp.split(gf, 2, axis=-1)  # (B, H)
     log_f = jax.nn.log_sigmoid(log_f_raw)
     scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
@@ -331,7 +333,7 @@ def mlstm_decode(
     h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]  # (B, H, d)
     h = h.reshape(B, -1).astype(dtype)
     h = rms_norm(params["out_norm"], h)
-    h = h + params["skip_scale"].astype(dtype) * inner_act
+    h = h + params["skip_scale"].astype(dtype)[None] * inner_act
     h = h * jax.nn.silu(gate)
     out = h @ params["w_down"].astype(dtype)
     new_state = {"C": C_new, "n": n_new, "m": m_new, "conv": hist[:, 1:].astype(jnp.float32)}
@@ -378,7 +380,7 @@ def _slstm_step(params, cfg: SLSTMConfig, state, wx_t):
     B = wx_t.shape[0]
     H, d = cfg.n_heads, cfg.d_head
     rh = jnp.einsum("bhk,ghkl->bghl", h, params["r_in"])  # (B, 4, H, d)
-    z_all = wx_t.reshape(B, 4, H, d) + rh + params["b"].reshape(4, H, d)
+    z_all = wx_t.reshape(B, 4, H, d) + rh + params["b"].reshape(1, 4, H, d)
     i_t, f_t, z_t, o_t = z_all[:, 0], z_all[:, 1], z_all[:, 2], z_all[:, 3]
     log_i = i_t.mean(-1)  # scalar gates per head (B, H)
     log_f = jax.nn.log_sigmoid(f_t.mean(-1))

@@ -1,0 +1,47 @@
+"""Runtime sanitizers for the test suite (DESIGN.md §11).
+
+Tier-1 runs with ``jax_numpy_rank_promotion='raise'`` by default: implicit
+rank promotion is how a ``(B, T, H)`` gate silently broadcasts against a
+``(H,)`` bias into the wrong axis and produces plausible-but-wrong numbers.
+The remaining sanitizers are opt-in because they change performance or are
+too strict for host-side staging code:
+
+  --jax-sanitizers=off     escape hatch: run with stock JAX semantics
+  --jax-debug-nans         re-run under jax_debug_nans (every NaN traps)
+  --jax-transfer-guard=X   set jax_transfer_guard (e.g. 'disallow' to trap
+                           implicit device<->host transfers)
+"""
+import jax
+
+
+def pytest_addoption(parser):
+    group = parser.getgroup("jax-sanitizers")
+    group.addoption(
+        "--jax-sanitizers",
+        choices=("strict", "off"),
+        default="strict",
+        help="'strict' (default) sets jax_numpy_rank_promotion='raise'; "
+        "'off' keeps stock JAX semantics",
+    )
+    group.addoption(
+        "--jax-debug-nans",
+        action="store_true",
+        default=False,
+        help="enable jax_debug_nans (trap on any NaN; slow, opt-in)",
+    )
+    group.addoption(
+        "--jax-transfer-guard",
+        choices=("allow", "log", "disallow", "log_explicit", "disallow_explicit"),
+        default=None,
+        help="set jax_transfer_guard to trap implicit device<->host copies",
+    )
+
+
+def pytest_configure(config):
+    if config.getoption("--jax-sanitizers") == "strict":
+        jax.config.update("jax_numpy_rank_promotion", "raise")
+    if config.getoption("--jax-debug-nans"):
+        jax.config.update("jax_debug_nans", True)
+    guard = config.getoption("--jax-transfer-guard")
+    if guard is not None:
+        jax.config.update("jax_transfer_guard", guard)

@@ -1,0 +1,75 @@
+"""Tier-1 gate: ``python -m repro.analysis src/`` runs clean end to end.
+
+This exercises the real CLI (exit codes, JSON report) over the real tree —
+any unsuppressed finding introduced by a change fails tier-1 locally with
+the same output the CI lint job uploads as an artifact.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=REPO,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+
+
+def test_src_tree_is_lint_clean():
+    proc = _run("src", "--format", "json")
+    assert proc.returncode == 0, (
+        f"repro-lint found unsuppressed findings:\n{proc.stdout}\n{proc.stderr}"
+    )
+    report = json.loads(proc.stdout)
+    assert report["counts"]["active"] == 0
+    assert report["exit_code"] == 0
+
+
+def test_list_rules_covers_all_passes():
+    proc = _run("--list-rules")
+    assert proc.returncode == 0
+    listed = {line.split(":")[0] for line in proc.stdout.splitlines() if line}
+    for rid in (
+        "jit-host-sync",
+        "pallas-index-map-arity",
+        "pallas-kernel-arity",
+        "pallas-accumulator-dtype",
+        "pallas-dot-preferred-type",
+        "lock-discipline",
+        "thread-join",
+        "thread-failure-propagation",
+        "flat-engine-knob",
+        "forbidden-import",
+        "engine-capabilities",
+    ):
+        assert rid in listed, f"rule {rid} missing from --list-rules"
+
+
+def test_unknown_rule_is_usage_error():
+    proc = _run("src", "--rules", "no-such-rule")
+    assert proc.returncode == 2
+    assert "unknown rule" in proc.stderr
+
+
+def test_findings_exit_code_is_one(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import jax\n\n@jax.jit\ndef f(x):\n    return x.item()\n"
+    )
+    proc = _run(str(bad), "--format", "json")
+    assert proc.returncode == 1
+    report = json.loads(proc.stdout)
+    assert report["counts"]["active"] >= 1

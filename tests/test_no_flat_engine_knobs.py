@@ -1,33 +1,35 @@
 """Tier-1 guard: the legacy flat engine knobs live ONLY in the shim module.
 
-The SelectionEngine redesign (repro.core.engines) replaced the flat
-engine-prefixed CraigConfig knobs with typed per-engine configs; the old
-names survive solely inside ``repro/core/engines/legacy.py`` (declaration
-+ mapping).  Any other reference under ``src/`` means engine-specific
-state is being re-threaded around the registry again — the exact
-duplication this refactor removed.
+The check itself is now the ``flat-engine-knob`` row of the api-hygiene
+rule table in :mod:`repro.analysis.rules.api_hygiene` — AST-based, so
+docstring prose no longer trips it but re-threaded kwargs and attribute
+names do.  This test is a thin invocation of the linter restricted to
+that one rule; the full gate (all rules) is ``tests/test_lint_clean.py``.
 """
-import re
 from pathlib import Path
+
+from repro.analysis.engine import run_analysis
 
 SRC = Path(__file__).resolve().parent.parent / "src"
 SHIM = SRC / "repro" / "core" / "engines" / "legacy.py"
-FLAT_KNOBS = re.compile(r"\b(device_q|topk_k|device_stale_tol)\b")
 
 
 def test_no_flat_engine_knobs_outside_shim():
-    assert SHIM.exists(), "legacy shim module moved? update this guard"
-    offenders = []
-    for path in sorted(SRC.rglob("*.py")):
-        if path == SHIM:
-            continue
-        for lineno, line in enumerate(
-            path.read_text(encoding="utf-8").splitlines(), start=1
-        ):
-            if FLAT_KNOBS.search(line):
-                offenders.append(f"{path.relative_to(SRC)}:{lineno}: {line.strip()}")
+    assert SHIM.exists(), "legacy shim module moved? update the rule table"
+    result = run_analysis([SRC], rule_filter=frozenset({"flat-engine-knob"}))
+    offenders = [f.format() for f in result.active]
     assert not offenders, (
         "flat engine knobs referenced outside the legacy shim "
         "(use typed EngineConfigs from repro.core.engines):\n"
         + "\n".join(offenders)
     )
+
+
+def test_rule_catches_a_reintroduced_knob(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(device_q):\n    return device_q + 1\n")
+    result = run_analysis(
+        [bad], rule_filter=frozenset({"flat-engine-knob"})
+    )
+    assert result.active, "linter failed to flag a reintroduced flat knob"
+    assert all(f.rule_id == "flat-engine-knob" for f in result.active)

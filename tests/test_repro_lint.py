@@ -1,0 +1,446 @@
+"""Fixture tests for the repro-lint passes (DESIGN.md §11).
+
+Each pass gets three proofs: a known-bad snippet is flagged with the right
+rule_id on the right line, a known-good snippet stays clean, and an inline
+suppression (with its mandatory reason) silences — but still reports — the
+finding.  ``tests/test_lint_clean.py`` is the complementary gate that the
+real ``src/`` tree stays clean end to end.
+"""
+import textwrap
+
+import pytest
+
+from repro.analysis.engine import run_analysis
+
+
+def _lint(tmp_path, source, name="snippet.py", rules=None):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source))
+    return run_analysis([f], rule_filter=rules)
+
+
+def _by_rule(result, rule_id):
+    return [f for f in result.active if f.rule_id == rule_id]
+
+
+# ---------------------------------------------------------------------------
+# pass 1: jit-safety
+# ---------------------------------------------------------------------------
+
+
+def test_jit_safety_flags_host_sync_in_jitted_fn(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def bad(x):
+            if jnp.sum(x) > 0:
+                return float(jnp.max(x))
+            return x.item()
+        ''',
+    )
+    findings = _by_rule(result, "jit-host-sync")
+    lines = {f.line for f in findings}
+    assert 7 in lines, "branch on traced value not flagged"
+    assert 8 in lines, "float() concretization not flagged"
+    assert 9 in lines, ".item() host sync not flagged"
+
+
+def test_jit_safety_follows_scan_callee_through_call_graph(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import jax
+        import jax.numpy as jnp
+
+        def helper(x):
+            return jax.device_get(x)
+
+        def body(carry, x):
+            return carry + helper(x), None
+
+        def run(xs):
+            return jax.lax.scan(body, jnp.zeros(()), xs)
+        ''',
+    )
+    findings = _by_rule(result, "jit-host-sync")
+    assert any(f.line == 6 for f in findings), (
+        "device_get in a scan-body callee not flagged"
+    )
+
+
+def test_jit_safety_quiet_on_host_side_code(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import jax.numpy as jnp
+
+        def host_summary(x):
+            # not reachable from any jit/scan root: host sync is fine here
+            return float(jnp.max(x))
+        ''',
+    )
+    assert not _by_rule(result, "jit-host-sync")
+
+
+def test_jit_safety_roots_jit_safe_engine_select(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import jax.numpy as jnp
+        from repro.core.engines.base import Capabilities, SelectionEngine
+
+        class FakeEngine(SelectionEngine):
+            capabilities = Capabilities(jit_safe=True)
+
+            def select(self, gains):
+                return int(jnp.argmax(gains))
+        ''',
+    )
+    findings = _by_rule(result, "jit-host-sync")
+    assert any(f.line == 9 for f in findings), (
+        "host sync inside a jit_safe=True engine's select not flagged"
+    )
+
+
+# ---------------------------------------------------------------------------
+# pass 2: pallas contract
+# ---------------------------------------------------------------------------
+
+_PALLAS_PRELUDE = (
+    "import jax\n"
+    "import jax.numpy as jnp\n"
+    "from jax.experimental import pallas as pl\n"
+)
+
+
+def test_pallas_index_map_arity_mismatch(tmp_path):
+    result = _lint(
+        tmp_path,
+        _PALLAS_PRELUDE
+        + textwrap.dedent('''
+        def kernel(a_ref, o_ref):
+            o_ref[...] = a_ref[...]
+
+        def run(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+                out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+            )(x)
+        '''),
+    )
+    findings = _by_rule(result, "pallas-index-map-arity")
+    assert len(findings) == 1, findings
+    assert "1 argument(s)" in findings[0].message
+
+
+def test_pallas_kernel_arity_mismatch(tmp_path):
+    result = _lint(
+        tmp_path,
+        _PALLAS_PRELUDE
+        + textwrap.dedent('''
+        def kernel(a_ref, b_ref, o_ref, scratch):
+            o_ref[...] = a_ref[...]
+
+        def run(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+            )(x)
+        '''),
+    )
+    findings = _by_rule(result, "pallas-kernel-arity")
+    assert len(findings) == 1, findings
+    assert "takes 4" in findings[0].message
+
+
+def test_pallas_low_precision_accumulator_flagged(tmp_path):
+    result = _lint(
+        tmp_path,
+        _PALLAS_PRELUDE
+        + textwrap.dedent('''
+        def kernel(a_ref, o_ref):
+            o_ref[...] = jnp.dot(a_ref[...], a_ref[...])
+
+        def run(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32, 32), jnp.bfloat16),
+            )(x)
+        '''),
+    )
+    assert _by_rule(result, "pallas-accumulator-dtype"), (
+        "bf16 out_shape accumulator not flagged"
+    )
+    assert _by_rule(result, "pallas-dot-preferred-type"), (
+        "dot without preferred_element_type not flagged"
+    )
+
+
+def test_pallas_clean_site_stays_quiet(tmp_path):
+    result = _lint(
+        tmp_path,
+        _PALLAS_PRELUDE
+        + textwrap.dedent('''
+        def kernel(a_ref, o_ref):
+            o_ref[...] = jnp.dot(
+                a_ref[...], a_ref[...],
+                preferred_element_type=jnp.float32,
+            )
+
+        def run(x):
+            grid = (4, 4)
+            return pl.pallas_call(
+                kernel,
+                grid=grid,
+                in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+                out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+            )(x)
+        '''),
+    )
+    pallas = [f for f in result.active if f.rule_id.startswith("pallas-")]
+    assert not pallas, pallas
+
+
+# ---------------------------------------------------------------------------
+# pass 3: concurrency
+# ---------------------------------------------------------------------------
+
+
+def test_concurrency_write_outside_lock_flagged(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._val = 0
+
+            def set_locked(self, v):
+                with self._lock:
+                    self._val = v
+
+            def set_racy(self, v):
+                self._val = v
+        ''',
+    )
+    findings = _by_rule(result, "lock-discipline")
+    assert len(findings) == 1, findings
+    assert findings[0].line == 14
+
+
+def test_concurrency_thread_without_join_or_capture(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import threading
+
+        def work():
+            raise RuntimeError("dies silently")
+
+        def spawn():
+            t = threading.Thread(target=work)
+            t.start()
+        ''',
+    )
+    assert _by_rule(result, "thread-join"), "missing join path not flagged"
+    assert _by_rule(result, "thread-failure-propagation"), (
+        "uncaptured worker failure not flagged"
+    )
+
+
+def test_concurrency_clean_worker_stays_quiet(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import threading
+
+        class Runner:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._result = None
+                self._t = None
+
+            def start(self):
+                def work():
+                    try:
+                        out = 42
+                        with self._lock:
+                            self._result = out
+                    except BaseException as e:
+                        with self._lock:
+                            self._result = e
+
+                self._t = threading.Thread(target=work)
+                self._t.start()
+
+            def wait(self):
+                self._t.join()
+                with self._lock:
+                    return self._result
+        ''',
+    )
+    conc = [
+        f
+        for f in result.active
+        if f.rule_id
+        in ("lock-discipline", "thread-join", "thread-failure-propagation")
+    ]
+    assert not conc, conc
+
+
+# ---------------------------------------------------------------------------
+# pass 4: api hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_api_hygiene_forbidden_pallas_import(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        from jax.experimental import pallas as pl
+
+        def run(x):
+            return x
+        ''',
+    )
+    findings = _by_rule(result, "forbidden-import")
+    assert findings and findings[0].line == 2
+
+
+def test_api_hygiene_engine_registration_contract(tmp_path):
+    engines = tmp_path / "repro" / "core" / "engines"
+    engines.mkdir(parents=True)
+    (engines / "rogue.py").write_text(
+        textwrap.dedent(
+            '''
+            from repro.core.engines.base import SelectionEngine
+
+            class RogueEngine(SelectionEngine):
+                def select(self, gains):
+                    return gains
+            '''
+        )
+    )
+    result = run_analysis([engines])
+    findings = _by_rule(result, "engine-capabilities")
+    msgs = " ".join(f.message for f in findings)
+    assert "capabilities" in msgs and "register_engine" in msgs
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_with_reason_is_honored_but_reported(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            return x.item()  # repro-lint: disable=jit-host-sync  # fixture
+        ''',
+    )
+    assert not _by_rule(result, "jit-host-sync")
+    assert any(
+        f.rule_id == "jit-host-sync" and f.suppressed
+        for f in result.suppressed
+    )
+    assert result.exit_code == 0
+
+
+def test_suppression_without_reason_is_a_finding(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            return x.item()  # repro-lint: disable=jit-host-sync
+        ''',
+    )
+    assert _by_rule(result, "suppression-missing-reason")
+    assert result.exit_code == 1
+
+
+def test_suppression_covers_only_its_own_line(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            y = x.item()  # repro-lint: disable=jit-host-sync  # fixture
+            return x.tolist()
+        ''',
+    )
+    assert [f.line for f in _by_rule(result, "jit-host-sync")] == [8]
+
+
+# ---------------------------------------------------------------------------
+# framework plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    result = _lint(tmp_path, "def broken(:\n")
+    assert _by_rule(result, "parse-error")
+    assert result.exit_code == 1
+
+
+def test_rule_filter_restricts_output(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import jax
+
+        @jax.jit
+        def f(x, device_q):
+            return x.item()
+        ''',
+        rules=frozenset({"flat-engine-knob"}),
+    )
+    assert {f.rule_id for f in result.active} == {"flat-engine-knob"}
+
+
+def test_findings_sorted_and_serializable(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        import jax
+
+        @jax.jit
+        def f(x):
+            a = x.item()
+            b = x.tolist()
+            return a, b
+        ''',
+    )
+    lines = [f.line for f in result.active]
+    assert lines == sorted(lines)
+    for f in result.active:
+        d = f.to_dict()
+        assert d["rule_id"] and d["path"] and d["line"] > 0
