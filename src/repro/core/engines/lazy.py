@@ -44,7 +44,12 @@ def lazy_greedy_fl(
     cur_max = np.zeros(n)
     indices, gains = [], []
     if init_selected is not None:
-        for e in np.asarray(init_selected, np.int64)[:budget]:
+        init = np.asarray(init_selected, np.int64)
+        if init.shape[0] > budget:
+            raise ValueError(
+                f"init_selected has {init.shape[0]} elements > budget {budget}"
+            )
+        for e in init:
             e = int(e)
             indices.append(e)
             gains.append(float(np.maximum(sim[:, e] - cur_max, 0.0).sum()))

@@ -210,7 +210,12 @@ def sparse_greedy_fl(
     indices: list[int] = []
     gains: list[float] = []
     if init_selected is not None:
-        for c in np.asarray(init_selected, np.int64)[:budget]:
+        init = np.asarray(init_selected, np.int64)
+        if init.shape[0] > budget:
+            raise ValueError(
+                f"init_selected has {init.shape[0]} elements > budget {budget}"
+            )
+        for c in init:
             c = int(c)
             lo, hi = indptr[c], indptr[c + 1]
             indices.append(c)

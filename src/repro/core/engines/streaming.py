@@ -51,6 +51,7 @@ whose cost scales with the pool rather than the delta.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import ClassVar, NamedTuple
 
@@ -79,6 +80,7 @@ __all__ = [
     "ingest_delta",
     "num_sieves",
     "streaming_result",
+    "streaming_result_blocked",
 ]
 
 # Sentinel level for a sieve slot that has never been anchored (no element
@@ -353,15 +355,24 @@ def _ingest_delta(state: StreamingState, feats, idx, eps) -> StreamingState:
 ingest_delta = jax.jit(_ingest_delta, static_argnums=(3,))
 
 
-def streaming_result(state: StreamingState, feats: jax.Array, budget: int) -> FLResult:
-    """Finalize: best sieve → full FLResult against the pool.
+def streaming_result(
+    state: StreamingState, feats: jax.Array, budget: int, *, d_max=None
+) -> FLResult:
+    """Finalize: best sieve → full FLResult against the pool (dense sweep).
 
     ``feats`` is the (n,) pool the stored indices refer to (the service
     keeps it; the one-shot engine has it by construction).  Order: warm
     prefix (replayed), then the best sieve's picks in admission order, then
     worst-covered backfill (farthest-point) for any unfilled budget.  γ and
-    coverage use this call's own offset, so the frozen ingest-time ``d_max``
-    never leaks into reported units.
+    coverage use this call's own offset (or the caller's ``d_max`` — the
+    per-class selector passes one pool-wide offset so class coverages and
+    gains share units), so the frozen ingest-time ``d_max`` never leaks
+    into reported units.
+
+    This is the jit-traceable reference path — one dense matvec per budget
+    step plus an (n, budget) similarity materialization.  The host-side
+    :func:`streaming_result_blocked` computes the same result with blocked
+    tiles; CI asserts parity between the two.
     """
     feats = jnp.asarray(feats, jnp.float32)
     n, _ = feats.shape
@@ -374,7 +385,10 @@ def streaming_result(state: StreamingState, feats: jax.Array, budget: int) -> FL
         raise ValueError(f"warm prefix {r0} exceeds finalize budget {budget}")
 
     sq = jnp.sum(feats * feats, axis=-1)
-    d_maxf = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
+    if d_max is None:
+        d_maxf = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
+    else:
+        d_maxf = jnp.asarray(d_max, jnp.float32)
 
     def sim_cols(e_arr: jax.Array) -> jax.Array:
         """(n, m) similarity of every pool point to elements ``e_arr``."""
@@ -425,6 +439,199 @@ def streaming_result(state: StreamingState, feats: jax.Array, budget: int) -> FL
 
 
 # ---------------------------------------------------------------------------
+# Blocked finalize: the host-side fast path (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# The dense ``streaming_result`` pays one O(n·d) matvec per budget step plus
+# a final dense (n, budget) materialization.  The blocked path exploits a
+# structural fact of the finalize scan: a backfill (farthest-point) step can
+# only occur once the sieve's picks are exhausted (``t ≥ ccount``), and sieve
+# picks are distinct and disjoint from the warm prefix, so the dense pick
+# sequence decomposes into [prefix | sieve picks | backfill suffix].  The
+# first two segments are known up front — a *blocked* sequential replay
+# (one (block_n × block_m) similarity tile per matmul, prefix-cummax for the
+# per-column cover state) replaces per-step matvecs — and only the short
+# backfill suffix stays sequential.  γ assignment and coverage ride along as
+# a running per-row (best value, best position) pair, so the (n, budget)
+# similarity matrix is never materialized.
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def _replay_blocked_jax(feats, sq, d_maxf, ef, esq, valid, cur0, block_m: int):
+    """Blocked-jnp sequential replay (the CPU/GPU twin of ``kops.fl_replay``).
+
+    ``ef``/``esq``/``valid`` are block-padded (m % block_m == 0); dead
+    columns have valid=False.  Returns (gains (m,), cur (n,), best_v (n,),
+    best_i (n,)) with the same semantics as the Pallas kernel.
+    """
+    n = feats.shape[0]
+    nblk = ef.shape[0] // block_m
+    ef_b = ef.reshape(nblk, block_m, -1)
+    esq_b = esq.reshape(nblk, block_m)
+    val_b = valid.reshape(nblk, block_m)
+
+    def blk(carry, xs):
+        cur, bv, bi, base = carry
+        eb, eqb, vb = xs
+        d2 = sq[:, None] + eqb[None, :] - 2.0 * (feats @ eb.T)
+        s = d_maxf - jnp.sqrt(jnp.maximum(d2, 0.0))  # (n, bm)
+        s_cov = jnp.where(vb[None, :], s, -1e30)
+        run = jax.lax.cummax(s_cov, axis=1)
+        prev = jnp.maximum(
+            cur[:, None],
+            jnp.concatenate(
+                [jnp.full((n, 1), -1e30, jnp.float32), run[:, :-1]], axis=1
+            ),
+        )
+        gains = jnp.sum(jnp.maximum(s_cov - prev, 0.0), axis=0)  # (bm,)
+        cur = jnp.maximum(cur, run[:, -1])
+        bvb = jnp.max(s_cov, axis=1)
+        bib = jnp.argmax(s_cov, axis=1).astype(jnp.int32) + base
+        upd = bvb > bv  # strict: earlier block wins ties, like jnp.argmax
+        return (
+            (cur, jnp.where(upd, bvb, bv), jnp.where(upd, bib, bi),
+             base + block_m),
+            gains,
+        )
+
+    carry0 = (
+        cur0,
+        jnp.full((n,), -1e30, jnp.float32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.int32(0),
+    )
+    (cur, bv, bi, _), gs = jax.lax.scan(blk, carry0, (ef_b, esq_b, val_b))
+    return gs.reshape(-1), cur, bv, bi
+
+
+@jax.jit
+def _backfill_step(feats, sq, d_maxf, cur, chosen, bv, bi, pos):
+    """One farthest-point backfill pick + incremental γ/coverage update."""
+    resid = jnp.where(chosen, -jnp.inf, d_maxf - cur)
+    e = jnp.argmax(resid).astype(jnp.int32)
+    x = feats[e]
+    d2 = sq + jnp.sum(x * x) - 2.0 * (feats @ x)
+    col = d_maxf - jnp.sqrt(jnp.maximum(d2, 0.0))
+    gain = jnp.sum(jnp.maximum(col - cur, 0.0))
+    upd = col > bv
+    return (
+        e,
+        gain,
+        jnp.maximum(cur, col),
+        chosen.at[e].set(True),
+        jnp.where(upd, col, bv),
+        jnp.where(upd, pos, bi),
+    )
+
+
+def streaming_result_blocked(
+    state: StreamingState,
+    feats: jax.Array,
+    budget: int,
+    *,
+    d_max=None,
+    impl: str = "auto",
+    block_m: int = 128,
+) -> FLResult:
+    """Blocked finalize: same result as :func:`streaming_result`, without
+    the per-step dense sweep.  Host-side only (it pulls the best sieve's
+    tiny metadata to plan the replay) — the jit-safe engine path keeps the
+    dense reference.
+
+    ``impl``: 'auto' (Pallas on TPU, blocked jnp elsewhere) | 'pallas' |
+    'jax' | 'dense' (delegate to the reference path).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jax"
+    if impl == "dense":
+        return streaming_result(state, feats, budget, d_max=d_max)
+    if impl not in ("pallas", "jax"):
+        raise ValueError(f"unknown finalize impl {impl!r}")
+    feats = jnp.asarray(feats, jnp.float32)
+    n, _ = feats.shape
+    budget = int(min(int(budget), n))
+    if budget < 1:
+        raise ValueError(f"budget must be ≥ 1, got {budget}")
+    k = state.capacity
+    r0 = state.pre_idx.shape[0]
+    if r0 > budget:
+        raise ValueError(f"warm prefix {r0} exceeds finalize budget {budget}")
+
+    # Host-static pick plan from the sieve's O(L + k) metadata.
+    pre = np.asarray(state.pre_idx, np.int64)
+    if k > 0:
+        best = int(np.argmax(np.asarray(state.fval)))
+        cand = np.clip(np.asarray(state.sel_idx[best], np.int64), -1, n - 1)
+        ccount = int(np.asarray(state.count)[best])
+    else:
+        cand = np.zeros((0,), np.int64)
+        ccount = 0
+    u = max(0, min(ccount, budget - r0))
+    ordered = np.concatenate([pre, cand[:u]])
+    if len(ordered) and (
+        (ordered < 0).any() or len(np.unique(ordered)) != len(ordered)
+    ):
+        # a sieve pick collides with the prefix or repeats — can only happen
+        # on a malformed state; the dense scan's per-step guards handle it
+        return streaming_result(state, feats, budget, d_max=d_max)
+
+    sq = jnp.sum(feats * feats, axis=-1)
+    if d_max is None:
+        d_maxf = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
+    else:
+        d_maxf = jnp.asarray(d_max, jnp.float32)
+
+    m = len(ordered)
+    if m > 0:
+        eidx = jnp.asarray(ordered, jnp.int32)
+        ef = feats[eidx]
+        if impl == "pallas":
+            from repro.kernels import ops as kops  # lazy: keep import light
+
+            gains_o, cur, bv, bi = kops.fl_replay(
+                feats, ef, jnp.ones((m,), bool), jnp.zeros((n,), jnp.float32),
+                d_maxf, block_m=block_m,
+            )
+        else:
+            pad = (-m) % block_m
+            ef_p = jnp.pad(ef, ((0, pad), (0, 0)))
+            esq_p = jnp.pad(jnp.sum(ef * ef, axis=-1), (0, pad))
+            val_p = jnp.pad(jnp.ones((m,), bool), (0, pad))
+            gains_o, cur, bv, bi = _replay_blocked_jax(
+                feats, sq, d_maxf, ef_p, esq_p, val_p,
+                jnp.zeros((n,), jnp.float32), block_m,
+            )
+        gains_o = gains_o[:m]
+        chosen = jnp.zeros((n,), bool).at[eidx].set(True)
+    else:
+        gains_o = jnp.zeros((0,), jnp.float32)
+        cur = jnp.zeros((n,), jnp.float32)
+        bv = jnp.full((n,), -1e30, jnp.float32)
+        bi = jnp.zeros((n,), jnp.int32)
+        chosen = jnp.zeros((n,), bool)
+
+    back_idx, back_gains = [], []
+    for t in range(budget - m):
+        e, g, cur, chosen, bv, bi = _backfill_step(
+            feats, sq, d_maxf, cur, chosen, bv, bi, jnp.int32(m + t)
+        )
+        back_idx.append(e)
+        back_gains.append(g)
+
+    indices = jnp.concatenate(
+        [jnp.asarray(ordered, jnp.int32), jnp.stack(back_idx)]
+        if back_idx
+        else [jnp.asarray(ordered, jnp.int32)]
+    )
+    gains = jnp.concatenate(
+        [gains_o, jnp.stack(back_gains)] if back_gains else [gains_o]
+    ).astype(jnp.float32)
+    weights = jnp.zeros((budget,), jnp.float32).at[bi].add(1.0)
+    coverage = jnp.sum(d_maxf - bv)
+    return FLResult(indices, gains, weights, coverage)
+
+
+# ---------------------------------------------------------------------------
 # Registry plugin: one-shot select behind the common protocol
 # ---------------------------------------------------------------------------
 
@@ -439,11 +646,18 @@ class StreamingConfig(EngineConfig):
         more state and per-element work.
       levels: sieve-slot count override (0 = auto: span ``[m, 2·budget·m]``,
         capped at 64 — see :func:`num_sieves`).
+      finalize_impl: blocked-finalize backend for ``StreamingSelector``
+        ('auto' = Pallas on TPU / blocked jnp elsewhere; 'pallas' | 'jax' |
+        'dense').  The one-shot jit-safe ``StreamingEngine.select`` always
+        uses the dense reference path — it must stay traceable.
+      finalize_block_m: candidate-block width of the blocked finalize.
     """
 
     name: ClassVar[str] = "streaming"
     eps: float = 0.15
     levels: int = 0
+    finalize_impl: str = "auto"
+    finalize_block_m: int = 128
 
 
 @register_engine
@@ -467,7 +681,12 @@ class StreamingEngine(SelectionEngine):
         n = feats.shape[0]
         budget = int(min(int(budget), n))
         if init_selected is not None:
-            init_idx = jnp.asarray(init_selected, jnp.int32).ravel()[:budget]
+            init_idx = jnp.asarray(init_selected, jnp.int32).ravel()
+            if init_idx.shape[0] > budget:
+                raise ValueError(
+                    f"init_selected has {init_idx.shape[0]} elements > "
+                    f"budget {budget}"
+                )
             state = init_streaming_state(
                 budget,
                 feats.shape[1],
@@ -542,10 +761,16 @@ class StreamingSelector:
     Pool indexing: deltas are assigned positions in arrival order, so the
     ``feats`` passed to :meth:`result` must be the ingested deltas
     concatenated in ingest order (the coreset service maintains exactly
-    that buffer).
+    that buffer).  With ``evict=True`` the positions are *live-pool*
+    coordinates instead: :meth:`compact` drops every row no sieve
+    references, the caller applies the same row selection to its buffer,
+    and :attr:`live_ids` maps live positions back to global arrival order
+    — memory becomes O(L·k·d) instead of O(n·d) for unbounded streams, and
+    γ then sums to the live-pool size rather than ``n_seen``.
 
     ``state_dict`` / ``load_state_dict`` round-trip the full mid-stream
-    state (JSON-able — rides ``CheckpointManager`` extras) bit-identically.
+    state (JSON-able — rides ``CheckpointManager`` extras) bit-identically,
+    including the compaction remap.
     """
 
     def __init__(
@@ -556,6 +781,7 @@ class StreamingSelector:
         config: StreamingConfig | None = None,
         metric: str = "l2",
         per_class: bool = False,
+        evict: bool = False,
         init_selected=None,
         init_feats=None,
     ):
@@ -576,9 +802,13 @@ class StreamingSelector:
         self.config = config
         self.metric = metric
         self.per_class = bool(per_class)
+        self.evict = bool(evict)
         self._n_seen = 0
+        self._n_rows = 0  # live pool rows (== n_seen unless evict compacts)
+        self._live = np.zeros((0,), np.int64)  # live pos -> global arrival id
+        self._class_seen: dict = {}  # label -> total arrivals (pre-eviction)
         self._states: dict = {}
-        self._rows: dict = {}  # label -> np.int64 global positions, arrival order
+        self._rows: dict = {}  # label -> pool positions, class-arrival order
         if not per_class:
             init_feats = (
                 None
@@ -595,8 +825,21 @@ class StreamingSelector:
 
     @property
     def n_seen(self) -> int:
-        """Total points ingested so far."""
+        """Total points ingested so far (monotone; eviction never lowers it)."""
         return self._n_seen
+
+    @property
+    def n_rows(self) -> int:
+        """Live pool rows the next :meth:`result` call expects."""
+        return self._n_rows
+
+    @property
+    def live_ids(self) -> np.ndarray:
+        """(n_rows,) int64 — global arrival id of each live pool position
+        (the identity map unless ``evict=True`` has compacted)."""
+        if not self.evict:
+            return np.arange(self._n_rows, dtype=np.int64)
+        return self._live.copy()
 
     def ingest(self, feats, labels=None) -> int:
         """Ingest one megabatch delta; returns the running pool size.
@@ -627,33 +870,97 @@ class StreamingSelector:
                     self._states[key], feats[np.nonzero(mask)[0]],
                     jnp.asarray(local), self.config.eps,
                 )
-                rows.extend((self._n_seen + np.nonzero(mask)[0]).tolist())
+                rows.extend((self._n_rows + np.nonzero(mask)[0]).tolist())
+                self._class_seen[key] = (
+                    self._class_seen.get(key, 0) + int(mask.sum())
+                )
         else:
-            idx = self._n_seen + jnp.arange(dn, dtype=jnp.int32)
+            idx = self._n_rows + jnp.arange(dn, dtype=jnp.int32)
             self._states[_FLAT] = ingest_delta(
                 self._states[_FLAT], feats, idx, self.config.eps
             )
+        if self.evict:
+            self._live = np.concatenate(
+                [self._live, self._n_seen + np.arange(dn, dtype=np.int64)]
+            )
         self._n_seen += int(dn)
+        self._n_rows += int(dn)
         return self._n_seen
+
+    def compact(self) -> np.ndarray:
+        """Evict pool rows no sieve references (``evict=True`` only).
+
+        Keeps exactly the rows referenced by any sieve's ``sel_idx`` or the
+        warm prefix, remaps every stored index into the compacted
+        coordinates, and returns the kept positions (into the
+        pre-compaction pool order, ascending) — the caller MUST apply the
+        same row selection to its pool buffer before the next
+        :meth:`result`.  A no-op identity when ``evict=False``.
+        """
+        if not self.evict or self._n_rows == 0:
+            return np.arange(self._n_rows, dtype=np.int64)
+        if not self.per_class:
+            st = self._states[_FLAT]
+            sel = np.asarray(st.sel_idx, np.int64)
+            pre = np.asarray(st.pre_idx, np.int64)
+            keep = np.unique(np.concatenate([sel[sel >= 0].ravel(), pre]))
+            new_sel = np.where(
+                sel >= 0, np.searchsorted(keep, np.clip(sel, 0, None)), -1
+            ).astype(np.int32)
+            self._states[_FLAT] = st._replace(
+                sel_idx=jnp.asarray(new_sel),
+                pre_idx=jnp.asarray(np.searchsorted(keep, pre), jnp.int32),
+            )
+        else:
+            keep_mask = np.zeros(self._n_rows, bool)
+            kept_local: dict = {}
+            for c, st in self._states.items():
+                sel = np.asarray(st.sel_idx, np.int64)
+                kl = np.unique(sel[sel >= 0].ravel())
+                kept_local[c] = kl
+                rows_c = np.asarray(self._rows[c], np.int64)
+                keep_mask[rows_c[kl]] = True
+            keep = np.nonzero(keep_mask)[0].astype(np.int64)
+            pool_remap = np.full(self._n_rows, -1, np.int64)
+            pool_remap[keep] = np.arange(len(keep))
+            for c, st in self._states.items():
+                kl = kept_local[c]
+                sel = np.asarray(st.sel_idx, np.int64)
+                new_sel = np.where(
+                    sel >= 0, np.searchsorted(kl, np.clip(sel, 0, None)), -1
+                ).astype(np.int32)
+                self._states[c] = st._replace(sel_idx=jnp.asarray(new_sel))
+                rows_c = np.asarray(self._rows[c], np.int64)
+                self._rows[c] = pool_remap[rows_c[kl]].tolist()
+        self._live = self._live[keep]
+        self._n_rows = int(len(keep))
+        return keep
 
     def result(self, feats) -> FLResult:
         """Finalize the current selection against the accumulated pool.
 
         ``feats`` must be the ingested deltas concatenated in arrival
-        order (rows align with the positions ``ingest`` assigned).
+        order (rows align with the positions ``ingest`` assigned); after a
+        :meth:`compact`, the same row selection must have been applied.
+        Indices in the result are pool positions — map through
+        :attr:`live_ids` for global arrival ids when ``evict=True``.
         """
         feats = normalize_for_metric(jnp.asarray(feats, jnp.float32), self.metric)
         n = feats.shape[0]
-        if n != self._n_seen:
+        if n != self._n_rows:
             raise ValueError(
-                f"pool has {n} rows but {self._n_seen} were ingested — "
-                "result() needs the ingested deltas concatenated in order"
+                f"pool has {n} rows but {self._n_rows} are live — result() "
+                "needs the ingested deltas concatenated in order, compacted "
+                "in lockstep with compact()"
             )
         if n == 0:
             raise ValueError("nothing ingested yet")
+        impl = self.config.finalize_impl
+        bm = self.config.finalize_block_m
         if not self.per_class:
-            res = streaming_result(
-                self._states[_FLAT], feats, min(self.budget, n)
+            res = streaming_result_blocked(
+                self._states[_FLAT], feats, min(self.budget, n),
+                impl=impl, block_m=bm,
             )
             if self.metric == "cosine":
                 res = res._replace(
@@ -665,16 +972,27 @@ class StreamingSelector:
         from repro.core.craig import _apportion_budgets  # lazy: avoid cycle
 
         classes = sorted(self._states)
-        counts = np.array([len(self._rows[c]) for c in classes], np.int64)
+        counts = np.array(
+            [self._class_seen.get(c, len(self._rows[c])) for c in classes],
+            np.int64,
+        )
         budgets = _apportion_budgets(counts, min(self.budget, n))
+        # one pool-wide offset so per-class gains/coverages share units
+        # (each subpool's own d_max would make classes incommensurable)
+        sq = jnp.sum(feats * feats, axis=-1)
+        d_max_pool = 2.0 * jnp.sqrt(jnp.max(sq)) + 1e-6
         all_idx, all_gains, all_w = [], [], []
         coverage = 0.0
         for c, b in zip(classes, budgets):
+            b = int(min(b, len(self._rows[c])))
             if b == 0:
                 continue
             rows = np.asarray(self._rows[c], np.int64)
             sub = feats[rows]
-            r = streaming_result(self._states[c], sub, int(b))
+            r = streaming_result_blocked(
+                self._states[c], sub, b,
+                d_max=d_max_pool, impl=impl, block_m=bm,
+            )
             all_idx.append(rows[np.asarray(r.indices, np.int64)])
             all_gains.append(np.asarray(r.gains, np.float32))
             all_w.append(np.asarray(r.weights, np.float32))
@@ -693,13 +1011,20 @@ class StreamingSelector:
     # -- serialization -------------------------------------------------------
 
     def state_dict(self) -> dict:
-        """JSON-able full snapshot (config + per-class sieve states)."""
+        """JSON-able full snapshot (config + per-class sieve states + the
+        eviction remap)."""
         return {
             "budget": self.budget,
             "dim": self.dim,
             "metric": self.metric,
             "per_class": self.per_class,
+            "evict": self.evict,
             "n_seen": self._n_seen,
+            "n_rows": self._n_rows,
+            "live": self._live.tolist(),
+            "class_seen": {
+                str(key): int(v) for key, v in self._class_seen.items()
+            },
             "config": self.config.to_dict(),
             "states": {
                 str(key): _state_to_dict(st) for key, st in self._states.items()
@@ -716,10 +1041,16 @@ class StreamingSelector:
         self.dim = int(d["dim"])
         self.metric = d["metric"]
         self.per_class = bool(d["per_class"])
+        self.evict = bool(d.get("evict", False))
         self.config = cfg
         self._n_seen = int(d["n_seen"])
+        self._n_rows = int(d.get("n_rows", d["n_seen"]))
+        self._live = np.asarray(d.get("live", []), np.int64)
         self._states = {
             (key if key == _FLAT else int(key)): _state_from_dict(sd)
             for key, sd in d["states"].items()
         }
         self._rows = {int(key): list(rows) for key, rows in d["rows"].items()}
+        self._class_seen = {
+            int(key): int(v) for key, v in d.get("class_seen", {}).items()
+        } or {c: len(r) for c, r in self._rows.items()}

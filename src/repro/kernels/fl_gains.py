@@ -57,11 +57,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels._compat import tpu_params
+from repro.kernels._compat import pltpu, tpu_params
 
 _TPU_PARAMS = tpu_params("parallel", "arbitrary")
+_REPLAY_PARAMS = tpu_params("arbitrary", "arbitrary")
 
-__all__ = ["fl_gains_pallas", "fl_gains_argmax_pallas"]
+__all__ = ["fl_gains_pallas", "fl_gains_argmax_pallas", "fl_replay_pallas"]
 
 
 def _first_hit(values: jax.Array, target: jax.Array) -> jax.Array:
@@ -261,3 +262,158 @@ def fl_gains_argmax_pallas(
         penalty.astype(jnp.float32),
     )
     return gains[0], bg[0], bi[0]
+
+
+def _replay_kernel(
+    x_ref, e_ref, sqx_ref, sqe_ref, valid_ref, dm_ref, cur0_ref,
+    gains_ref, cur_ref, bv_ref, bi_ref,
+    cur_s, bv_s, bi_s,
+):
+    """Grid = (n_blocks, m_blocks); m (candidate order) is the inner axis.
+
+    Each row block sweeps the ordered candidate blocks sequentially: the
+    cover state ``cur`` and running per-row argmax ``(best_val, best_pos)``
+    live in (block_n, 1) VMEM scratch across the inner sweep.  Within a
+    block the candidates replay one column at a time (``fori_loop`` over
+    the bm lanes — the greedy recurrence is inherently sequential), but the
+    similarity tile itself comes from one MXU matmul.  Gains partials are
+    written per (ni, mi) block — distinct output blocks, no revisiting —
+    and the host sums the n_blocks partial rows.
+    """
+    mi = pl.program_id(1)
+    bn = x_ref.shape[0]
+    bm = e_ref.shape[0]
+
+    @pl.when(mi == 0)
+    def _init_row_state():
+        cur_s[...] = cur0_ref[...]
+        bv_s[...] = jnp.full((bn, 1), -1e30, jnp.float32)
+        bi_s[...] = jnp.zeros((bn, 1), jnp.int32)
+
+    dots = jax.lax.dot_general(
+        x_ref[...],
+        e_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bn, bm)
+    d2 = sqx_ref[...] + sqe_ref[...] - 2.0 * dots
+    s = dm_ref[...] - jnp.sqrt(jnp.maximum(d2, 0.0))
+    # dead columns (padding / caller-masked) must neither gain nor cover
+    s_cov = jnp.where(valid_ref[...] > 0.0, s, -1e30)
+
+    col_pos = jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
+
+    def step(t, carry):
+        cur, gacc = carry
+        hit = col_pos == t  # (1, bm) one-hot lane mask
+        col = jnp.max(jnp.where(hit, s_cov, -1e30), axis=1, keepdims=True)
+        g = jnp.sum(jnp.maximum(col - cur, 0.0))  # dead col → relu 0
+        gacc = gacc + jnp.where(hit, g, 0.0)
+        return jnp.maximum(cur, col), gacc
+
+    cur_fin, gblk = jax.lax.fori_loop(
+        0, bm, step, (cur_s[...], jnp.zeros((1, bm), jnp.float32))
+    )
+    cur_s[...] = cur_fin
+    gains_ref[...] = gblk
+
+    # per-row argmax over candidate columns (γ assignment): strict > keeps
+    # the earlier block on ties; _first_hit keeps the lowest lane in-block —
+    # together exactly jnp.argmax's lowest-index tie rule over the full list
+    bval = jnp.max(s_cov, axis=1, keepdims=True)  # (bn, 1)
+    bpos = _first_hit(s_cov, bval)
+    upd = bval > bv_s[...]
+    bv_new = jnp.where(upd, bval, bv_s[...])
+    bi_new = jnp.where(upd, mi * bm + bpos, bi_s[...])
+    bv_s[...] = bv_new
+    bi_s[...] = bi_new
+    cur_ref[...] = cur_fin
+    bv_ref[...] = bv_new
+    bi_ref[...] = bi_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def fl_replay_pallas(
+    x: jax.Array,
+    e: jax.Array,
+    sqx: jax.Array,
+    sqe: jax.Array,
+    valid: jax.Array,
+    dm: jax.Array,
+    cur0: jax.Array,
+    *,
+    block_n: int = 512,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Blocked sequential facility-location replay of an ordered candidate
+    list (the streaming finalize sweep, DESIGN.md §10).
+
+    Replays candidates ``e`` (rows, in selection order) against pool ``x``:
+    gains[t] = Σ_i relu(s_it − max(cur0_i, max_{t'<t} s_it')), plus the
+    final cover state and each pool row's best candidate (value, position)
+    for γ assignment.  One MXU matmul per (block_n, block_m) tile replaces
+    the per-candidate dense matvec of the naive replay.
+
+    Args:
+      x: (n, d) fp32 pool, n % block_n == 0, d % 128 == 0.
+      e: (m, d) fp32 ordered candidates, m % block_m == 0.
+      sqx: (n, 1) fp32 squared norms of x (pad rows: see cur0).
+      sqe: (1, m) fp32 squared norms of e.
+      valid: (1, m) fp32 — 1 for live candidate columns, 0 for padding
+        (dead columns contribute no gain, no cover, never win assignment).
+      dm: (1, 1) fp32 similarity offset (s = dm − dist).
+      cur0: (n, 1) fp32 initial cover state; padded pool rows carry +1e30
+        so they contribute 0 to every gain.
+    Returns:
+      (gains (n_blocks, m) fp32 partials — sum axis 0 for the totals,
+       cur (n, 1) fp32, best_v (n, 1) fp32, best_i (n, 1) int32).
+    """
+    n, d = x.shape
+    m = e.shape[0]
+    assert n % block_n == 0 and m % block_m == 0, (n, m, block_n, block_m)
+    n_blocks = n // block_n
+    m_blocks = m // block_m
+    grid = (n_blocks, m_blocks)
+    return pl.pallas_call(
+        _replay_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda ni, mi: (ni, 0)),
+            pl.BlockSpec((block_m, d), lambda ni, mi: (mi, 0)),
+            pl.BlockSpec((block_n, 1), lambda ni, mi: (ni, 0)),
+            pl.BlockSpec((1, block_m), lambda ni, mi: (0, mi)),
+            pl.BlockSpec((1, block_m), lambda ni, mi: (0, mi)),
+            pl.BlockSpec((1, 1), lambda ni, mi: (0, 0)),
+            pl.BlockSpec((block_n, 1), lambda ni, mi: (ni, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m), lambda ni, mi: (ni, mi)),
+            pl.BlockSpec((block_n, 1), lambda ni, mi: (ni, 0)),
+            pl.BlockSpec((block_n, 1), lambda ni, mi: (ni, 0)),
+            pl.BlockSpec((block_n, 1), lambda ni, mi: (ni, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, m), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_n, 1), jnp.float32),  # cover state
+            pltpu.VMEM((block_n, 1), jnp.float32),  # best value
+            pltpu.VMEM((block_n, 1), jnp.int32),  # best position
+        ],
+        compiler_params=_REPLAY_PARAMS,
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32),
+        e.astype(jnp.float32),
+        sqx.astype(jnp.float32),
+        sqe.astype(jnp.float32),
+        valid.astype(jnp.float32),
+        dm.astype(jnp.float32),
+        cur0.astype(jnp.float32),
+    )

@@ -19,6 +19,7 @@ from repro.kernels import topk_sim as _tk
 __all__ = [
     "fl_gains",
     "fl_gains_argmax",
+    "fl_replay",
     "pairwise_l2",
     "ce_proxy",
     "topk_sim",
@@ -155,6 +156,75 @@ def fl_gains_argmax(
         block_n=bn, block_m=bm, interpret=interpret,
     )
     return gains[:m], part_g, part_i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def fl_replay(
+    x: jax.Array,
+    e: jax.Array,
+    valid: jax.Array,
+    cur0: jax.Array,
+    d_max: jax.Array,
+    *,
+    block_n: int = 512,
+    block_m: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sequential FL replay of an ordered candidate list (streaming finalize).
+
+    gains[t] = Σ_i relu(s_it − max(cur0_i, max_{t'<t} s_it')) with
+    s_it = d_max − ‖x_i − e_t‖, i.e. the marginal-gain sequence a greedy
+    run would record if it accepted candidates in exactly row order of
+    ``e``.  Also returns the final cover state and each pool row's best
+    candidate (value, row position of ``e``) for γ assignment —
+    lowest-position on ties, matching ``jnp.argmax``.
+
+    Padding: pool rows pad with cur0 = +1e30 (inert: relu 0 in every gain,
+    garbage best sliced off); candidate rows pad with valid = 0 (no gain,
+    no cover, can never win assignment).
+
+    Args:
+      x: (n, d) pool features.
+      e: (m, d) candidates, rows in selection order.
+      valid: (m,) bool — False masks a candidate out entirely.
+      cur0: (n,) fp32 initial cover state (zeros for a cold replay).
+      d_max: traced fp32 scalar similarity offset.
+    Returns:
+      (gains (m,) fp32, cur (n,) fp32, best_v (n,) fp32, best_i (n,) int32).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n, d = x.shape
+    m = e.shape[0]
+    x = x.astype(jnp.float32)
+    e = e.astype(jnp.float32)
+    sqx = jnp.sum(x * x, axis=1)
+    sqe = jnp.sum(e * e, axis=1)
+    bn = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    bm = min(block_m, max(_LANE, 1 << max(m - 1, 0).bit_length()))
+    xp = _pad_dim(_pad_dim(x, 0, bn), 1, _LANE)
+    ep = _pad_dim(_pad_dim(e, 0, bm), 1, _LANE)
+    sqxp = _pad_dim(sqx.reshape(n, 1), 0, bn)
+    sqep = _pad_dim(sqe.reshape(1, m), 1, bm)
+    vp = _pad_dim(
+        valid.astype(jnp.float32).reshape(1, m), 1, bm, value=0.0
+    )
+    curp = _pad_dim(
+        cur0.astype(jnp.float32).reshape(n, 1), 0, bn, value=1e30
+    )
+    dm = jnp.asarray(d_max, jnp.float32).reshape(1, 1)
+    gains, cur, bv, bi = _fl.fl_replay_pallas(
+        xp, ep, sqxp, sqep, vp, dm, curp,
+        block_n=bn, block_m=bm, interpret=interpret,
+    )
+    return (
+        jnp.sum(gains, axis=0)[:m],
+        cur[:n, 0],
+        bv[:n, 0],
+        bi[:n, 0],
+    )
 
 
 @functools.partial(

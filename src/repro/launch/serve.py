@@ -15,7 +15,7 @@ line, one JSON response per stdout line:
         -> {"ok": true, "version": v, "n_seen": n}
     {"op": "coreset"}
         -> {"ok": true, "version": v, "indices": [...], "gamma": [...],
-            "n_seen": n, "coverage": c}
+            "n_seen": n, "n_live": l, "coverage": c}
     {"op": "quit"}   -> {"ok": true, "bye": true}
     anything invalid -> {"ok": false, "error": "..."}   (service keeps running)
 
@@ -53,6 +53,7 @@ def _serve_coreset(args, stdin=None, stdout=None) -> None:
         metric=args.metric,
         per_class=args.per_class,
         mode="sync",
+        evict=args.evict,
     )
 
     def reply(obj: dict) -> None:
@@ -81,6 +82,7 @@ def _serve_coreset(args, stdin=None, stdout=None) -> None:
                             "indices": u.indices.tolist(),
                             "gamma": u.weights.tolist(),
                             "n_seen": u.n_seen,
+                            "n_live": u.n_live,
                             "coverage": u.coverage,
                         }
                     )
@@ -109,6 +111,9 @@ def main(argv=None) -> None:
     ap.add_argument("--per-class", action="store_true")
     ap.add_argument("--eps", type=float, default=0.15)
     ap.add_argument("--levels", type=int, default=0)
+    ap.add_argument("--evict", action="store_true",
+                    help="bounded-memory mode: drop pool rows no sieve "
+                         "references after every drain (O(L·k·d) state)")
     args = ap.parse_args(argv)
 
     if args.coreset:

@@ -46,7 +46,9 @@ class CoresetUpdate:
 
     ``version`` is the refresher's drain counter (one per coalesced ingest
     job, monotone); ``n_seen`` the pool size the selection covers;
-    ``weights`` the γ cluster sizes (Σγ == n_seen).
+    ``weights`` the γ cluster sizes (Σγ == n_live); ``n_live`` the rows
+    surviving eviction (== n_seen unless the service evicts).  ``indices``
+    are always global arrival positions, eviction or not.
     """
 
     version: int
@@ -54,6 +56,7 @@ class CoresetUpdate:
     weights: np.ndarray
     coverage: float
     n_seen: int
+    n_live: int = -1
 
 
 class CoresetService:
@@ -70,6 +73,10 @@ class CoresetService:
       mode: 'sync' — drains run inline in :meth:`submit_delta` (the
         deterministic baseline); 'async' — drains run on the refresher's
         worker thread and coalesce while it is busy.
+      evict: drop pool rows no sieve references after every drain — the
+        pool buffer (and the serialized snapshot) stays O(L·k·d) instead
+        of O(n·d) for unbounded streams.  Published indices stay global
+        arrival positions either way; γ then sums to ``n_live``.
     """
 
     def __init__(
@@ -81,11 +88,14 @@ class CoresetService:
         metric: str = "l2",
         per_class: bool = False,
         mode: Literal["sync", "async"] = "sync",
+        evict: bool = False,
     ):
         self.budget = int(budget)
         self.dim = int(dim)
+        self.evict = bool(evict)
         self.selector = StreamingSelector(
-            budget, dim, config=config, metric=metric, per_class=per_class
+            budget, dim, config=config, metric=metric, per_class=per_class,
+            evict=evict,
         )
         self._pool: list[np.ndarray] = []  # deltas in ingest order (worker-owned)
         self._lock = threading.Lock()
@@ -135,19 +145,29 @@ class CoresetService:
     # -- worker side ---------------------------------------------------------
 
     def _ingest_job(self, deltas: list):
-        """One coalesced drain: ingest every queued delta, finalize once."""
+        """One coalesced drain: ingest every queued delta, (optionally)
+        evict dead pool rows, finalize once."""
         for feats, labels in deltas:
             self.selector.ingest(feats, labels=labels)
             self._pool.append(feats)
-        res = self.selector.result(np.concatenate(self._pool, axis=0))
+        pool = np.concatenate(self._pool, axis=0)
+        if self.evict:
+            keep = self.selector.compact()
+            pool = np.ascontiguousarray(pool[keep])
+            self._pool = [pool]
+        res = self.selector.result(pool)
+        indices = np.asarray(res.indices, np.int64)
+        if self.evict:  # live-pool positions → global arrival ids
+            indices = self.selector.live_ids[indices]
         return (
-            np.asarray(res.indices, np.int64),
+            indices,
             np.asarray(res.weights, np.float32),
             float(res.coverage),
+            self.selector.n_rows,
         )
 
     def _stage(self, res: RefreshResult) -> None:
-        indices, weights, coverage = res.value
+        indices, weights, coverage, n_live = res.value
         with self._lock:
             self._staged = CoresetUpdate(
                 version=res.version,
@@ -155,6 +175,7 @@ class CoresetService:
                 weights=weights,
                 coverage=coverage,
                 n_seen=self.selector.n_seen,
+                n_live=n_live,
             )
 
     # -- serialization -------------------------------------------------------
@@ -164,7 +185,9 @@ class CoresetService:
 
         Callers drain (``coreset(block=True)``) before snapshotting, same
         as the trainer's checkpoint discipline — an in-flight drain always
-        materializes before the save.
+        materializes before the save.  With ``evict=True`` every drain
+        compacts the pool first, so the serialized pool holds only live
+        rows — O(L·k·d) text, not O(n·d).
         """
         self.refresher.wait()
         with self._lock:
@@ -180,6 +203,7 @@ class CoresetService:
                 "weights": installed.weights.tolist(),
                 "coverage": installed.coverage,
                 "n_seen": installed.n_seen,
+                "n_live": installed.n_live,
             },
         }
 
@@ -200,6 +224,7 @@ class CoresetService:
                     weights=np.asarray(inst["weights"], np.float32),
                     coverage=float(inst["coverage"]),
                     n_seen=int(inst["n_seen"]),
+                    n_live=int(inst.get("n_live", inst["n_seen"])),
                 )
             )
         self.refresher.reset_version(self.version)

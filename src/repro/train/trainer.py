@@ -87,6 +87,12 @@ class TrainerConfig:
     refresh_mode: Literal["sync", "async"] = "async"  # DESIGN.md §4 lifecycle
     warm_start_fraction: float = 0.5  # share of the budget warm-started from
     # the previous refresh's high-gain prefix (0 = cold every refresh)
+    streaming_ingest: bool = False  # grow-only corpora: feed docs appended
+    # since the last boundary through AsyncRefresher.ingest (sieve-streaming,
+    # O(Δn·k) per delta) instead of re-extracting the full pool per refresh
+    # (DESIGN.md §10).  Budget is fixed at craig.fraction × the first delta.
+    streaming_evict: bool = True  # bounded-memory sieve pool: drop rows no
+    # sieve references after every drain (O(L·k·d) instead of O(n·d))
     checkpoint_every: int = 50
     checkpoint_dir: str | None = None
     keep_checkpoints: int = 3
@@ -141,11 +147,30 @@ class Trainer:
             else None
         )
         self._last_epoch_selected = -1
-        self.refresher = AsyncRefresher(
-            self._refresh_work,
-            mode=tcfg.refresh_mode,
-            on_complete=self._publish_refresh,
-        )
+        if tcfg.use_craig and tcfg.streaming_ingest:
+            # Streaming lifecycle (DESIGN.md §10): refreshes are coalesced
+            # ingest drains — only docs appended since the last boundary are
+            # extracted, and the sieve state absorbs them in O(Δn·k).
+            self.refresher = AsyncRefresher(
+                self._refresh_work,
+                mode=tcfg.refresh_mode,
+                on_complete=self._publish_stream,
+                ingest_fn=self._stream_ingest_job,
+            )
+        else:
+            self.refresher = AsyncRefresher(
+                self._refresh_work,
+                mode=tcfg.refresh_mode,
+                on_complete=self._publish_refresh,
+            )
+        # Streaming-ingest state (streaming_ingest=True only): the selector
+        # is built lazily at the first drain (budget = fraction × first
+        # delta), and the pool/doc-id buffers are compacted in lockstep with
+        # StreamingSelector.compact() when streaming_evict drops dead rows.
+        self._stream_cursor = 0  # docs ingested so far (dataset prefix)
+        self._stream_sel = None
+        self._stream_pool: np.ndarray | None = None
+        self._stream_doc_ids = np.zeros((0,), np.int64)
         # previous refresh's selection in pool coordinates (the pool is a
         # deterministic stride, identical across refreshes) — warm-start seed
         self._prev_selection = None
@@ -238,6 +263,85 @@ class Trainer:
             },
         )
 
+    # -- streaming ingest (DESIGN.md §10) --------------------------------------
+
+    def _stream_submit(self) -> None:
+        """Refresh-boundary trigger in streaming mode: queue the docs the
+        dataset grew by since the last boundary as one ingest delta.  A
+        boundary with no new docs is a no-op — training continues on the
+        installed coreset without re-selection (the sieve state is already
+        a (1−ε)/2-approximation of what it has seen)."""
+        n = self.dataset.n_docs
+        if n <= self._stream_cursor:
+            return
+        new_idx = np.arange(self._stream_cursor, n, dtype=np.int64)
+        self._stream_cursor = n
+        # Same snapshot contract as submit(): jax.Array leaves by reference
+        # (immutable; train_step does not donate), numpy leaves by copy.
+        snap = jax.tree.map(
+            lambda x: x.copy() if isinstance(x, np.ndarray) else x, self.params
+        )
+        self.refresher.ingest((snap, new_idx))
+
+    def _stream_ingest_job(self, deltas: list):
+        """One coalesced drain (refresher worker thread): extract proxies
+        for the NEW docs only, feed them to the sieve, evict dead pool
+        rows, finalize.  O(Δn) extraction instead of the submit path's
+        full-pool re-extraction."""
+        # Coalesced deltas: newest params snapshot wins, doc ranges concat
+        # in arrival order (they are disjoint, cursor-ordered by _stream_submit)
+        params = deltas[-1][0]
+        new_idx = np.concatenate([np.asarray(d[1], np.int64) for d in deltas])
+        feats = np.asarray(
+            jax.device_get(self.extractor.extract(params, new_idx)), np.float32
+        )
+        labels = self._pool_labels(new_idx)
+        if self._stream_sel is None:
+            from repro.core.engines.streaming import StreamingSelector
+
+            k = max(1, int(round(self.tcfg.craig.fraction * new_idx.size)))
+            self._stream_sel = StreamingSelector(
+                k,
+                feats.shape[1],
+                metric=self.tcfg.craig.metric,
+                per_class=labels is not None,
+                evict=self.tcfg.streaming_evict,
+            )
+            self._stream_pool = np.zeros((0, feats.shape[1]), np.float32)
+        self._stream_sel.ingest(feats, labels=labels)
+        self._stream_pool = np.concatenate([self._stream_pool, feats], axis=0)
+        self._stream_doc_ids = np.concatenate([self._stream_doc_ids, new_idx])
+        if self.tcfg.streaming_evict:
+            keep = self._stream_sel.compact()
+            self._stream_pool = np.ascontiguousarray(self._stream_pool[keep])
+            self._stream_doc_ids = self._stream_doc_ids[keep]
+        res = self._stream_sel.result(self._stream_pool)
+        doc_ids = self._stream_doc_ids[np.asarray(res.indices, np.int64)]
+        return (
+            doc_ids,
+            np.asarray(res.weights, np.float32),
+            float(res.coverage),
+            self._stream_sel.n_rows,
+        )
+
+    def _publish_stream(self, result: RefreshResult) -> None:
+        """on_complete hook for ingest drains: same staging path as
+        :meth:`_publish_refresh`, streaming provenance in the metadata."""
+        doc_ids, weights, coverage, n_live = result.value
+        self.sampler.stage(
+            doc_ids,
+            weights,
+            version=result.version,
+            meta={
+                "coreset_size": int(doc_ids.size),
+                "select_time_s": result.wall_time_s,
+                "coverage": coverage,
+                "n_seen": self._stream_sel.n_seen,
+                "n_live": n_live,
+                "engine": self._stream_sel.config.to_dict(),
+            },
+        )
+
     def _install_refresh(self) -> None:
         """Epoch-boundary install point: wait out any in-flight selection
         (the deterministic deadline — normally it finished an epoch ago) and
@@ -312,6 +416,19 @@ class Trainer:
                 else {str(k): int(v) for k, v in prev.per_class_sizes.items()},
             },
         }
+        if self.tcfg.streaming_ingest:
+            # Bounded by O(L·k·d) with streaming_evict: every drain compacts
+            # the pool buffer before this snapshot can observe it.
+            extras["stream"] = {
+                "cursor": self._stream_cursor,
+                "selector": None
+                if self._stream_sel is None
+                else self._stream_sel.state_dict(),
+                "doc_ids": self._stream_doc_ids.tolist(),
+                "pool": None
+                if self._stream_pool is None
+                else self._stream_pool.tolist(),
+            }
         self.ckpt.save(self.step, tree, extras, blocking=blocking)
 
     def restore_or_init(self, shardings: Any | None = None) -> bool:
@@ -346,6 +463,19 @@ class Trainer:
                 else {int(k): int(v) for k, v in pcs.items()},
                 engine=ps.get("engine"),
             )
+        st = extras.get("stream")
+        if st is not None:
+            self._stream_cursor = int(st["cursor"])
+            self._stream_doc_ids = np.asarray(st["doc_ids"], np.int64)
+            if st["selector"] is not None:
+                from repro.core.engines.streaming import StreamingSelector
+
+                sd = st["selector"]
+                self._stream_sel = StreamingSelector(sd["budget"], sd["dim"])
+                self._stream_sel.load_state_dict(sd)
+                self._stream_pool = np.asarray(st["pool"], np.float32).reshape(
+                    -1, int(sd["dim"])
+                )
         return True
 
     # -- main loop ----------------------------------------------------------------
@@ -369,7 +499,10 @@ class Trainer:
                     epoch % tc.select_every_epochs == 0
                     and epoch != self._last_epoch_selected
                 ):
-                    self.refresher.submit(self.params)
+                    if tc.streaming_ingest:
+                        self._stream_submit()
+                    else:
+                        self.refresher.submit(self.params)
                     self._last_epoch_selected = epoch
 
             idx, w = self.sampler.next_batch()

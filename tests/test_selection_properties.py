@@ -119,6 +119,21 @@ def test_warm_start_prefix_preserved(name):
     assert np.asarray(res.weights).sum() == pytest.approx(float(n)), name
 
 
+@pytest.mark.parametrize("name", E.list_engines())
+def test_oversized_warm_prefix_raises(name):
+    """Regression: the streaming engine used to silently truncate an
+    oversized ``init_selected`` to the budget — a warm start that quietly
+    drops its tail trains on a different coreset than the caller staged.
+    Every engine must reject prefix > budget loudly."""
+    n, budget = 40, 4
+    feats = _make_feats(n, 5, "random", 6)
+    eng = E.make_engine(_config_for(name, n))
+    with pytest.raises(ValueError):
+        eng.select(
+            jnp.asarray(feats), budget, init_selected=list(range(6)), rng=0
+        )
+
+
 # -- slow shapes (tier 2) -----------------------------------------------------
 
 SLOW_SHAPES = [

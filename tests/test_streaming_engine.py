@@ -23,8 +23,11 @@ from repro.core import facility_location as fl
 from repro.core.craig import _apportion_budgets, pairwise_distances
 from repro.core.engines.streaming import (
     StreamingSelector,
+    ingest_delta,
     init_streaming_state,
     num_sieves,
+    streaming_result,
+    streaming_result_blocked,
 )
 from repro.serve import CoresetService
 
@@ -122,6 +125,140 @@ def test_streaming_engine_jit_parity():
     eager = eng.select(feats, 9, rng=0)
     jitted = jax.jit(lambda f: eng.select(f, 9, rng=0).indices)(feats)
     np.testing.assert_array_equal(np.asarray(jitted), np.asarray(eager.indices))
+
+
+# -- blocked finalize (DESIGN.md §10) ----------------------------------------
+
+
+def _mk_state(feats, budget, chunk=40, prefix=None, eps=0.15):
+    st = init_streaming_state(
+        budget, feats.shape[1],
+        init_selected=prefix,
+        init_feats=None if prefix is None else feats[np.asarray(prefix)],
+    )
+    for lo in range(0, len(feats), chunk):
+        hi = min(lo + chunk, len(feats))
+        st = ingest_delta(
+            st, jnp.asarray(feats[lo:hi]),
+            jnp.arange(lo, hi, dtype=jnp.int32), eps,
+        )
+    return st
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+@pytest.mark.parametrize("prefix", [None, [3, 17]])
+def test_blocked_finalize_matches_dense(impl, prefix):
+    """The blocked replay finalize: exact index/weight parity with the
+    dense per-step sweep (including jnp.argmax's lowest-index tie rule),
+    gains and coverage to fp tolerance.  'pallas' runs in interpret mode
+    off-TPU, so this is the kernel's CI contract too."""
+    rng = np.random.RandomState(11)
+    feats = rng.randn(120, 5).astype(np.float32)
+    st = _mk_state(feats, budget=14, prefix=prefix)
+    jf = jnp.asarray(feats)
+    ref = streaming_result(st, jf, 14)
+    got = streaming_result_blocked(st, jf, 14, impl=impl, block_m=8)
+    np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(got.indices))
+    np.testing.assert_array_equal(np.asarray(ref.weights), np.asarray(got.weights))
+    np.testing.assert_allclose(
+        np.asarray(ref.gains), np.asarray(got.gains), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        float(ref.coverage), float(got.coverage), rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_blocked_finalize_backfill_parity(impl):
+    """When the best sieve holds fewer picks than the budget (here: finalize
+    budget above the sieve capacity), the residual backfill suffix must also
+    match the dense scan pick for pick."""
+    rng = np.random.RandomState(12)
+    feats = rng.randn(60, 4).astype(np.float32)
+    st = _mk_state(feats, budget=6)  # sieve capacity 6 < finalize budget 10
+    best = int(np.argmax(np.asarray(st.fval)))
+    assert int(np.asarray(st.count)[best]) < 10  # backfill actually exercised
+    jf = jnp.asarray(feats)
+    ref = streaming_result(st, jf, 10)
+    got = streaming_result_blocked(st, jf, 10, impl=impl)
+    np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(got.indices))
+    np.testing.assert_array_equal(np.asarray(ref.weights), np.asarray(got.weights))
+    np.testing.assert_allclose(
+        float(ref.coverage), float(got.coverage), rtol=1e-4
+    )
+
+
+def test_per_class_single_class_matches_flat():
+    """Regression: per-class finalize used to derive each subpool's own
+    d_max offset, so a degenerate single-class stratified run disagreed
+    with the flat run on identical data.  With one pool-wide offset the
+    two are exactly equal."""
+    rng = np.random.RandomState(13)
+    feats = rng.randn(80, 4).astype(np.float32)
+    flat = StreamingSelector(9, 4)
+    strat = StreamingSelector(9, 4, per_class=True)
+    for lo in range(0, 80, 32):
+        d = feats[lo : lo + 32]
+        flat.ingest(d)
+        strat.ingest(d, labels=np.zeros(len(d), np.int64))
+    rf, rs = flat.result(feats), strat.result(feats)
+    np.testing.assert_array_equal(np.asarray(rf.indices), np.asarray(rs.indices))
+    np.testing.assert_array_equal(np.asarray(rf.weights), np.asarray(rs.weights))
+    np.testing.assert_allclose(
+        float(rf.coverage), float(rs.coverage), rtol=1e-6
+    )
+
+
+# -- sieve-pool eviction ------------------------------------------------------
+
+
+def test_eviction_bounds_pool_and_maps_global_ids():
+    """evict=True: after every compact() only sieve-referenced rows stay
+    live, γ sums to the live count, and live_ids maps finalize indices
+    back to global arrival positions (the rows match bit for bit)."""
+    rng = np.random.RandomState(14)
+    deltas = [rng.randn(100, 6).astype(np.float32) for _ in range(6)]
+    sel = StreamingSelector(12, 6, evict=True)
+    pool = np.zeros((0, 6), np.float32)
+    for d in deltas:
+        sel.ingest(d)
+        pool = np.concatenate([pool, d])[sel.compact()]
+    assert sel.n_seen == 600
+    assert sel.n_rows == len(sel.live_ids) == pool.shape[0] < 600
+    res = sel.result(pool)
+    assert np.asarray(res.weights).sum() == pytest.approx(float(sel.n_rows))
+    gids = sel.live_ids[np.asarray(res.indices, np.int64)]
+    full = np.concatenate(deltas)
+    np.testing.assert_array_equal(full[gids], pool[np.asarray(res.indices)])
+
+
+def test_evicted_state_dict_resume_bit_identical():
+    """Kill-and-resume mid-stream with eviction on: the compacted remap
+    (live ids, remapped sel/pre indices) survives a real JSON round-trip
+    and continues to the exact selection of the uninterrupted run."""
+    rng = np.random.RandomState(15)
+    deltas = [rng.randn(60, 4).astype(np.float32) for _ in range(4)]
+
+    def run(selector, pool, ds):
+        for d in ds:
+            selector.ingest(d)
+            pool = np.concatenate([pool, d])[selector.compact()]
+        return pool
+
+    a = StreamingSelector(10, 4, evict=True)
+    pa = run(a, np.zeros((0, 4), np.float32), deltas)
+
+    b = StreamingSelector(10, 4, evict=True)
+    pb = run(b, np.zeros((0, 4), np.float32), deltas[:2])
+    snap = json.loads(json.dumps(b.state_dict()))
+    c = StreamingSelector(10, 4, evict=True)
+    c.load_state_dict(snap)
+    pc = run(c, pb, deltas[2:])
+
+    np.testing.assert_array_equal(a.live_ids, c.live_ids)
+    ra, rc = a.result(pa), c.result(pc)
+    np.testing.assert_array_equal(np.asarray(ra.indices), np.asarray(rc.indices))
+    np.testing.assert_array_equal(np.asarray(ra.weights), np.asarray(rc.weights))
 
 
 # -- state round-trips --------------------------------------------------------
@@ -226,6 +363,52 @@ def test_service_state_dict_resume_bit_identical():
     assert va == vb == 2
     np.testing.assert_array_equal(ua.indices, ub.indices)
     np.testing.assert_array_equal(ua.weights, ub.weights)
+
+
+def test_service_evict_reports_n_live_and_global_indices():
+    """evict=True service: published updates carry n_live, γ sums to the
+    live count, and indices stay global arrival positions."""
+    rng = np.random.RandomState(16)
+    svc = CoresetService(8, 3, evict=True)
+    for _ in range(5):
+        svc.submit_delta(rng.randn(64, 3))
+    u = svc.coreset()
+    assert u.n_seen == 320 and 8 <= u.n_live < 320
+    assert u.weights.sum() == pytest.approx(float(u.n_live))
+    assert len(set(u.indices.tolist())) == 8
+    assert 0 <= u.indices.min() and u.indices.max() < 320
+
+
+@pytest.mark.tier2
+def test_evicted_service_kill_and_resume_size_bound():
+    """Kill-and-resume with eviction: the serialized pool holds ONLY live
+    rows (O(L·k·d), a small fraction of the stream), and the resumed
+    service continues bit-identically to the uninterrupted one."""
+    rng = np.random.RandomState(17)
+    deltas = [rng.randn(128, 4).astype(np.float32) for _ in range(8)]
+
+    a = CoresetService(10, 4, evict=True)
+    for d in deltas:
+        a.submit_delta(d)
+
+    b = CoresetService(10, 4, evict=True)
+    for d in deltas[:4]:
+        b.submit_delta(d)
+    snap = json.loads(json.dumps(b.state_dict()))
+    # the size bound eviction buys: live rows only, far below the stream
+    n_live = b.selector.n_rows
+    assert sum(len(p) for p in snap["pool"]) == n_live
+    assert n_live < 512 // 4  # << the 512 rows ingested so far
+    c = CoresetService(10, 4, evict=True)
+    c.load_state_dict(snap)
+    for d in deltas[4:]:
+        c.submit_delta(d)
+
+    ua, uc = a.coreset(), c.coreset()
+    assert ua.n_seen == uc.n_seen == 1024
+    assert ua.n_live == uc.n_live == a.selector.n_rows
+    np.testing.assert_array_equal(ua.indices, uc.indices)
+    np.testing.assert_array_equal(ua.weights, uc.weights)
 
 
 def test_service_rejects_bad_delta_shape():

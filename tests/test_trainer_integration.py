@@ -216,6 +216,103 @@ def test_refresh_warns_when_labels_unavailable():
     assert t._prev_selection.per_class_sizes is None
 
 
+class GrowingStream:
+    """A corpus that grows between epochs: ``n_docs`` exposes a prefix of
+    the inner stream, extended by :meth:`grow` — the streaming-ingest
+    trainer must pick up exactly the appended suffix at each boundary."""
+
+    def __init__(self, inner, visible):
+        self._inner = inner
+        self.n_docs = int(visible)
+
+    def batch(self, idx):
+        return self._inner.batch(idx)
+
+    def class_labels(self, idx):
+        return self._inner.class_labels(idx)
+
+    def grow(self, n):
+        self.n_docs = min(self._inner.n_docs, self.n_docs + int(n))
+
+
+def test_streaming_ingest_growing_corpus():
+    """streaming_ingest=True: refreshes ride AsyncRefresher.ingest — only
+    docs appended since the last boundary are extracted (O(Δn), not the
+    full pool), the sieve pool buffer stays compacted in lockstep with
+    eviction, and installed coresets index the whole grown corpus."""
+    inner = TokenStream(n_docs=48, seq_len=24, vocab_size=128, n_topics=6)
+    ds = GrowingStream(inner, visible=24)
+    tcfg = TrainerConfig(
+        batch_size=8,
+        select_every_epochs=1,
+        refresh_mode="sync",
+        streaming_ingest=True,
+        craig=CraigConfig(fraction=0.5, per_class=False),
+    )
+    t = Trainer(CFG, tcfg, ds, adamw(constant(2e-3)),
+                lambda: init_params(jax.random.PRNGKey(0), CFG))
+    t.run(4)  # boundary 0 ingests docs [0, 24); install at epoch 1
+    assert t._stream_cursor == 24
+    assert t._stream_sel is not None and t._stream_sel.n_seen == 24
+    # budget fixed at fraction × first delta
+    assert t._stream_sel.budget == 12
+
+    ds.grow(24)
+    t.run(8)  # next boundary ingests exactly the appended [24, 48)
+    assert t._stream_cursor == 48
+    assert t._stream_sel.n_seen == 48
+    refreshes = [m for m in t.metrics_log if m["event"] == "craig_refresh"]
+    assert len(refreshes) >= 2
+    assert all(r["coreset_size"] == 12 for r in refreshes)
+    # pool buffer and doc-id map stay in lockstep with eviction
+    n_rows = t._stream_sel.n_rows
+    assert t._stream_pool.shape[0] == n_rows
+    assert t._stream_doc_ids.shape[0] == n_rows
+    assert n_rows <= t._stream_sel.n_seen
+    # the installed coreset indexes the corpus directly (doc ids, unique)
+    idx = t.sampler._indices
+    assert idx is not None and len(idx) == 12
+    assert len(np.unique(idx)) == 12 and idx.min() >= 0 and idx.max() < 48
+    # γ covers the live pool
+    np.testing.assert_allclose(np.sum(t.sampler._weights), n_rows)
+
+
+def test_streaming_ingest_restart_resumes(tmp_path):
+    """Streaming state (cursor, sieve states, compacted pool + doc ids)
+    round-trips through the checkpoint — a restarted trainer continues the
+    stream without re-ingesting or double-counting docs."""
+    inner = TokenStream(n_docs=48, seq_len=24, vocab_size=128, n_topics=6)
+
+    def make(seed=0):
+        ds = GrowingStream(inner, visible=24)
+        tcfg = TrainerConfig(
+            batch_size=8,
+            select_every_epochs=1,
+            refresh_mode="sync",
+            streaming_ingest=True,
+            checkpoint_dir=str(tmp_path),
+            craig=CraigConfig(fraction=0.5, per_class=False),
+        )
+        return ds, Trainer(CFG, tcfg, ds, adamw(constant(2e-3)),
+                           lambda: init_params(jax.random.PRNGKey(seed), CFG))
+
+    _, t1 = make()
+    t1.run(4)
+    t1._save(blocking=True)
+
+    ds2, t2 = make(seed=9)
+    assert t2.restore_or_init()
+    assert t2._stream_cursor == t1._stream_cursor == 24
+    assert t2._stream_sel.n_seen == t1._stream_sel.n_seen
+    np.testing.assert_array_equal(t2._stream_doc_ids, t1._stream_doc_ids)
+    np.testing.assert_allclose(t2._stream_pool, t1._stream_pool)
+    # and the resumed stream keeps growing without double-ingesting
+    ds2.grow(24)
+    t2.run(6)
+    assert t2._stream_cursor == 48
+    assert t2._stream_sel.n_seen == 48
+
+
 @pytest.mark.tier2
 def test_eval_harness_tracks_heldout_loss():
     ds_train = TokenStream(n_docs=48, seq_len=24, vocab_size=128, n_topics=6)
