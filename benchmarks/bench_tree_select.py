@@ -1,0 +1,175 @@
+"""Hierarchical tree selection benchmark (DESIGN.md §6).
+
+Sections
+--------
+1. ``tree/bytes_on_wire`` — candidate-feature bytes every non-leaf gather
+   ships, int8 wire vs fp32, per depth.  Static accounting
+   (``wire_bytes_plan``: int8 payload + fp32 per-row scales vs 4·r·d), so
+   the number is exact, not sampled.  Gated: reduction ≥ ``BYTES_GATE``
+   (3.5×) at the bench's d=64 (the ratio is 4d/(d+4) → 3.76×; proxy
+   feature dims below ~32 cannot clear 3.5× and should use the fp32
+   escape hatch anyway).
+2. ``tree/objective_ratio`` — F(int8 tree) / F(fp32 tree) on the same
+   pool, per depth.  Gated: ≥ ``OBJ_GATE`` (0.95) — the per-row
+   quantization error (≤ scale/2 per candidate) must not move the merge
+   greedy enough to degrade the selected set.  The fp32-tree /
+   lazy-greedy ratio is reported alongside (ungated here — the
+   depth-composition gate lives in test_selection_properties.py).
+3. ``tree/host_select`` — host-driver wall-clock per depth (context for
+   the ratios; the collective path is exercised by the tier-2 lanes).
+
+Every run writes ``BENCH_tree.json``; ``--smoke`` keeps CI-on-CPU scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import facility_location as fl
+from repro.core.craig import pairwise_distances
+from repro.distributed.tree_select import (
+    TreeTopology,
+    default_r_node,
+    tree_select_host,
+    wire_bytes_plan,
+)
+
+BYTES_GATE = 3.5  # fp32/int8 candidate-feature bytes, floor
+OBJ_GATE = 0.95  # F(int8 tree)/F(fp32 tree), floor
+_RECORDS: list[dict] = []
+
+
+def _emit(name: str, us: float, derived: str, **rec) -> None:
+    emit(name, us, derived)
+    _RECORDS.append({"name": name, "us_per_call": us, "derived": derived, **rec})
+
+
+def _pool(n: int, d: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(max(8, n // 64), d).astype(np.float32) * 4.0
+    return (
+        centers[rng.randint(0, len(centers), n)]
+        + 0.5 * rng.randn(n, d).astype(np.float32)
+    ).astype(np.float32)
+
+
+def _objective(feats: np.ndarray, idx: np.ndarray) -> float:
+    dist = np.asarray(pairwise_distances(jnp.asarray(feats)))
+    sim = dist.max() + 1e-6 - dist
+    mask = np.zeros(len(feats), bool)
+    mask[np.asarray(idx)] = True
+    return float(
+        fl.facility_location_value(jnp.asarray(sim), jnp.asarray(mask))
+    )
+
+
+def _bytes_section(fanouts: tuple[int, ...], r_local: int, r_final: int,
+                   d: int) -> None:
+    topo = TreeTopology(fanouts)
+    r_node = default_r_node(r_local, r_final)
+    plan = wire_bytes_plan(topo, r_local, r_node, d, "int8")
+    reduction = plan["reduction"]
+    ok = reduction >= BYTES_GATE
+    _emit(
+        f"tree/bytes_on_wire/f{'x'.join(map(str, fanouts))}_d{d}",
+        0.0,
+        f"int8={plan['gathered_feature_bytes']}B "
+        f"fp32={plan['fp32_feature_bytes']}B reduction={reduction:.2f}x "
+        f"gate={BYTES_GATE} {'ok' if ok else 'FAIL'}",
+        fanouts=list(fanouts), d=d, r_local=r_local, r_node=r_node,
+        int8_bytes=plan["gathered_feature_bytes"],
+        fp32_bytes=plan["fp32_feature_bytes"],
+        per_level=plan["per_level"], reduction=reduction, gate=BYTES_GATE,
+    )
+    if not ok:
+        raise AssertionError(
+            f"int8 candidate wire reduces bytes only {reduction:.2f}x at "
+            f"d={d}, below the {BYTES_GATE}x gate"
+        )
+
+
+def _objective_section(feats: np.ndarray, fanouts: tuple[int, ...],
+                       r_local: int, r_final: int) -> None:
+    topo = TreeTopology(fanouts)
+    jf = jnp.asarray(feats)
+    sels, times = {}, {}
+    for compress in ("int8", "none"):
+        t0 = time.perf_counter()
+        sel = tree_select_host(jf, topo, r_local, r_final, compress=compress)
+        jax.block_until_ready(sel.indices)
+        times[compress] = time.perf_counter() - t0
+        sels[compress] = sel
+    f_int8 = _objective(feats, np.asarray(sels["int8"].indices))
+    f_fp32 = _objective(feats, np.asarray(sels["none"].indices))
+    ratio = f_int8 / max(f_fp32, 1e-9)
+    ok = ratio >= OBJ_GATE
+    # context: how far the fp32 tree itself sits from host lazy greedy
+    dist = np.asarray(pairwise_distances(jf))
+    sim = dist.max() + 1e-6 - dist
+    f_lazy = _objective(feats, np.asarray(
+        fl.lazy_greedy_fl(sim, r_final).indices))
+    tag = "x".join(map(str, fanouts))
+    _emit(
+        f"tree/objective_ratio/f{tag}_n{len(feats)}_k{r_final}",
+        times["int8"] * 1e6,
+        f"int8/fp32={ratio:.4f} gate={OBJ_GATE} "
+        f"fp32/lazy={f_fp32 / max(f_lazy, 1e-9):.4f} "
+        f"{'ok' if ok else 'FAIL'}",
+        fanouts=list(fanouts), n=len(feats), r_local=r_local,
+        r_final=r_final, f_int8=f_int8, f_fp32=f_fp32, f_lazy=f_lazy,
+        ratio=ratio, gate=OBJ_GATE, fp32_vs_lazy=f_fp32 / max(f_lazy, 1e-9),
+    )
+    _emit(
+        f"tree/host_select/f{tag}_n{len(feats)}_k{r_final}",
+        times["none"] * 1e6,
+        f"int8_s={times['int8']:.3f} fp32_s={times['none']:.3f}",
+        fanouts=list(fanouts), n=len(feats), int8_s=times["int8"],
+        fp32_s=times["none"],
+    )
+    if not ok:
+        raise AssertionError(
+            f"compressed tree objective ratio {ratio:.4f} below the "
+            f"{OBJ_GATE} gate (fanouts={fanouts})"
+        )
+
+
+def _write_json(smoke: bool) -> None:
+    with open("BENCH_tree.json", "w") as f:
+        json.dump(
+            {
+                "schema": 1,
+                "smoke": smoke,
+                "backend": jax.default_backend(),
+                "gates": {
+                    "bytes_reduction": BYTES_GATE,
+                    "objective_ratio": OBJ_GATE,
+                },
+                "records": _RECORDS,
+            },
+            f, indent=1,
+        )
+
+
+def run(smoke: bool = False) -> None:
+    n, d = (2048, 64) if smoke else (16384, 64)
+    r_final = max(16, n // 128)
+    r_local = max(8, r_final // 2)
+    feats = _pool(n, d)
+    try:
+        for fanouts in [(8,), (4, 2)]:
+            _bytes_section(fanouts, r_local, r_final, d)
+            _objective_section(feats, fanouts, r_local, r_final)
+    finally:
+        _write_json(smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    run(smoke=ap.parse_args().smoke)

@@ -29,6 +29,7 @@ def main() -> None:
         bench_selection,
         bench_streaming,
         bench_subset_size,
+        bench_tree_select,
     )
 
     ap = argparse.ArgumentParser()
@@ -50,6 +51,7 @@ def main() -> None:
         bench_extract,      # §3.4 proxy-extraction pipeline (DESIGN.md §9)
         bench_refresh,      # §3.4 refresh cadence off the critical path
         bench_streaming,    # §10 sieve-streaming ingest + objective gate
+        bench_tree_select,  # §6 hierarchical tree: wire bytes + parity gates
     ]
     failed = 0
     for mod in modules:

@@ -305,6 +305,78 @@ class CraigSelector:
             engine=engine_cfg.to_dict(),
         )
 
+    def select_tree(
+        self,
+        feats,
+        fanouts: tuple[int, ...],
+        *,
+        mesh=None,
+        compress: str = "int8",
+        r_node: int | None = None,
+    ) -> CoresetSelection:
+        """Hierarchical tree selection (distributed.tree_select) with the
+        same output contract as :meth:`select`.  ``fanouts`` is the
+        leaf→root merge tree (``(n_shards,)`` reproduces the two-round
+        path bit for bit on the fp32 wire); ``mesh=None`` runs the
+        single-process host driver (ragged pools fine), a level-axis mesh
+        from ``tree_select.tree_mesh`` runs the one-program shard_map
+        driver.  Candidate gathers ship int8 per-row payloads by default
+        (``compress='none'`` is the fp32 escape hatch).
+
+        Provenance: ``CoresetSelection.engine`` records the tree topology
+        and wire mode with the resolved *leaf* engine nested under
+        ``local`` (``TreeSelectConfig`` — restores via
+        ``engine_config_from_dict`` like any engine dict)."""
+        from repro.core.distributed import resolve_round1_config
+        from repro.distributed.tree_select import (
+            TreeSelectConfig,
+            TreeTopology,
+            tree_select_host,
+            tree_select_mesh,
+        )
+
+        cfg = self.config
+        if cfg.mode == "cover":
+            raise ValueError(
+                "select_tree supports mode='budget' only — cover needs "
+                "exact prefix coverages on the global pool"
+            )
+        topology = TreeTopology(tuple(fanouts))
+        feats = normalize_for_metric(
+            jnp.asarray(feats, jnp.float32), cfg.metric
+        )
+        n = feats.shape[0]
+        n_leaves = topology.n_leaves
+        r_final = self._budget(n)
+        r_local = max(1, min(n // n_leaves, int(r_final * 2 / n_leaves) + 1))
+        typed = resolve_engine_config(cfg)
+        engine_cfg = resolve_round1_config(
+            "auto" if typed is None else typed, {}, n // n_leaves
+        )
+        kwargs = dict(
+            r_node=r_node, local_engine=engine_cfg, compress=compress,
+            # same cosine-units invariant as select_distributed
+            squared_coverage=cfg.metric == "cosine",
+        )
+        if mesh is None:
+            res = tree_select_host(feats, topology, r_local, r_final, **kwargs)
+        else:
+            res = tree_select_mesh(
+                feats, mesh, topology, r_local, r_final, **kwargs
+            )
+        provenance = TreeSelectConfig(
+            fanouts=topology.fanouts, compress=compress,
+            local=engine_cfg.to_dict(),
+        )
+        return CoresetSelection(
+            indices=np.asarray(res.indices, np.int64),
+            weights=np.asarray(res.weights, np.float32),
+            order=np.arange(r_final),
+            coverage=float(res.coverage),
+            epsilon_hat=float(res.coverage),
+            engine=provenance.to_dict(),
+        )
+
     # -- internals ----------------------------------------------------------
 
     def _budget(self, n: int) -> int:

@@ -65,6 +65,10 @@ __all__ = [
     "ROUND1_ENGINES",
     "normalize_round1_config",
     "resolve_round1_config",
+    "leaf_round",
+    "merge_round",
+    "check_candidate_counts",
+    "check_even_shards",
 ]
 
 # Engines with a jit/shard_map-safe round-1 body.  Host-side engines (lazy)
@@ -189,6 +193,64 @@ class DistributedSelection(NamedTuple):
     coverage: jax.Array  # () float32 — global L(S)
 
 
+def check_candidate_counts(
+    n_local: int,
+    n_nodes: int,
+    r_local: int,
+    r_final: int,
+    *,
+    where: str = "distributed_select",
+) -> None:
+    """Static candidate-count invariants for a local-select → merge level.
+
+    Greedy engines asked for a budget past their pool size silently select
+    duplicates (the argmax of an all-(−inf) gains row re-picks element 0),
+    which then poisons the merge round with padding artifacts — the audits
+    below turn those silent truncation/duplication modes into errors at
+    trace time, while every shape involved is still a Python int:
+
+      * ``r_local ≤ n_local`` — a shard cannot yield more candidates than
+        it has points;
+      * ``n_nodes · r_local ≥ r_final`` — the merge must see at least
+        ``r_final`` distinct candidates or the final greedy degenerates.
+    """
+    if r_final < 1 or r_local < 1:
+        raise ValueError(
+            f"{where}: budgets must be ≥ 1 (r_local={r_local}, "
+            f"r_final={r_final})"
+        )
+    if r_local > n_local:
+        raise ValueError(
+            f"{where}: r_local={r_local} exceeds the shard pool size "
+            f"n_local={n_local} — a greedy run past its pool size selects "
+            f"duplicate candidates; lower r_local to ≤ {n_local} or use "
+            "fewer/larger shards"
+        )
+    if n_nodes * r_local < r_final:
+        raise ValueError(
+            f"{where}: the merge round would see only "
+            f"{n_nodes}×{r_local}={n_nodes * r_local} candidates, fewer "
+            f"than r_final={r_final} — raise r_local to ≥ "
+            f"{-(-r_final // n_nodes)} so the final greedy has enough "
+            "distinct candidates"
+        )
+
+
+def check_even_shards(n: int, n_shards: int, *, where: str) -> None:
+    """Ragged-shard audit: ``shard_map`` needs dim 0 divisible by the mesh
+    axis, and a silent pad/truncate would fabricate or drop pool points —
+    raise the informative error instead of jax's sharding complaint."""
+    if n % n_shards != 0:
+        raise ValueError(
+            f"{where}: pool size n={n} is not divisible by the "
+            f"{n_shards}-shard mesh axis — shard_map cannot split it "
+            f"evenly and padding would fabricate phantom pool points.  "
+            f"Trim the pool to {n - n % n_shards} or use "
+            "repro.distributed.tree_select.tree_select_host, which "
+            "supports ragged leaf shards"
+        )
+
+
 def _local_round(feats: jax.Array, r_local: int):
     """Round 1 on one shard: dense greedy FL over local features."""
     sq = jnp.sum(feats * feats, axis=-1)
@@ -243,19 +305,54 @@ def _local_round_features(feats: jax.Array, r_local: int, cfg: FeaturesConfig):
     return res.indices, res.weights
 
 
-def _merge_round(
-    cand_feats: jax.Array, cand_w: jax.Array, r_final: int
-) -> jax.Array:
-    """Round 2: weighted greedy FL over the gathered candidate union.
+def leaf_round(feats: jax.Array, r_local: int, engine_config: "EngineConfig | None"):
+    """One local selection: ``r_local`` candidates + local γ from ``feats``.
 
-    Returns positions (r_final,) into the candidate union.
+    The level-reusable round-1 body (DESIGN.md §6): ``local_then_merge``'s
+    round 1 and every leaf of the hierarchical tree
+    (``repro.distributed.tree_select``) dispatch through here, so a new
+    shard_map-safe engine extends both paths at once.  ``engine_config``
+    must be one of ``ROUND1_ENGINES`` (already normalized via
+    ``normalize_round1_config``); ``None`` means the pre-registry default,
+    the dense matrix round.
+
+    Returns ``(local_idx (r_local,), local_w (r_local,))`` with
+    Σ local_w == n_local.
+    """
+    ec = engine_config if engine_config is not None else MatrixConfig()
+    if isinstance(ec, SparseConfig):
+        return _local_round_sparse(feats, r_local, ec)
+    if isinstance(ec, DeviceConfig):
+        return _local_round_device(feats, r_local, ec)
+    if isinstance(ec, FeaturesConfig):
+        return _local_round_features(feats, r_local, ec)
+    if isinstance(ec, MatrixConfig):
+        return _local_round(feats, r_local)
+    raise ValueError(
+        f"engine {ec.name!r} has no shard_map-safe round-1 body; "
+        f"round-1 engines: {ROUND1_ENGINES}"
+    )
+
+
+def merge_round(cand_feats: jax.Array, cand_w: jax.Array, budget: int):
+    """One merge level: weighted greedy FL over a gathered candidate union.
+
+    Level-reusable (DESIGN.md §6): the two-round path calls it once at the
+    root; the hierarchical tree calls it at every non-leaf node with that
+    node's children's candidates.  Each candidate counts γ_c points, so
+    maximizing the weighted objective keeps the merged set representative
+    of the *points* below it, not just of the candidate vectors.
+
+    Returns the full weighted ``FLResult``: ``indices`` are positions into
+    the candidate union, ``weights`` are the re-aggregated γ (every
+    dropped candidate's mass moves to its nearest kept medoid —
+    Σ weights == Σ cand_w, so γ conservation holds level over level).
     """
     sq = jnp.sum(cand_feats * cand_feats, axis=-1)
     d2 = sq[:, None] + sq[None, :] - 2.0 * cand_feats @ cand_feats.T
     dist = jnp.sqrt(jnp.maximum(d2, 0.0))
     d_max = jnp.max(dist) + 1e-6
-    res = fl.greedy_fl_matrix(d_max - dist, r_final, point_weights=cand_w)
-    return res.indices
+    return fl.greedy_fl_matrix(d_max - dist, budget, point_weights=cand_w)
 
 
 def local_then_merge(
@@ -299,21 +396,15 @@ def local_then_merge(
         )
     ec = engine_config if engine_config is not None else MatrixConfig()
     n_local, _ = feats_sharded.shape
+    # psum of a Python literal constant-folds to the static axis size at
+    # trace time (jax.lax.axis_size only exists on newer jax releases)
+    n_shards = int(jax.lax.psum(1, axis_name))  # repro-lint: disable=jit-host-sync  # psum(1) is a static int at trace time, not a traced value
+    check_candidate_counts(
+        n_local, n_shards, r_local, r_final, where="local_then_merge"
+    )
     shard_id = jax.lax.axis_index(axis_name)
 
-    if isinstance(ec, SparseConfig):
-        local_idx, local_w = _local_round_sparse(feats_sharded, r_local, ec)
-    elif isinstance(ec, DeviceConfig):
-        local_idx, local_w = _local_round_device(feats_sharded, r_local, ec)
-    elif isinstance(ec, FeaturesConfig):
-        local_idx, local_w = _local_round_features(feats_sharded, r_local, ec)
-    elif isinstance(ec, MatrixConfig):
-        local_idx, local_w = _local_round(feats_sharded, r_local)
-    else:
-        raise ValueError(
-            f"engine {ec.name!r} has no shard_map-safe round-1 body; "
-            f"round-1 engines: {ROUND1_ENGINES}"
-        )
+    local_idx, local_w = leaf_round(feats_sharded, r_local, ec)
     local_global_idx = shard_id * n_local + local_idx
 
     # Gather candidate features / weights / global ids from all shards.
@@ -323,7 +414,7 @@ def local_then_merge(
     cand_w = jax.lax.all_gather(local_w, axis_name, tiled=True)
     cand_gidx = jax.lax.all_gather(local_global_idx, axis_name, tiled=True)
 
-    sel_pos = _merge_round(cand_feats, cand_w, r_final)  # replicated
+    sel_pos = merge_round(cand_feats, cand_w, r_final).indices  # replicated
     sel_feats = cand_feats[sel_pos]  # (r_final, d)
     sel_gidx = cand_gidx[sel_pos]
 
@@ -363,10 +454,13 @@ def distributed_select(
     kwargs still work through the deprecation shim
     (``engines.legacy.resolve_distributed_engine``) and warn.
     """
-    engine_config = resolve_round1_config(
-        local_engine, legacy_knobs,
-        feats.shape[0] // int(mesh.shape[axis_name]),
+    n_shards = int(mesh.shape[axis_name])
+    check_even_shards(feats.shape[0], n_shards, where="distributed_select")
+    n_local = feats.shape[0] // n_shards
+    check_candidate_counts(
+        n_local, n_shards, r_local, r_final, where="distributed_select"
     )
+    engine_config = resolve_round1_config(local_engine, legacy_knobs, n_local)
     body = partial(
         local_then_merge, r_local=r_local, r_final=r_final,
         axis_name=axis_name, engine_config=engine_config,

@@ -69,12 +69,22 @@ def make_engine(config: EngineConfig) -> SelectionEngine:
 
 
 def engine_config_from_dict(d: dict) -> EngineConfig:
-    """Inverse of ``EngineConfig.to_dict`` — restores the typed config."""
+    """Inverse of ``EngineConfig.to_dict`` — restores the typed config.
+
+    ``name == 'tree'`` dispatches to ``TreeSelectConfig``: tree selection
+    is an orchestration layer over the round-1 engines, not a registered
+    ``SelectionEngine``, but its provenance dicts ride the same
+    checkpoint/metadata paths (lazy import — the tree module imports
+    ``core.distributed``, which imports the engines)."""
     d = dict(d)
     try:
         name = d.pop("name")
     except KeyError:
         raise ValueError(f"engine config dict has no 'name': {d!r}") from None
+    if name == "tree":
+        from repro.distributed.tree_select import TreeSelectConfig
+
+        return TreeSelectConfig(**{**d, "fanouts": tuple(d["fanouts"])})
     return get_engine(name).config_cls(**d)
 
 

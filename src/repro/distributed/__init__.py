@@ -1,4 +1,6 @@
-"""Distribution substrate: sharding rules, collectives, compression."""
-from repro.distributed import collectives, compression, sharding
+"""Distribution substrate: sharding rules, collectives, compression,
+hierarchical tree selection (``tree_select`` in-process/mesh drivers,
+``process_tree`` KV-store driver for multi-process CPU)."""
+from repro.distributed import collectives, compression, sharding, tree_select
 
-__all__ = ["collectives", "compression", "sharding"]
+__all__ = ["collectives", "compression", "sharding", "tree_select"]

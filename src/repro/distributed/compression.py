@@ -1,6 +1,9 @@
-"""Gradient compression for the cross-pod (DCN) data-parallel axis.
+"""Payload compression for the cross-pod / cross-process wire.
 
-Int8 block-quantized gradient sync with error feedback (1-bit-Adam-family
+Two int8 quantization schemes share this module:
+
+**Gradients** (``quantize_int8``/``dequantize_int8``/``compressed_psum``) —
+per-block (256) absmax scaling with error feedback (1-bit-Adam-family
 technique adapted to jax collectives):
 
   * quantize: per-block (256) absmax scaling to int8;
@@ -13,6 +16,18 @@ technique adapted to jax collectives):
 DCN bytes per sync drop ~4x vs fp32 ring all-reduce at pod-count 2.
 Used via the ``grad_transform`` hook of train_step inside shard_map, or
 standalone through ``compressed_psum``.
+
+**Candidate-feature matrices** (``quantize_rows_int8``/
+``dequantize_rows_int8``) — per-ROW absmax scaling of a 2-D (r, d) payload,
+used by hierarchical tree selection (DESIGN.md §6) to ship candidate
+features up the merge tree at ~4x fewer bytes than fp32.  Rows are the
+natural block: each row is one candidate's proxy-feature vector, so a
+single outlier feature only degrades its own candidate, and the (r,)
+scale vector rides the same gather as the payload.  These are ONE-SHOT
+payloads — each candidate set is gathered once per selection, so there is
+no error-feedback residual to carry (unlike the gradient path, where the
+same tensor syncs every step).  bf16 inputs are accepted and quantized
+through fp32; both functions are jit/shard_map-safe.
 """
 from __future__ import annotations
 
@@ -24,6 +39,8 @@ import jax.numpy as jnp
 __all__ = [
     "quantize_int8",
     "dequantize_int8",
+    "quantize_rows_int8",
+    "dequantize_rows_int8",
     "compressed_psum",
     "make_error_feedback",
 ]
@@ -55,6 +72,33 @@ def dequantize_int8(
     for s in shape:
         n *= s
     return flat[:n].reshape(shape)
+
+
+def quantize_rows_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(r, d) feature matrix → (int8 payload (r, d), fp32 scales (r,)).
+
+    Per-row absmax scaling: row i is quantized with scale_i = max|x_i|/127,
+    so the round-trip error is bounded per row by scale_i/2 (plus fp
+    rounding) — one candidate's outlier feature never degrades another
+    candidate's row.  fp32 and bf16 inputs are accepted (bf16 is widened
+    to fp32 before the scale computation); the dequantized result is
+    always fp32, matching what the merge greedy consumes.
+    """
+    if x.ndim != 2:
+        raise ValueError(
+            f"quantize_rows_int8 expects a 2-D (r, d) feature matrix, got "
+            f"shape {x.shape} — use quantize_int8 for arbitrary-shape "
+            "gradient payloads"
+        )
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_rows_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_rows_int8` — (r, d) fp32 features."""
+    return q.astype(jnp.float32) * scale[:, None]
 
 
 def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:

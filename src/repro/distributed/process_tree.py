@@ -1,0 +1,236 @@
+"""Process-spanning tree selection over the ``jax.distributed`` KV store.
+
+XLA's CPU backend has no cross-process collectives ("Multiprocess
+computations aren't implemented on the CPU backend"), so
+``tree_select_mesh`` cannot span processes off-TPU/GPU.  This driver
+runs the same tree with one *process* per leaf, using the coordination
+service's key-value store — available on every backend the moment
+``jax.distributed.initialize`` has run — as the candidate wire:
+
+* every live node at a level serializes its candidate payload
+  (int8-quantized features + fp32 per-row scales, or raw fp32 under
+  ``compress='none'``) into the KV store;
+* each parent *owner* (the lowest-pid process under the parent) blocks
+  on its children's keys, dequantizes, and runs the same ``merge_round``;
+* the root owner publishes the final medoids (exact fp32 — the
+  dequantized values are fp32-representable, so every process re-weights
+  against bit-identical medoids);
+* re-weighting partials are combined in pid order, matching the host
+  driver's leaf-order accumulation.
+
+The selection is bit-identical to ``tree_select_host`` on the
+concatenated pool (indices and weights exactly; coverage to float-sum
+association), because every payload — including a merge owner's own —
+passes through the same wire codec in the same leaf order.  The tier-2
+CI lane (``tests/test_multiprocess_tree.py``) runs this end to end with
+2 real processes.
+
+Keys are namespaced by a per-call tag; the default tag comes from a
+module-level counter, so all processes must make the same sequence of
+calls (the usual SPMD contract).  Payload shapes are derived from the
+static (r, d) candidate-set sizes, so no shape metadata crosses the
+wire.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import leaf_round, merge_round, resolve_round1_config
+from repro.core.engines import EngineConfig
+from repro.distributed.compression import (
+    dequantize_rows_int8,
+    quantize_rows_int8,
+)
+from repro.distributed.tree_select import (
+    WIRE_MODES,
+    TreeSelection,
+    TreeTopology,
+    _check_tree_counts,
+    default_r_node,
+    wire_bytes_plan,
+)
+
+__all__ = ["tree_select_processes", "kv_client"]
+
+_CALLS = itertools.count()
+_TIMEOUT_MS = 300_000
+
+
+def kv_client():
+    """The coordination-service KV client (requires
+    ``jax.distributed.initialize``).  ``jax.distributed.global_state`` is
+    not public API on the pinned jax, so reach through ``jax._src``."""
+    from jax._src import distributed
+
+    client = distributed.global_state.client
+    if client is None:
+        raise RuntimeError(
+            "tree_select_processes needs the jax.distributed coordination "
+            "service — call repro.launch.tree.initialize_distributed() "
+            "(or jax.distributed.initialize) in every process first"
+        )
+    return client
+
+
+def _put(client, key: str, arr: np.ndarray) -> None:
+    client.key_value_set_bytes(key, np.ascontiguousarray(arr).tobytes())
+
+
+def _get(client, key: str, shape, dtype) -> np.ndarray:
+    raw = client.blocking_key_value_get_bytes(key, _TIMEOUT_MS)
+    return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+
+
+def _put_payload(client, key, feats, w, gidx, compress):
+    feats = np.asarray(feats, np.float32)
+    if compress == "int8":
+        q, s = quantize_rows_int8(jnp.asarray(feats))
+        _put(client, key + "/q", np.asarray(q))
+        _put(client, key + "/s", np.asarray(s))
+    else:
+        _put(client, key + "/f", feats)
+    _put(client, key + "/w", np.asarray(w, np.float32))
+    _put(client, key + "/g", np.asarray(gidx, np.int64))
+
+
+def _get_payload(client, key, r, d, compress):
+    if compress == "int8":
+        q = _get(client, key + "/q", (r, d), np.int8)
+        s = _get(client, key + "/s", (r,), np.float32)
+        feats = np.asarray(dequantize_rows_int8(jnp.asarray(q), jnp.asarray(s)))
+    else:
+        feats = _get(client, key + "/f", (r, d), np.float32)
+    w = _get(client, key + "/w", (r,), np.float32)
+    gidx = _get(client, key + "/g", (r,), np.int64)
+    return feats, w, gidx
+
+
+def tree_select_processes(
+    feats_local: jax.Array,
+    topology: TreeTopology,
+    r_local: int,
+    r_final: int,
+    *,
+    r_node: int | None = None,
+    local_engine: str | EngineConfig = "auto",
+    compress: str = "int8",
+    squared_coverage: bool = False,
+    tag: str | None = None,
+) -> TreeSelection:
+    """Hierarchical selection with one process per leaf (SPMD: every
+    process calls with its own ``(n_pid, d)`` shard; ragged shard sizes
+    are fine).  Returns the full replicated :class:`TreeSelection` in
+    every process, with global indices into the pid-order concatenated
+    pool."""
+    if compress not in WIRE_MODES:
+        raise ValueError(
+            f"compress={compress!r} is not a wire mode; expected one of "
+            f"{WIRE_MODES}"
+        )
+    pid = jax.process_index()
+    nproc = jax.process_count()
+    if nproc != topology.n_leaves:
+        raise ValueError(
+            f"tree_select_processes: topology has {topology.n_leaves} "
+            f"leaves but {nproc} processes are running — one process per "
+            "leaf"
+        )
+    client = kv_client()
+    tag = f"tree/{next(_CALLS)}" if tag is None else f"tree/{tag}"
+    feats_local = jnp.asarray(feats_local, jnp.float32)
+    n_local, d = feats_local.shape
+    r_node = default_r_node(r_local, r_final) if r_node is None else int(r_node)
+
+    # Global index base: publish shard sizes, prefix-sum in pid order.
+    client.key_value_set(f"{tag}/n/{pid}", str(n_local))
+    sizes = [
+        int(client.blocking_key_value_get(f"{tag}/n/{p}", _TIMEOUT_MS))
+        for p in range(nproc)
+    ]
+    _check_tree_counts(
+        sizes, topology, r_local, r_node, r_final,
+        where="tree_select_processes",
+    )
+    base = sum(sizes[:pid])
+    engine_cfg = resolve_round1_config(local_engine, {}, min(sizes))
+
+    local_idx, local_w = leaf_round(feats_local, r_local, engine_cfg)
+    cand_feats = np.asarray(feats_local[local_idx], np.float32)
+    cand_w = np.asarray(local_w, np.float32)
+    cand_gidx = base + np.asarray(local_idx, np.int64)
+
+    # Merge levels: live node owners publish, parent owners merge.  A
+    # process owns its level-l node iff pid % stride == 0.
+    stride = 1
+    r = r_local
+    for level, fanout in enumerate(topology.fanouts):
+        if pid % stride == 0:
+            node = pid // stride
+            _put_payload(
+                client, f"{tag}/l{level}/{node}", cand_feats, cand_w,
+                cand_gidx, compress,
+            )
+        parent_stride = stride * fanout
+        budget = r_final if level == topology.depth - 1 else min(
+            r_node, fanout * r
+        )
+        if pid % parent_stride == 0:
+            first_child = (pid // stride)  # == pid // stride, a multiple of fanout
+            feats_l, w_l, gidx_l = [], [], []
+            for c in range(first_child, first_child + fanout):
+                f, w, g = _get_payload(
+                    client, f"{tag}/l{level}/{c}", r, d, compress
+                )
+                feats_l.append(f)
+                w_l.append(w)
+                gidx_l.append(g)
+            union_feats = jnp.asarray(np.concatenate(feats_l))
+            union_w = jnp.asarray(np.concatenate(w_l))
+            union_gidx = np.concatenate(gidx_l)
+            res = merge_round(union_feats, union_w, budget)
+            keep = np.asarray(res.indices)
+            cand_feats = np.asarray(union_feats, np.float32)[keep]
+            cand_w = np.asarray(res.weights, np.float32)
+            cand_gidx = union_gidx[keep]
+        stride = parent_stride
+        r = budget
+
+    # Root broadcast: exact fp32 medoid features + global ids.
+    if pid == 0:
+        _put(client, f"{tag}/root/f", cand_feats)
+        _put(client, f"{tag}/root/g", cand_gidx)
+    root_feats = jnp.asarray(
+        _get(client, f"{tag}/root/f", (r_final, d), np.float32)
+    )
+    root_gidx = _get(client, f"{tag}/root/g", (r_final,), np.int64)
+
+    # Exact global re-weighting: local partials combined in pid order
+    # (matches the host driver's leaf-order accumulation).
+    sqx = jnp.sum(feats_local * feats_local, axis=-1)
+    sqm = jnp.sum(root_feats * root_feats, axis=-1)
+    d2 = sqx[:, None] + sqm[None, :] - 2.0 * feats_local @ root_feats.T
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    assign = jnp.argmin(dist, axis=1)
+    local_counts = jnp.zeros((r_final,), jnp.float32).at[assign].add(1.0)
+    min_dist = jnp.min(dist, axis=1)
+    residual = jnp.square(min_dist) / 2.0 if squared_coverage else min_dist
+    partial = np.concatenate(
+        [np.asarray(local_counts, np.float32),
+         np.asarray(jnp.sum(residual), np.float32).reshape(1)]
+    )
+    _put(client, f"{tag}/rw/{pid}", partial)
+    counts = jnp.zeros((r_final,), jnp.float32)
+    coverage = jnp.zeros((), jnp.float32)
+    for p in range(nproc):
+        part = _get(client, f"{tag}/rw/{p}", (r_final + 1,), np.float32)
+        counts = counts + jnp.asarray(part[:r_final])
+        coverage = coverage + jnp.float32(part[r_final])
+
+    wire = wire_bytes_plan(topology, r_local, r_node, d, compress)
+    return TreeSelection(
+        jnp.asarray(root_gidx.astype(np.int32)), counts, coverage, wire
+    )

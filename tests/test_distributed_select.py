@@ -1,8 +1,11 @@
 """Two-round distributed CRAIG selection (8 simulated devices, subprocess).
 
-Run in a subprocess because the flag must be set before jax initializes and
-the main test process must keep seeing 1 device.  Covers both round-1
-engines: dense ``matrix`` and the O(n_local·k) ``sparse`` top-k path.
+The collective run lives in a subprocess because the device-count flag
+must be set before jax initializes and the main test process must keep
+seeing 1 device.  Covers both round-1 engines: dense ``matrix`` and the
+O(n_local·k) ``sparse`` top-k path.  The candidate-count/ragged-shard
+audits (``check_candidate_counts``/``check_even_shards``) are pure-Python
+trace-time checks and run in tier 1 directly.
 """
 import os
 import subprocess
@@ -10,8 +13,6 @@ import sys
 import textwrap
 
 import pytest
-
-pytestmark = pytest.mark.tier2  # 8-device subprocess run, >60 s
 
 SCRIPT = textwrap.dedent(
     """
@@ -119,11 +120,78 @@ SCRIPT = textwrap.dedent(
                     engine=MatrixConfig())).select_distributed(feats, mesh)
     assert np.array_equal(np.asarray(cs_auto.indices),
                           np.asarray(cs_mat.indices))
+    # ragged pool on a real 8-shard mesh: loud audit error, no silent pad
+    try:
+        distributed_select(feats[:1021], mesh, r_local=16, r_final=32)
+        raise SystemExit("expected ValueError for ragged pool")
+    except ValueError as e:
+        assert "not divisible" in str(e), e
+    # shard smaller than r_local on a real mesh (n_local=128 < 200)
+    try:
+        distributed_select(feats, mesh, r_local=200, r_final=32)
+        raise SystemExit("expected ValueError for r_local > n_local")
+    except ValueError as e:
+        assert "exceeds the shard pool size" in str(e), e
     print("DISTRIBUTED_OK", ratio, sp_ratio, dv_ratio)
     """
 )
 
 
+# -- candidate-count / ragged-shard audits (tier 1: trace-time checks) --------
+
+
+def test_candidate_count_invariants():
+    """The silent failure modes these guard: a greedy run past its pool
+    size selects duplicates, and a merge with fewer candidates than
+    r_final degenerates — both must be loud ValueErrors with the remedy
+    in the message."""
+    from repro.core.distributed import check_candidate_counts
+
+    check_candidate_counts(128, 8, 16, 32)  # the happy path is silent
+    check_candidate_counts(16, 8, 16, 128)  # boundary: exactly enough
+    with pytest.raises(ValueError, match="budgets must be"):
+        check_candidate_counts(128, 8, 0, 32)
+    with pytest.raises(ValueError, match="budgets must be"):
+        check_candidate_counts(128, 8, 16, 0)
+    with pytest.raises(ValueError, match="exceeds the shard pool size"):
+        check_candidate_counts(10, 8, 16, 32)
+    with pytest.raises(ValueError, match=r"8×2=16 candidates, fewer"):
+        check_candidate_counts(128, 8, 2, 32)
+    # the message names the fix: the minimal sufficient r_local
+    with pytest.raises(ValueError, match="raise r_local to ≥ 4"):
+        check_candidate_counts(128, 8, 2, 32)
+
+
+def test_even_shard_audit():
+    from repro.core.distributed import check_even_shards
+
+    check_even_shards(1024, 8, where="t")
+    with pytest.raises(ValueError, match="not divisible"):
+        check_even_shards(1023, 8, where="t")
+    with pytest.raises(ValueError, match="tree_select_host"):
+        # the remedy names the ragged-capable driver
+        check_even_shards(1023, 8, where="t")
+
+
+def test_distributed_select_rejects_bad_counts_before_tracing():
+    """distributed_select raises the informative audit errors even on a
+    1-device mesh — they fire before shard_map ever traces."""
+    import jax.numpy as jnp
+
+    from repro.core.distributed import distributed_select
+    from repro.launch.mesh import compat_mesh
+
+    mesh = compat_mesh((1,), ("data",))
+    feats = jnp.zeros((64, 4))
+    with pytest.raises(ValueError, match="exceeds the shard pool size"):
+        distributed_select(feats, mesh, r_local=65, r_final=8)
+    with pytest.raises(ValueError, match="fewer than r_final"):
+        distributed_select(feats, mesh, r_local=4, r_final=8)
+    with pytest.raises(ValueError, match="budgets must be"):
+        distributed_select(feats, mesh, r_local=4, r_final=0)
+
+
+@pytest.mark.tier2  # 8-device subprocess run, >60 s
 def test_distributed_select_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

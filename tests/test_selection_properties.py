@@ -134,6 +134,46 @@ def test_oversized_warm_prefix_raises(name):
         )
 
 
+# -- hierarchical tree selection gate -----------------------------------------
+
+# depth/fan-out grid: depth-1 (the two-round shape), branching depth-2,
+# binary depth-3 — every tree must clear the same Nemhauser-tier gate vs
+# host lazy greedy that the flat engines do, on BOTH wire modes.  The
+# worst-case GreeDi composition factor decays with depth, but on pools
+# like these (and empirically, §GreeDi) the loss is far smaller than
+# EPS_SLACK — a depth regression (bad merge budgets, wire corruption)
+# shows up here immediately.
+TREE_GRID = [
+    ((4,), "none"),
+    ((4,), "int8"),
+    ((4, 2), "int8"),
+    ((2, 2, 2), "int8"),
+    ((2, 4), "none"),
+]
+
+
+@pytest.mark.parametrize("fanouts,compress", TREE_GRID)
+def test_tree_objective_gate_and_partition(fanouts, compress):
+    from repro.distributed.tree_select import TreeTopology, tree_select_host
+
+    n, d, budget = 96, 6, 10
+    feats = _make_feats(n, d, "clustered", 7)
+    sel = tree_select_host(
+        jnp.asarray(feats), TreeTopology(fanouts), r_local=8, r_final=budget,
+        compress=compress,
+    )
+    idx = np.asarray(sel.indices)
+    assert idx.shape == (budget,)
+    assert len(np.unique(idx)) == budget and idx.min() >= 0 and idx.max() < n
+    w = np.asarray(sel.weights)
+    assert w.sum() == pytest.approx(float(n)) and (w >= 0).all()
+    sim = _sim(feats)
+    f_tree = _objective(sim, idx)
+    f_ref = _objective(sim, fl.lazy_greedy_fl(sim, budget).indices)
+    assert f_tree >= _gate("matrix") * f_ref - 1e-4, (
+        fanouts, compress, f_tree, f_ref)
+
+
 # -- slow shapes (tier 2) -----------------------------------------------------
 
 SLOW_SHAPES = [
