@@ -1,0 +1,192 @@
+"""Fault-tolerance benchmark (DESIGN.md §12): what robustness costs.
+
+Sections
+--------
+1. ``faults/refresh_retry`` — trainer steps/s with every refresh job
+   failing once (injected ``refresh.worker`` fault, ``every=2``) and
+   retried under ``FailurePolicy(max_retries=1)``, vs the clean run.
+   Gated: ratio ≥ ``RETRY_GATE`` (0.9) — retries ride the async worker,
+   so a transient failure per job must not touch the step loop.  The
+   run also asserts every selection eventually installed (no
+   ``craig_refresh_failed`` events — the retry actually recovered).
+2. ``faults/degraded_objective`` — facility-location objective of a
+   quorum-degraded tree (3 of 4 leaves survive, selection over the
+   surviving 3/4 of the pool) vs the full tree, BOTH evaluated on the
+   FULL pool.  Gated: ratio ≥ ``DEGRADED_GATE`` (0.9) — losing one leaf
+   at quorum 3/4 must not collapse coverage (CREST's subset-selection
+   observation, PAPERS.md).  This is the host-driver model of what the
+   tier-2 chaos lane exercises with real SIGKILLed processes.
+
+Every run writes ``BENCH_faults.json``; ``--smoke`` keeps CI-on-CPU scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import facility_location as fl
+from repro.core.craig import CraigConfig, pairwise_distances
+from repro.distributed.tree_select import TreeTopology, tree_select_host
+from repro.faults import FailurePolicy, FaultPlan, FaultSpec, injected
+
+RETRY_GATE = 0.9  # injected/clean steps-per-s, floor
+DEGRADED_GATE = 0.9  # F(3-of-4-leaf tree)/F(full tree) on the full pool
+_RECORDS: list[dict] = []
+
+
+def _emit(name: str, us: float, derived: str, **rec) -> None:
+    emit(name, us, derived)
+    _RECORDS.append({"name": name, "us_per_call": us, "derived": derived, **rec})
+
+
+def _steps_per_s(n_docs: int, pool_batches: int, n_steps: int,
+                 policy: FailurePolicy | None) -> tuple[float, list[dict]]:
+    from repro.data.synthetic import TokenStream
+    from repro.models import ModelConfig, init_params
+    from repro.optim import adamw, constant
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = ModelConfig(
+        name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=64, vocab_size=128, logit_chunk=16,
+    )
+    ds = TokenStream(n_docs=n_docs, seq_len=24, vocab_size=128, n_topics=8)
+    tcfg = TrainerConfig(
+        batch_size=8, select_every_epochs=1, use_craig=True,
+        refresh_mode="async", craig=CraigConfig(fraction=0.5, per_class=False),
+        proxy_pool_batches=pool_batches, refresh_failure_policy=policy,
+    )
+    t = Trainer(cfg, tcfg, ds, adamw(constant(2e-3)),
+                lambda: init_params(jax.random.PRNGKey(0), cfg))
+    t.run(2)  # compile train_step + select_step
+    t.refresher.wait()
+    base = len(t.metrics_log)
+    t0 = time.perf_counter()
+    log = t.run(n_steps)[base:]
+    wall = time.perf_counter() - t0
+    t.refresher.wait()  # drain the worker before tearing the trainer down
+    return n_steps / wall, log
+
+
+def _retry_section(n_docs: int, pool_batches: int, n_steps: int) -> None:
+    clean_sps, _ = _steps_per_s(n_docs, pool_batches, n_steps, None)
+    # every job's first attempt fails (calls 1, 3, 5, … with one retry per
+    # job), so each refresh succeeds exactly on its retry
+    plan = FaultPlan(
+        [FaultSpec(site="refresh.worker", kind="raise", every=2)], seed=0
+    )
+    policy = FailurePolicy(max_retries=1, backoff_base_s=0.01)
+    with injected(plan):
+        fault_sps, log = _steps_per_s(n_docs, pool_batches, n_steps, policy)
+    refreshes = [m for m in log if m["event"] == "craig_refresh"]
+    failures = [m for m in log if m["event"] == "craig_refresh_failed"]
+    ratio = fault_sps / clean_sps
+    ok = ratio >= RETRY_GATE and refreshes and not failures
+    _emit(
+        f"faults/refresh_retry/n{n_docs}",
+        1e6 / fault_sps,
+        f"injected/clean={ratio:.3f} gate={RETRY_GATE} "
+        f"refreshes={len(refreshes)} failed={len(failures)} "
+        f"{'ok' if ok else 'FAIL'}",
+        n_docs=n_docs, n_steps=n_steps, clean_steps_per_s=clean_sps,
+        injected_steps_per_s=fault_sps, ratio=ratio, gate=RETRY_GATE,
+        n_refreshes=len(refreshes), n_failed=len(failures),
+    )
+    if not ok:
+        raise AssertionError(
+            f"refresh retry bench failed: ratio={ratio:.3f} (gate "
+            f"{RETRY_GATE}), refreshes={len(refreshes)}, "
+            f"unrecovered failures={len(failures)}"
+        )
+
+
+def _clustered_pool(n: int, d: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(8, d).astype(np.float32) * 4.0
+    return (
+        centers[rng.randint(0, 8, n)]
+        + 0.5 * rng.randn(n, d).astype(np.float32)
+    ).astype(np.float32)
+
+
+def _objective_on(sim: np.ndarray, idx: np.ndarray) -> float:
+    mask = np.zeros(sim.shape[0], bool)
+    mask[np.asarray(idx)] = True
+    return float(
+        fl.facility_location_value(jnp.asarray(sim), jnp.asarray(mask))
+    )
+
+
+def _degraded_section(n: int, d: int, r_local: int, r_final: int) -> None:
+    feats = _clustered_pool(n, d)
+    # shard in pid order like the process driver: losing leaf 3 of 4
+    # leaves the first 3 quarters of the pool (quorum 3/4)
+    n_alive = 3 * (n // 4)
+    full = tree_select_host(
+        jnp.asarray(feats), TreeTopology((4,)), r_local, r_final
+    )
+    degraded = tree_select_host(
+        jnp.asarray(feats[:n_alive]), TreeTopology((3,)), r_local, r_final
+    )
+    dist = np.asarray(pairwise_distances(jnp.asarray(feats)))
+    sim = dist.max() + 1e-6 - dist  # one similarity matrix: the FULL pool
+    f_full = _objective_on(sim, np.asarray(full.indices))
+    f_degraded = _objective_on(sim, np.asarray(degraded.indices))
+    ratio = f_degraded / max(f_full, 1e-9)
+    ok = ratio >= DEGRADED_GATE
+    _emit(
+        f"faults/degraded_objective/n{n}_k{r_final}",
+        0.0,
+        f"degraded/full={ratio:.4f} gate={DEGRADED_GATE} quorum=3/4 "
+        f"{'ok' if ok else 'FAIL'}",
+        n=n, d=d, n_alive=n_alive, r_local=r_local, r_final=r_final,
+        f_full=f_full, f_degraded=f_degraded, ratio=ratio,
+        gate=DEGRADED_GATE, quorum=0.75,
+    )
+    if not ok:
+        raise AssertionError(
+            f"degraded-tree objective ratio {ratio:.4f} below the "
+            f"{DEGRADED_GATE} gate at quorum 3/4"
+        )
+
+
+def _write_json(smoke: bool) -> None:
+    with open("BENCH_faults.json", "w") as f:
+        json.dump(
+            {
+                "schema": 1,
+                "smoke": smoke,
+                "backend": jax.default_backend(),
+                "gates": {
+                    "refresh_retry_ratio": RETRY_GATE,
+                    "degraded_objective_ratio": DEGRADED_GATE,
+                },
+                "records": _RECORDS,
+            },
+            f, indent=1,
+        )
+
+
+def run(smoke: bool = False) -> None:
+    try:
+        if smoke:
+            _retry_section(n_docs=96, pool_batches=12, n_steps=48)
+            _degraded_section(n=512, d=32, r_local=16, r_final=24)
+        else:
+            _retry_section(n_docs=256, pool_batches=32, n_steps=96)
+            _degraded_section(n=2048, d=32, r_local=32, r_final=48)
+    finally:
+        _write_json(smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    print("name,us_per_call,derived")
+    run(smoke=ap.parse_args().smoke)

@@ -20,6 +20,7 @@ def main() -> None:
         bench_convex,
         bench_data_efficiency,
         bench_extract,
+        bench_faults,
         bench_grad_error,
         bench_greedy_order,
         bench_kernels,
@@ -52,6 +53,7 @@ def main() -> None:
         bench_refresh,      # §3.4 refresh cadence off the critical path
         bench_streaming,    # §10 sieve-streaming ingest + objective gate
         bench_tree_select,  # §6 hierarchical tree: wire bytes + parity gates
+        bench_faults,       # §12 fault model: retry overhead + degraded objective
     ]
     failed = 0
     for mod in modules:

@@ -29,6 +29,14 @@ three properties per class:
     selection dies silently on the worker thread and training continues
     on stale data forever — the exact failure mode
     ``AsyncRefresher._raise_if_failed`` exists to prevent.
+  * ``kv-deadline`` — the raw ``blocking_key_value_get*`` client calls
+    may appear only inside the designated wrapper
+    (``process_tree._raw_get_bytes``): every other call site must go
+    through ``_kv_get``, which bounds the wait with the configured
+    deadline and wraps failures in a :class:`KVStoreError` naming the
+    key, pid and tree level.  A bare blocking get is an unbounded,
+    context-free hang waiting to happen (and rapid short-timeout gets
+    segfault the coordination client — DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -42,18 +50,24 @@ from repro.analysis.index import FileIndex, ModuleInfo
 LOCK_RULE = "lock-discipline"
 JOIN_RULE = "thread-join"
 FAILURE_RULE = "thread-failure-propagation"
+KV_RULE = "kv-deadline"
 
 _LOCK_CTORS = frozenset(
     {"threading.Lock", "threading.RLock", "threading.Condition"}
 )
 _THREAD_CTOR = "threading.Thread"
 
+# the only functions allowed to touch the raw blocking KV getters; all
+# other call sites must use the deadline/error wrapper built on them
+_KV_WRAPPERS = frozenset({"_raw_get_bytes"})
+
 
 class ConcurrencyRule(Rule):
-    rule_ids = (LOCK_RULE, JOIN_RULE, FAILURE_RULE)
+    rule_ids = (LOCK_RULE, JOIN_RULE, FAILURE_RULE, KV_RULE)
     description = (
         "shared attributes written only under the owning lock; spawned "
-        "threads joined and their failures propagated"
+        "threads joined and their failures propagated; blocking KV gets "
+        "confined to the deadline wrapper"
     )
 
     def run(self, index: FileIndex) -> Iterable[Finding]:
@@ -62,6 +76,7 @@ class ConcurrencyRule(Rule):
             for cls in mod.classes.values():
                 findings.extend(_check_lock_discipline(mod, cls))
             findings.extend(_check_threads(mod))
+            findings.extend(_check_kv_deadline(mod))
         return findings
 
 
@@ -247,6 +262,44 @@ def _scope_has_join(scope: ast.AST) -> bool:
         ):
             return True
     return False
+
+
+# ---------------------------------------------------------------------------
+# kv-deadline
+# ---------------------------------------------------------------------------
+
+
+def _check_kv_deadline(mod: ModuleInfo) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr.startswith("blocking_key_value_get")
+        ):
+            continue
+        fn = _enclosing_function(mod, node)
+        if fn is not None and fn.name in _KV_WRAPPERS:
+            continue
+        yield Finding(
+            mod.path,
+            node.lineno,
+            KV_RULE,
+            f"raw '{node.func.attr}' outside the deadline wrapper "
+            f"({', '.join(sorted(_KV_WRAPPERS))}); call _kv_get instead so "
+            "the wait is bounded by the configured deadline and failures "
+            "name the key, pid and tree level",
+        )
+
+
+def _enclosing_function(
+    mod: ModuleInfo, node: ast.AST
+) -> ast.FunctionDef | ast.AsyncFunctionDef | None:
+    cur = mod.parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = mod.parents.get(cur)
+    return None
 
 
 def _captures_failure(fn: ast.AST) -> bool:

@@ -115,6 +115,14 @@ class CraigConfig(LegacyEngineKnobs):
           the typed config with a ``DeprecationWarning``.
       per_class: stratified per-class selection (paper §5).
       seed: PRNG seed threaded to stochastic engines.
+      validate_features: NaN/Inf guard on the selector path (DESIGN.md
+        §12).  A single non-finite proxy row poisons the facility-location
+        argmax silently (NaN compares false everywhere, so the row is
+        never covered and every gain involving it is NaN).  ``'raise'``
+        (default) fails with an informative error naming the bad rows;
+        ``'drop'`` drops them and warns (the dropped count rides
+        ``CoresetSelection.n_dropped`` into refresh meta); ``'off'``
+        skips the check.
     """
 
     mode: Literal["budget", "cover"] = "budget"
@@ -124,6 +132,7 @@ class CraigConfig(LegacyEngineKnobs):
     engine: str | EngineConfig = "auto"
     per_class: bool = True
     seed: int = 0
+    validate_features: Literal["raise", "drop", "off"] = "raise"
 
 
 @dataclasses.dataclass
@@ -146,6 +155,9 @@ class CoresetSelection:
     epsilon_hat: float
     per_class_sizes: dict[int, int] | None = None
     engine: dict | None = None
+    # rows dropped by the validate_features='drop' guard; indices are into
+    # the ORIGINAL pool either way (Σγ == n − n_dropped after a drop)
+    n_dropped: int = 0
 
     @property
     def size(self) -> int:
@@ -215,37 +227,44 @@ class CraigSelector:
         """
         cfg = self.config
         feats = jnp.asarray(feats)
+        n_orig = feats.shape[0]
+        init = self._clean_init(init_selected, n_orig)
+        feats, labels, init, keep_idx = self._validated(feats, labels, init)
         n = feats.shape[0]
-        init = self._clean_init(init_selected, n)
-        if cfg.per_class:
-            if labels is not None:
-                labels = np.asarray(labels)
-                # engine='auto' keys on the pool one greedy run sweeps —
-                # here the largest class, not the union of all classes
-                counts = np.unique(labels, return_counts=True)[1]
-                engine_cfg = self.resolve_engine(
-                    int(counts.max()), _stacklevel=3
+        if cfg.per_class and labels is not None:
+            labels = np.asarray(labels)
+            # engine='auto' keys on the pool one greedy run sweeps —
+            # here the largest class, not the union of all classes
+            counts = np.unique(labels, return_counts=True)[1]
+            engine_cfg = self.resolve_engine(int(counts.max()), _stacklevel=3)
+            sel = self._select_per_class(feats, labels, init, engine_cfg)
+        else:
+            if cfg.per_class:
+                warnings.warn(
+                    "per_class=True but no labels were provided; falling "
+                    "back to flat (unstratified) selection — pass labels to "
+                    "CraigSelector.select for the paper-§5 per-class mode",
+                    UserWarning,
+                    stacklevel=2,
                 )
-                return self._select_per_class(feats, labels, init, engine_cfg)
-            warnings.warn(
-                "per_class=True but no labels were provided; falling back "
-                "to flat (unstratified) selection — pass labels to "
-                "CraigSelector.select for the paper-§5 per-class mode",
-                UserWarning,
-                stacklevel=2,
+            engine_cfg = self.resolve_engine(n, _stacklevel=3)
+            budget = self._budget(n)
+            idx, w, gains, coverage = self._select_flat(
+                feats, budget, init, engine_cfg
             )
-        engine_cfg = self.resolve_engine(n, _stacklevel=3)
-        budget = self._budget(n)
-        idx, w, gains, coverage = self._select_flat(feats, budget, init, engine_cfg)
-        eps_hat = float(coverage)
-        return CoresetSelection(
-            indices=np.asarray(idx, np.int64),
-            weights=np.asarray(w, np.float32),
-            order=np.arange(len(np.asarray(idx))),
-            coverage=float(coverage),
-            epsilon_hat=eps_hat,
-            engine=engine_cfg.to_dict(),
-        )
+            sel = CoresetSelection(
+                indices=np.asarray(idx, np.int64),
+                weights=np.asarray(w, np.float32),
+                order=np.arange(len(np.asarray(idx))),
+                coverage=float(coverage),
+                epsilon_hat=float(coverage),
+                engine=engine_cfg.to_dict(),
+            )
+        if keep_idx is not None:
+            # selection ran on the cleaned pool — map back to original rows
+            sel.indices = keep_idx[np.asarray(sel.indices, np.int64)]
+            sel.n_dropped = int(n_orig - len(keep_idx))
+        return sel
 
     def select_distributed(
         self, feats, mesh, axis_name: str = "data"
@@ -364,9 +383,15 @@ class CraigSelector:
             res = tree_select_mesh(
                 feats, mesh, topology, r_local, r_final, **kwargs
             )
+        health = getattr(res, "health", None) or {}
         provenance = TreeSelectConfig(
             fanouts=topology.fanouts, compress=compress,
             local=engine_cfg.to_dict(),
+            # degradation provenance (DESIGN.md §12): host/mesh drivers have
+            # no process failure domain, so these stay at the clean defaults
+            degraded=bool(health.get("degraded", False)),
+            missing_pids=tuple(health.get("missing_pids", ())),
+            quorum=float(health.get("quorum", 1.0)),
         )
         return CoresetSelection(
             indices=np.asarray(res.indices, np.int64),
@@ -381,6 +406,66 @@ class CraigSelector:
 
     def _budget(self, n: int) -> int:
         return max(1, int(round(self.config.fraction * n)))
+
+    def _validated(
+        self,
+        feats: jax.Array,
+        labels: np.ndarray | None,
+        init: np.ndarray | None,
+    ):
+        """NaN/Inf guard (``CraigConfig.validate_features``, DESIGN.md §12).
+
+        Returns ``(feats, labels, init, keep_idx)`` where ``keep_idx`` is
+        None when nothing was dropped.  Only the (n,) finite mask ever
+        crosses to the host — never the (n, d) feature matrix, so the
+        device-resident extraction handoff (DESIGN.md §9) is preserved.
+        """
+        mode = self.config.validate_features
+        if mode == "off":
+            return feats, labels, init, None
+        if mode not in ("raise", "drop"):
+            raise ValueError(
+                f"validate_features={mode!r} is not a policy; expected "
+                "'raise', 'drop' or 'off'"
+            )
+        finite = np.asarray(jnp.all(jnp.isfinite(feats), axis=1))
+        if bool(finite.all()):
+            return feats, labels, init, None
+        bad = np.nonzero(~finite)[0]
+        if mode == "raise":
+            raise ValueError(
+                f"{bad.size} of {finite.size} proxy feature rows contain "
+                f"NaN/Inf (first bad rows: {bad[:8].tolist()}); a non-finite "
+                "row silently poisons the facility-location argmax.  Fix the "
+                "proxy/extraction (common causes: diverged params, fp16 "
+                "overflow) or set CraigConfig(validate_features='drop') to "
+                "drop-and-warn."
+            )
+        keep_idx = np.nonzero(finite)[0]
+        if keep_idx.size == 0:
+            raise ValueError(
+                "every proxy feature row is NaN/Inf; nothing to select from"
+            )
+        warnings.warn(
+            f"dropping {bad.size} NaN/Inf proxy feature rows before "
+            f"selection (validate_features='drop'); first bad rows: "
+            f"{bad[:8].tolist()}",
+            UserWarning,
+            stacklevel=3,
+        )
+        feats = feats[jnp.asarray(keep_idx)]
+        if labels is not None:
+            labels = np.asarray(labels)[keep_idx]
+        if init is not None:
+            # remap the warm-start prefix onto cleaned-pool positions,
+            # dropping medoids that were themselves corrupted
+            pos = np.full(finite.size, -1, np.int64)
+            pos[keep_idx] = np.arange(keep_idx.size)
+            init = pos[init]
+            init = init[init >= 0]
+            if init.size == 0:
+                init = None
+        return feats, labels, init, keep_idx
 
     @staticmethod
     def _clean_init(init_selected, n: int) -> np.ndarray | None:

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import Prefetcher
+from repro.faults import fault_value
 
 __all__ = ["ProxyExtractor", "make_scan_extract"]
 
@@ -215,4 +216,7 @@ class ProxyExtractor:
                 outs.append(self._scan(params, self._assemble(pool_idx, lo, m)))
         feats = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
         feats = feats[:n_pool]  # validity mask: cut padded tail rows on device
+        # fault hook (DESIGN.md §12): lets tests corrupt extracted features
+        # (kind='nan') to exercise the selector's validate_features guard
+        feats = fault_value("extract.features", feats, n_pool=n_pool)
         return feats if device_resident else np.asarray(feats)

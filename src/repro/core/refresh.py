@@ -1,4 +1,4 @@
-"""Asynchronous, warm-started coreset refresh (DESIGN.md §4).
+"""Asynchronous, warm-started coreset refresh (DESIGN.md §4, §12).
 
 CRAIG's practical speedup (paper §5) requires periodic re-selection — deep-net
 proxies drift with w (§3.4, Fig 5) — but a refresh that blocks the step loop
@@ -43,6 +43,17 @@ Checkpoint semantics: the trainer drains the refresher (``wait()``) before
 capturing sampler state, so a published-but-not-installed selection
 round-trips through ``CoresetSampler.state_dict()`` and an in-flight one
 always materializes before the snapshot — a restart never loses a refresh.
+
+Supervision (DESIGN.md §12): each job runs under a
+:class:`~repro.faults.FailurePolicy` — per-attempt retry with exponential
+backoff on the worker thread, then one of three exhaustion routes: re-raise
+on the caller thread (``'raise'``, the default fail-fast contract),
+abandon-and-log (``'keep_stale'`` — nothing publishes, the ``on_failure``
+callback records the event, training keeps sampling the installed coreset),
+or one inline re-run at the caller's next touch point
+(``'sync_fallback'`` — degrade to a synchronous refresh instead of skipping
+it).  Failure state is per *job*: an exhausted job never poisons the
+refresher — the next submit/ingest runs normally.
 """
 from __future__ import annotations
 
@@ -53,6 +64,8 @@ from typing import Any, Callable, Literal
 
 import jax
 import numpy as np
+
+from repro.faults import FailurePolicy, fault_point
 
 __all__ = ["AsyncRefresher", "RefreshResult"]
 
@@ -65,12 +78,17 @@ class RefreshResult:
     counter the :class:`~repro.data.pipeline.CoresetSampler` uses for its
     staged/installed buffers, so logs, checkpoints, and benchmarks can
     correlate a selection with the params snapshot that produced it.
+    ``attempts`` counts work attempts (1 = first try succeeded);
+    ``fell_back`` marks a result produced by the ``'sync_fallback'`` inline
+    re-run on the caller thread.
     """
 
     version: int
     value: Any
     wall_time_s: float
     error: BaseException | None = None
+    attempts: int = 1
+    fell_back: bool = False
 
 
 class AsyncRefresher:
@@ -90,10 +108,17 @@ class AsyncRefresher:
     single slot, readable via :meth:`collect`; an optional ``on_complete``
     callback fires on the worker thread the moment a job succeeds (the
     trainer uses it to stage the selection into the sampler so checkpoints
-    see it without polling).  Worker exceptions are captured and re-raised
-    on the caller's thread at the next :meth:`wait`/:meth:`collect`/
-    :meth:`submit` — a failed selection must fail training, not silently
-    train on stale data forever.
+    see it without polling).
+
+    Failure handling is governed by ``failure_policy``
+    (:class:`~repro.faults.FailurePolicy`): the worker retries the work
+    with exponential backoff, and exhaustion routes to re-raise on the
+    caller's thread at the next :meth:`wait`/:meth:`collect`/
+    :meth:`submit` (``'raise'`` — a failed selection must fail training,
+    not silently train on stale data forever), to abandon-and-log
+    (``'keep_stale'`` — ``on_failure`` fires with the failed
+    ``RefreshResult``; the refresher stays usable), or to one inline
+    re-run at the caller's next touch point (``'sync_fallback'``).
 
     With an ``ingest_fn``, the refresher additionally serves the streaming
     path (DESIGN.md §10): :meth:`ingest` queues pool deltas and drains the
@@ -108,6 +133,8 @@ class AsyncRefresher:
         mode: Literal["sync", "async"] = "async",
         on_complete: Callable[[RefreshResult], None] | None = None,
         ingest_fn: Callable[[list], Any] | None = None,
+        failure_policy: FailurePolicy | None = None,
+        on_failure: Callable[[RefreshResult], None] | None = None,
     ):
         if mode not in ("sync", "async"):
             raise ValueError(f"unknown refresh mode {mode!r}")
@@ -115,11 +142,15 @@ class AsyncRefresher:
         self._mode = mode
         self._on_complete = on_complete
         self._ingest_fn = ingest_fn
+        self._policy = failure_policy or FailurePolicy()
+        self._on_failure = on_failure
         self._version = 0
         self._thread: threading.Thread | None = None
         self._result: RefreshResult | None = None
         self._lock = threading.Lock()
         self._pending: list = []
+        self._fallback: tuple[RefreshResult, Callable[[], Any]] | None = None
+        self._last_failure: RefreshResult | None = None
 
     # -- state ---------------------------------------------------------------
 
@@ -137,6 +168,17 @@ class AsyncRefresher:
         t = self._thread
         return t is not None and t.is_alive()
 
+    @property
+    def failure_policy(self) -> FailurePolicy:
+        return self._policy
+
+    @property
+    def last_failure(self) -> RefreshResult | None:
+        """Most recent abandoned job (``on_exhaustion='keep_stale'`` only);
+        informational — reading it does not consume anything."""
+        with self._lock:
+            return self._last_failure
+
     # -- lifecycle -----------------------------------------------------------
 
     def submit(self, params: Any, *, snapshot: bool = True) -> int:
@@ -148,7 +190,8 @@ class AsyncRefresher:
         caller that wants coalescing wants the :meth:`ingest` path instead.
         A worker failure from a previous job is re-raised here first (as at
         :meth:`wait`/:meth:`collect`) — submitting new work must never
-        silently overwrite an uncollected failure.
+        silently overwrite an uncollected failure — and a pending
+        ``sync_fallback`` re-run executes here first, for the same reason.
 
         Contract: ``jax.Array`` leaves are snapshotted by reference (they
         are immutable), so the caller's parameter *update* must not donate
@@ -158,6 +201,7 @@ class AsyncRefresher:
         for exactly this reason; callers that must donate should pass a
         ``jax.device_get`` copy instead.
         """
+        self._run_fallback_if_pending()
         self._raise_if_failed()
         if self.busy:
             raise RuntimeError(
@@ -181,21 +225,19 @@ class AsyncRefresher:
         snap = jax.tree.map(snap_leaf, params) if snapshot else params
 
         def job() -> None:
-            t0 = time.time()
             try:
-                value = self._work_fn(snap)
-                res = RefreshResult(version, value, time.time() - t0)
-                if self._on_complete is not None:
-                    # inside the capture: a failed publish must surface at
-                    # wait()/collect(), not vanish on the worker thread
-                    self._on_complete(res)
-            except BaseException as e:  # noqa: BLE001 — re-raised at wait()
-                res = RefreshResult(version, None, time.time() - t0, error=e)
-            with self._lock:
-                self._result = res
+                self._run_job(version, lambda: self._work_fn(snap))
+            except BaseException as e:  # noqa: BLE001 — never die silently
+                # _run_job routes everything through the policy; this outer
+                # capture only exists so a bug in the routing itself still
+                # surfaces on the caller thread instead of killing the
+                # worker silently
+                with self._lock:
+                    self._result = RefreshResult(version, None, 0.0, error=e)
 
         if self._mode == "sync":
             job()
+            self._run_fallback_if_pending()
             self._raise_if_failed()
         else:
             # non-daemon: the interpreter joins it at shutdown instead of
@@ -205,6 +247,124 @@ class AsyncRefresher:
             )
             self._thread.start()
         return version
+
+    # -- supervised job runner -----------------------------------------------
+
+    def _run_job(self, version: int, fn: Callable[[], Any]) -> None:
+        """One supervised job: retry the work per the policy, publish, or
+        route the exhausted failure.  Runs on the worker thread in async
+        mode, inline in sync mode."""
+        policy = self._policy
+        t0 = time.time()
+        error: BaseException | None = None
+        attempts = 0
+        for attempt in range(policy.max_retries + 1):
+            attempts += 1
+            try:
+                fault_point("refresh.worker", version=version, attempt=attempt)
+                value = fn()
+            except BaseException as e:  # noqa: BLE001 — routed via policy
+                error = e
+                if attempt < policy.max_retries:
+                    time.sleep(policy.backoff_s(attempt))
+                continue
+            res = RefreshResult(
+                version, value, time.time() - t0, attempts=attempts
+            )
+            try:
+                if self._on_complete is not None:
+                    # a failed publish must surface at wait()/collect(), not
+                    # vanish on the worker thread — but it is NOT retryable:
+                    # the work succeeded, and re-running it could stage the
+                    # same version twice
+                    self._on_complete(res)
+            except BaseException as e:  # noqa: BLE001 — routed via policy
+                self._exhaust(
+                    RefreshResult(
+                        version, None, time.time() - t0, error=e,
+                        attempts=attempts,
+                    ),
+                    fn,
+                    retryable=False,
+                )
+                return
+            with self._lock:
+                self._result = res
+            return
+        self._exhaust(
+            RefreshResult(
+                version, None, time.time() - t0, error=error,
+                attempts=attempts,
+            ),
+            fn,
+            retryable=True,
+        )
+
+    def _exhaust(
+        self,
+        res: RefreshResult,
+        fn: Callable[[], Any],
+        *,
+        retryable: bool,
+    ) -> None:
+        """Route a job whose every attempt failed per the policy's
+        exhaustion mode.  ``retryable=False`` (a publish failure) always
+        takes the raise route — re-running the work could double-stage."""
+        mode = self._policy.on_exhaustion
+        if mode == "sync_fallback" and retryable:
+            with self._lock:
+                self._fallback = (res, fn)
+            return
+        if mode == "keep_stale":
+            with self._lock:
+                self._last_failure = res
+            cb = self._on_failure
+            if cb is None:
+                return
+            try:
+                cb(res)
+            except BaseException as e:  # noqa: BLE001 — must not die silently
+                with self._lock:
+                    self._result = dataclasses.replace(res, error=e)
+            return
+        with self._lock:
+            self._result = res
+
+    def _run_fallback_if_pending(self) -> None:
+        """Run an exhausted job's one-shot synchronous re-run inline on the
+        calling thread (``on_exhaustion='sync_fallback'``).  Success
+        publishes through the normal ``on_complete``/result path with
+        ``fell_back=True``; a second failure is stored and re-raised like
+        any worker failure."""
+        with self._lock:
+            pending, self._fallback = self._fallback, None
+        if pending is None:
+            return
+        failed, fn = pending
+        t0 = time.time()
+        try:
+            value = fn()
+            res = RefreshResult(
+                failed.version,
+                value,
+                failed.wall_time_s + time.time() - t0,
+                attempts=failed.attempts + 1,
+                fell_back=True,
+            )
+            if self._on_complete is not None:
+                self._on_complete(res)
+            with self._lock:
+                self._result = res
+        except BaseException as e:  # noqa: BLE001 — re-raised at wait()
+            with self._lock:
+                self._result = RefreshResult(
+                    failed.version,
+                    None,
+                    failed.wall_time_s + time.time() - t0,
+                    error=e,
+                    attempts=failed.attempts + 1,
+                    fell_back=True,
+                )
 
     # -- streaming ingest (coalescing) ---------------------------------------
 
@@ -227,8 +387,9 @@ class AsyncRefresher:
         Returns the drained version, or ``None`` if the deltas were queued
         behind an in-flight job — they drain at the next
         ingest/:meth:`wait`/:meth:`collect` touch point.  Worker failures
-        surface exactly like submit's: re-raised on the caller's thread at
-        the next drain attempt, ``wait``, or ``collect``.
+        surface exactly like submit's: routed per the failure policy, with
+        the ``'raise'`` mode re-raising on the caller's thread at the next
+        drain attempt, ``wait``, or ``collect``.
         """
         if self._ingest_fn is None:
             raise RuntimeError(
@@ -245,6 +406,7 @@ class AsyncRefresher:
         """Start one coalesced ingest job if idle and deltas are queued."""
         if self.busy:
             return None
+        self._run_fallback_if_pending()
         self._raise_if_failed()
         with self._lock:
             if not self._pending:
@@ -254,19 +416,15 @@ class AsyncRefresher:
         version = self._version
 
         def job() -> None:
-            t0 = time.time()
             try:
-                value = self._ingest_fn(batch)
-                res = RefreshResult(version, value, time.time() - t0)
-                if self._on_complete is not None:
-                    self._on_complete(res)
-            except BaseException as e:  # noqa: BLE001 — re-raised at wait()
-                res = RefreshResult(version, None, time.time() - t0, error=e)
-            with self._lock:
-                self._result = res
+                self._run_job(version, lambda: self._ingest_fn(batch))
+            except BaseException as e:  # noqa: BLE001 — never die silently
+                with self._lock:
+                    self._result = RefreshResult(version, None, 0.0, error=e)
 
         if self._mode == "sync":
             job()
+            self._run_fallback_if_pending()
             self._raise_if_failed()
         else:
             self._thread = threading.Thread(
@@ -285,17 +443,33 @@ class AsyncRefresher:
         self._version = max(self._version, int(version))
 
     def wait(self, timeout: float | None = None) -> None:
-        """Block until no job is in flight and no queued deltas remain;
-        re-raise a worker failure."""
+        """Block until no job is in flight, no queued deltas remain and no
+        sync fallback is pending; re-raise a worker failure.
+
+        ``timeout`` is a TOTAL deadline across everything outstanding
+        (thread join + any coalesced drains it unblocks), not a per-join
+        budget.  On expiry a ``TimeoutError`` raises and the refresher
+        stays fully usable: the in-flight job keeps running, ``busy`` stays
+        true, and the job's eventual outcome — including a failure —
+        surfaces exactly once at the next
+        ``wait``/``collect``/``submit``/``ingest`` touch point
+        (tests/test_refresh.py pins this regression).
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             t = self._thread
             if t is not None:
-                t.join(timeout)
+                remaining = (
+                    None if deadline is None else deadline - time.monotonic()
+                )
+                if remaining is None or remaining > 0:
+                    t.join(remaining)
                 if t.is_alive():
                     raise TimeoutError(
                         f"refresh still running after {timeout}s"
                     )
                 self._thread = None
+            self._run_fallback_if_pending()
             self._raise_if_failed()
             if self._ingest_fn is not None and self._drain() is not None:
                 continue
@@ -320,5 +494,6 @@ class AsyncRefresher:
                 res = None
         if res is not None:
             raise RuntimeError(
-                f"coreset refresh v{res.version} failed"
+                f"coreset refresh v{res.version} failed after "
+                f"{res.attempts} attempt(s)"
             ) from res.error

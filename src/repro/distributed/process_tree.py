@@ -18,22 +18,52 @@ service's key-value store — available on every backend the moment
 * re-weighting partials are combined in pid order, matching the host
   driver's leaf-order accumulation.
 
-The selection is bit-identical to ``tree_select_host`` on the
-concatenated pool (indices and weights exactly; coverage to float-sum
-association), because every payload — including a merge owner's own —
-passes through the same wire codec in the same leaf order.  The tier-2
-CI lane (``tests/test_multiprocess_tree.py``) runs this end to end with
-2 real processes.
+With every process alive the selection is bit-identical to
+``tree_select_host`` on the concatenated pool (indices and weights
+exactly; coverage to float-sum association), because every payload —
+including a merge owner's own — passes through the same wire codec in
+the same leaf order.  The tier-2 CI lane
+(``tests/test_multiprocess_tree.py``) runs this end to end with real
+processes, including a chaos case that SIGKILLs a leaf mid-round.
+
+Fault model (DESIGN.md §12).  Every process publishes a heartbeat key on
+a background thread; every *wait* on another process's key is bounded by
+a per-level deadline (``HealthConfig.level_deadline_s``, defaulting to
+the ``REPRO_KV_TIMEOUT_MS`` env knob) and monitored against the
+publisher's heartbeat.  When a child subtree misses its deadline or its
+owner's heartbeat goes silent, the parent owner *proceeds without it* —
+provided the surviving leaves still meet ``HealthConfig.min_quorum`` —
+and records the loss in a dead-leaf mask that composes up the tree
+(payload published first, mask last, so a mask's arrival guarantees its
+payload is readable).  The root's mask is authoritative: every process
+learns the final excluded set from it, excluded-but-alive processes
+raise :class:`ShardExcludedError` (the straggler-exclusion contract),
+and the returned :class:`TreeSelection` carries a ``health`` record
+(``degraded``, ``missing_pids``, achieved ``quorum``) with Σγ equal to
+the *surviving* shards' pool size.  CREST's observation (selection from
+pool subsets still converges, PAPERS.md) is what makes proceeding on a
+quorum principled rather than heuristic.
+
+Failure-domain limits, by design: a dead merge *owner* loses its whole
+subtree's candidates (non-owner survivors below it are excluded and
+raise); the root owner (pid 0) and any process dying *after* the root
+broadcast (re-weight partials) are single points of failure — those
+deaths surface as :class:`KVStoreError` after the deadline, not as
+degradation.
 
 Keys are namespaced by a per-call tag; the default tag comes from a
 module-level counter, so all processes must make the same sequence of
 calls (the usual SPMD contract).  Payload shapes are derived from the
-static (r, d) candidate-set sizes, so no shape metadata crosses the
-wire.
+static (r, d) candidate-set sizes plus the shared dead-leaf masks, so no
+shape metadata crosses the wire.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
+import os
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -53,11 +83,114 @@ from repro.distributed.tree_select import (
     default_r_node,
     wire_bytes_plan,
 )
+from repro.faults import fault_point
 
-__all__ = ["tree_select_processes", "kv_client"]
+__all__ = [
+    "tree_select_processes",
+    "kv_client",
+    "kv_timeout_ms",
+    "HealthConfig",
+    "KVStoreError",
+    "QuorumError",
+    "ShardExcludedError",
+    "KV_TIMEOUT_ENV",
+]
 
 _CALLS = itertools.count()
-_TIMEOUT_MS = 300_000
+
+KV_TIMEOUT_ENV = "REPRO_KV_TIMEOUT_MS"
+_DEFAULT_TIMEOUT_MS = 300_000
+
+
+def kv_timeout_ms() -> int:
+    """Default KV-store blocking-get timeout in ms.
+
+    Reads the ``REPRO_KV_TIMEOUT_MS`` env knob (replacing the old
+    hardcoded 300 s constant); also the default per-level deadline when
+    :class:`HealthConfig` does not set one explicitly.
+    """
+    raw = os.environ.get(KV_TIMEOUT_ENV)
+    if raw is None:
+        return _DEFAULT_TIMEOUT_MS
+    try:
+        ms = int(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"${KV_TIMEOUT_ENV}={raw!r} is not an integer millisecond count"
+        ) from e
+    if ms <= 0:
+        raise ValueError(f"${KV_TIMEOUT_ENV}={ms} must be > 0")
+    return ms
+
+
+class KVStoreError(RuntimeError):
+    """A KV-store get failed terminally (missing key / dead peer past the
+    point of graceful degradation); names the key, pid and tree level."""
+
+
+class QuorumError(RuntimeError):
+    """Too few surviving leaves to proceed (below ``min_quorum``)."""
+
+
+class ShardExcludedError(RuntimeError):
+    """This process was excluded from the selection (its subtree's owner
+    died before publishing) — its shard is not represented in the result
+    the survivors agreed on, so it must not use that result as its own."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Liveness/degradation knobs for :func:`tree_select_processes`.
+
+    Attributes:
+      level_deadline_s: how long a parent owner waits for one child
+        subtree's payload before declaring it dead (None → the
+        ``REPRO_KV_TIMEOUT_MS`` env knob, itself defaulting to 300 s —
+        the legacy behavior).
+      heartbeat_interval_s: liveness-key publish period.
+      heartbeat_grace_s: silence longer than this marks a peer dead
+        (must cover GC/compile pauses; ≥ 2× the interval).
+      poll_ms: KV poll slice while waiting under a deadline.
+      min_quorum: minimum surviving-leaf fraction per merge group; below
+        it the selection fails with :class:`QuorumError` instead of
+        degrading (1.0 = any death is fatal, the pre-fault-model
+        behavior except it fails within the deadline, not 300 s).
+    """
+
+    level_deadline_s: float | None = None
+    heartbeat_interval_s: float = 0.5
+    heartbeat_grace_s: float = 5.0
+    poll_ms: int = 100
+    min_quorum: float = 1.0
+
+    def __post_init__(self):
+        if self.level_deadline_s is not None and self.level_deadline_s <= 0:
+            raise ValueError(
+                f"level_deadline_s={self.level_deadline_s} must be > 0"
+            )
+        if self.heartbeat_interval_s <= 0:
+            raise ValueError(
+                f"heartbeat_interval_s={self.heartbeat_interval_s} must be > 0"
+            )
+        if self.heartbeat_grace_s < 2 * self.heartbeat_interval_s:
+            raise ValueError(
+                f"heartbeat_grace_s={self.heartbeat_grace_s} must be ≥ 2× "
+                f"heartbeat_interval_s={self.heartbeat_interval_s} or every "
+                "scheduling hiccup reads as a death"
+            )
+        if int(self.poll_ms) < 1:
+            raise ValueError(f"poll_ms={self.poll_ms} must be ≥ 1")
+        if not 0.0 < self.min_quorum <= 1.0:
+            raise ValueError(
+                f"min_quorum={self.min_quorum} must be in (0, 1]"
+            )
+
+    def deadline_s(self) -> float:
+        return (
+            kv_timeout_ms() / 1000.0
+            if self.level_deadline_s is None
+            else float(self.level_deadline_s)
+        )
 
 
 def kv_client():
@@ -76,13 +209,235 @@ def kv_client():
     return client
 
 
+# ---------------------------------------------------------------------------
+# KV wire primitives.  _raw_get_bytes is the ONLY call site of the raw
+# blocking getters (repro-lint's kv-deadline rule enforces this); polling
+# uses the NON-blocking directory listing instead — repeated short-timeout
+# blocking gets race the coordination client's RPC teardown and segfault
+# (observed on the pinned jaxlib), so every key a process may *poll*
+# (heartbeats, dead masks, canonical sizes) carries a STRING value readable
+# via key_value_dir_get, and bulk binary payloads are only ever read with a
+# full-deadline blocking get after their commit record has arrived.
+# ---------------------------------------------------------------------------
+
+
+def _raw_get_bytes(client, key: str, timeout_ms: int) -> bytes:
+    return client.blocking_key_value_get_bytes(key, int(timeout_ms))
+
+
+def _put_cell(client, key: str, value: str) -> None:
+    """Publish a *polled cell*: a UTF-8 string value at ``{key}/v`` (the
+    directory listing has directory semantics — it matches ``{key}/…``,
+    never ``{key}`` itself — so pollable values live one level down)."""
+    client.key_value_set(f"{key}/v", str(value))
+
+
+def _poll_str(client, key: str) -> str | None:
+    """Non-blocking read of the polled cell at ``key``: its string value,
+    or None if absent (any transport error reads as absent — the
+    *deadline* decides when absence becomes an error)."""
+    try:
+        fault_point("kv.get", key=key)
+        entries = client.key_value_dir_get(key)
+    except Exception:  # noqa: BLE001 — absence, by contract
+        return None
+    for k, v in entries:
+        if k == f"{key}/v":
+            return v
+    return None
+
+
+def _encode_mask(mask: np.ndarray) -> str:
+    return "".join("1" if x else "0" for x in mask)
+
+
+def _decode_mask(s: str) -> np.ndarray:
+    return np.array([c == "1" for c in s], np.int8)
+
+
+def _kv_get(
+    client,
+    key: str,
+    shape,
+    dtype,
+    *,
+    pid: int,
+    level,
+    what: str,
+    timeout_ms: int | None = None,
+) -> np.ndarray:
+    """Blocking KV get with a deadline and a contextual error: any failure
+    (timeout, dropped key, transport) surfaces as a :class:`KVStoreError`
+    naming the key, the waiting pid and the tree level — never the raw
+    XLA/coordination-service exception."""
+    timeout_ms = kv_timeout_ms() if timeout_ms is None else int(timeout_ms)
+    try:
+        fault_point("kv.get", key=key, pid=pid, level=level)
+        raw = _raw_get_bytes(client, key, timeout_ms)
+    except Exception as e:  # noqa: BLE001 — re-raised with full context
+        raise KVStoreError(
+            f"KV get of key {key!r} ({what}) failed in pid {pid} at tree "
+            f"level {level} after {timeout_ms} ms: {type(e).__name__}: {e}"
+        ) from e
+    return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+
+
+class _Heartbeat:
+    """Publishes ``{tag}/hb/{pid}/{seq}`` every interval on a daemon
+    thread (the KV store has no TTL or delete, so liveness is a growing
+    sequence of per-beat keys, consumed in order by monitors)."""
+
+    def __init__(self, client, tag: str, pid: int, interval_s: float):
+        self._client = client
+        self._key = f"{tag}/hb/{pid}"
+        self._interval_s = float(interval_s)
+        self._stop = threading.Event()
+        self.error: BaseException | None = None
+        self._thread = threading.Thread(
+            target=self._run, name=f"tree-heartbeat-{pid}", daemon=True
+        )
+        self._thread.start()
+
+    def _run(self) -> None:
+        seq = 0
+        try:
+            while not self._stop.is_set():
+                self._client.key_value_set(f"{self._key}/{seq}", "1")
+                seq += 1
+                self._stop.wait(self._interval_s)
+        except BaseException as e:  # noqa: BLE001 — surfaced via .error
+            self.error = e
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+
+
+class _HeartbeatMonitor:
+    """Watches one peer's heartbeat directory; ``alive()`` is False once
+    the peer has been silent longer than the grace window.  A growing
+    beat count (one listing per check — O(beats), fine at selection
+    timescales) refreshes the last-seen clock."""
+
+    def __init__(self, client, tag: str, pid: int, grace_s: float):
+        self._client = client
+        self._key = f"{tag}/hb/{pid}"
+        self._grace_s = float(grace_s)
+        self._n_beats = 0
+        self._last_seen = time.monotonic()  # creation counts as a beat
+
+    def alive(self) -> bool:
+        try:
+            n = len(self._client.key_value_dir_get(self._key))
+        except Exception:  # noqa: BLE001 — transient listing failure
+            n = self._n_beats
+        if n > self._n_beats:
+            self._n_beats = n
+            self._last_seen = time.monotonic()
+        return time.monotonic() - self._last_seen < self._grace_s
+
+
+def _await_key(
+    client,
+    key: str,
+    *,
+    deadline_s: float,
+    poll_ms: int,
+    monitor: _HeartbeatMonitor | None = None,
+) -> str | None:
+    """Wait for the polled cell at ``key`` under a deadline, optionally
+    monitoring its publisher's heartbeat.  Returns the string value, or
+    None when the deadline expires or the publisher dies first.  A dead
+    publisher gets ONE final probe — publish-then-die is a committed
+    publish and must be honored (the payload-before-mask ordering relies
+    on exactly this)."""
+    deadline = time.monotonic() + float(deadline_s)
+    poll_s = max(1, int(poll_ms)) / 1000.0
+    while True:
+        val = _poll_str(client, key)
+        if val is not None:
+            return val
+        now = time.monotonic()
+        if now >= deadline:
+            return None
+        if monitor is not None and not monitor.alive():
+            return _poll_str(client, key)
+        time.sleep(min(poll_s, deadline - now))
+
+
+# ---------------------------------------------------------------------------
+# Degraded candidate counts
+# ---------------------------------------------------------------------------
+
+
+def _nominal_r(
+    level: int, topology: TreeTopology, r_local: int, r_node: int, r_final: int
+) -> int:
+    """Candidate count a node holds after ``level`` merges, clean tree."""
+    if level == 0:
+        return int(r_local)
+    fanout = topology.fanouts[level - 1]
+    below = _nominal_r(level - 1, topology, r_local, r_node, r_final)
+    if level == topology.depth:
+        return int(r_final)
+    return min(int(r_node), fanout * below)
+
+
+def _node_r(
+    level: int,
+    node: int,
+    dead: np.ndarray,
+    topology: TreeTopology,
+    r_local: int,
+    r_node: int,
+    r_final: int,
+) -> int:
+    """Candidate count node ``node`` holds after ``level`` merges given the
+    dead-leaf mask — exactly :func:`_nominal_r` when its subtree is clean,
+    ``min(declared budget, surviving union)`` otherwise, 0 when the whole
+    subtree is dead.  Both sides of every wire derive payload shapes from
+    this, so a parent always reads exactly what a degraded child wrote."""
+    if level == 0:
+        return 0 if dead[node] else int(r_local)
+    fanout = topology.fanouts[level - 1]
+    union = sum(
+        _node_r(
+            level - 1, node * fanout + c, dead, topology,
+            r_local, r_node, r_final,
+        )
+        for c in range(fanout)
+    )
+    if union == 0:
+        return 0
+    return min(
+        _nominal_r(level, topology, r_local, r_node, r_final), union
+    )
+
+
+def _require_quorum(
+    alive_leaves: int,
+    total_leaves: int,
+    min_quorum: float,
+    *,
+    level,
+    node: int,
+    missing: list[int],
+) -> None:
+    if alive_leaves / max(total_leaves, 1) < min_quorum - 1e-9:
+        raise QuorumError(
+            f"tree_select_processes: merge level {level} node {node} has "
+            f"only {alive_leaves}/{total_leaves} surviving leaves, below "
+            f"min_quorum={min_quorum} (dead pids: {sorted(missing)})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Wire payloads
+# ---------------------------------------------------------------------------
+
+
 def _put(client, key: str, arr: np.ndarray) -> None:
     client.key_value_set_bytes(key, np.ascontiguousarray(arr).tobytes())
-
-
-def _get(client, key: str, shape, dtype) -> np.ndarray:
-    raw = client.blocking_key_value_get_bytes(key, _TIMEOUT_MS)
-    return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
 
 
 def _put_payload(client, key, feats, w, gidx, compress):
@@ -97,16 +452,27 @@ def _put_payload(client, key, feats, w, gidx, compress):
     _put(client, key + "/g", np.asarray(gidx, np.int64))
 
 
-def _get_payload(client, key, r, d, compress):
+def _get_payload(client, key, r, d, compress, *, pid, level, timeout_ms=None):
+    kw = dict(pid=pid, level=level, timeout_ms=timeout_ms)
     if compress == "int8":
-        q = _get(client, key + "/q", (r, d), np.int8)
-        s = _get(client, key + "/s", (r,), np.float32)
+        q = _kv_get(client, key + "/q", (r, d), np.int8,
+                    what="candidate int8 payload", **kw)
+        s = _kv_get(client, key + "/s", (r,), np.float32,
+                    what="candidate scales", **kw)
         feats = np.asarray(dequantize_rows_int8(jnp.asarray(q), jnp.asarray(s)))
     else:
-        feats = _get(client, key + "/f", (r, d), np.float32)
-    w = _get(client, key + "/w", (r,), np.float32)
-    gidx = _get(client, key + "/g", (r,), np.int64)
+        feats = _kv_get(client, key + "/f", (r, d), np.float32,
+                        what="candidate fp32 payload", **kw)
+    w = _kv_get(client, key + "/w", (r,), np.float32,
+                what="candidate weights", **kw)
+    gidx = _kv_get(client, key + "/g", (r,), np.int64,
+                   what="candidate global ids", **kw)
     return feats, w, gidx
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
 
 
 def tree_select_processes(
@@ -120,17 +486,20 @@ def tree_select_processes(
     compress: str = "int8",
     squared_coverage: bool = False,
     tag: str | None = None,
+    health: HealthConfig | None = None,
 ) -> TreeSelection:
     """Hierarchical selection with one process per leaf (SPMD: every
     process calls with its own ``(n_pid, d)`` shard; ragged shard sizes
     are fine).  Returns the full replicated :class:`TreeSelection` in
-    every process, with global indices into the pid-order concatenated
-    pool."""
+    every surviving process, with global indices into the pid-order
+    concatenation of the *surviving* shards; its ``health`` field records
+    any quorum degradation (module docstring)."""
     if compress not in WIRE_MODES:
         raise ValueError(
             f"compress={compress!r} is not a wire mode; expected one of "
             f"{WIRE_MODES}"
         )
+    health = HealthConfig() if health is None else health
     pid = jax.process_index()
     nproc = jax.process_count()
     if nproc != topology.n_leaves:
@@ -144,93 +513,240 @@ def tree_select_processes(
     feats_local = jnp.asarray(feats_local, jnp.float32)
     n_local, d = feats_local.shape
     r_node = default_r_node(r_local, r_final) if r_node is None else int(r_node)
+    deadline_s = health.deadline_s()
+    poll_ms = int(health.poll_ms)
+    deadline_ms = int(deadline_s * 1000)
 
-    # Global index base: publish shard sizes, prefix-sum in pid order.
-    client.key_value_set(f"{tag}/n/{pid}", str(n_local))
-    sizes = [
-        int(client.blocking_key_value_get(f"{tag}/n/{p}", _TIMEOUT_MS))
-        for p in range(nproc)
-    ]
-    _check_tree_counts(
-        sizes, topology, r_local, r_node, r_final,
-        where="tree_select_processes",
-    )
-    base = sum(sizes[:pid])
-    engine_cfg = resolve_round1_config(local_engine, {}, min(sizes))
+    hb = _Heartbeat(client, tag, pid, health.heartbeat_interval_s)
+    try:
+        monitors = {
+            p: _HeartbeatMonitor(client, tag, p, health.heartbeat_grace_s)
+            for p in range(nproc)
+            if p != pid
+        }
 
-    local_idx, local_w = leaf_round(feats_local, r_local, engine_cfg)
-    cand_feats = np.asarray(feats_local[local_idx], np.float32)
-    cand_w = np.asarray(local_w, np.float32)
-    cand_gidx = base + np.asarray(local_idx, np.int64)
-
-    # Merge levels: live node owners publish, parent owners merge.  A
-    # process owns its level-l node iff pid % stride == 0.
-    stride = 1
-    r = r_local
-    for level, fanout in enumerate(topology.fanouts):
-        if pid % stride == 0:
-            node = pid // stride
-            _put_payload(
-                client, f"{tag}/l{level}/{node}", cand_feats, cand_w,
-                cand_gidx, compress,
-            )
-        parent_stride = stride * fanout
-        budget = r_final if level == topology.depth - 1 else min(
-            r_node, fanout * r
-        )
-        if pid % parent_stride == 0:
-            first_child = (pid // stride)  # == pid // stride, a multiple of fanout
-            feats_l, w_l, gidx_l = [], [], []
-            for c in range(first_child, first_child + fanout):
-                f, w, g = _get_payload(
-                    client, f"{tag}/l{level}/{c}", r, d, compress
+        # -- size exchange, root-arbitrated -------------------------------
+        # pid 0 gathers every shard size (a leaf missing its deadline is
+        # declared dead up front) and publishes ONE canonical size/death
+        # vector, so every survivor agrees on the leaf-level dead set and
+        # on the global index bases — no per-process divergence.
+        _put_cell(client, f"{tag}/n/{pid}", str(n_local))
+        if pid == 0:
+            sizes = np.empty((nproc,), np.int64)
+            sizes[0] = n_local
+            for p in range(1, nproc):
+                raw = _await_key(
+                    client, f"{tag}/n/{p}",
+                    deadline_s=deadline_s, poll_ms=poll_ms,
+                    monitor=monitors[p],
                 )
-                feats_l.append(f)
-                w_l.append(w)
-                gidx_l.append(g)
-            union_feats = jnp.asarray(np.concatenate(feats_l))
-            union_w = jnp.asarray(np.concatenate(w_l))
-            union_gidx = np.concatenate(gidx_l)
-            res = merge_round(union_feats, union_w, budget)
-            keep = np.asarray(res.indices)
-            cand_feats = np.asarray(union_feats, np.float32)[keep]
-            cand_w = np.asarray(res.weights, np.float32)
-            cand_gidx = union_gidx[keep]
-        stride = parent_stride
-        r = budget
+                sizes[p] = -1 if raw is None else int(raw)
+            _put_cell(client, f"{tag}/sizes", ",".join(str(int(s)) for s in sizes))
+        else:
+            # 2× the level deadline per peer: covers pid 0's full gather
+            raw = _await_key(
+                client, f"{tag}/sizes",
+                deadline_s=2 * deadline_s * max(1, nproc - 1),
+                poll_ms=poll_ms, monitor=monitors[0],
+            )
+            if raw is None:
+                raise KVStoreError(
+                    f"KV get of key {tag + '/sizes'!r} (canonical shard "
+                    f"sizes) failed in pid {pid} at tree level 0: the root "
+                    "arbiter (pid 0) never published — pid 0 death is "
+                    "fatal by design"
+                )
+            sizes = np.array([int(x) for x in raw.split(",")], np.int64)
+        dead = np.zeros((nproc,), np.int8)
+        dead[sizes < 0] = 1
+        missing = [int(p) for p in np.nonzero(dead)[0]]
+        if dead[pid]:  # we were declared dead but are alive: a straggler
+            raise ShardExcludedError(
+                f"pid {pid} missed the size-exchange deadline "
+                f"({deadline_s:.1f} s) and was excluded from the selection"
+            )
+        _require_quorum(
+            nproc - len(missing), nproc, health.min_quorum,
+            level=0, node=0, missing=missing,
+        )
+        alive_sizes = [int(s) for s in sizes if s >= 0]
+        _check_tree_counts(
+            alive_sizes, topology, r_local, r_node, r_final,
+            where="tree_select_processes",
+        )
+        # global index base over SURVIVING shards in pid order (a dead
+        # shard's points are simply absent from the degraded pool)
+        base = int(sum(s for s in sizes[:pid] if s >= 0))
+        engine_cfg = resolve_round1_config(local_engine, {}, min(alive_sizes))
 
-    # Root broadcast: exact fp32 medoid features + global ids.
-    if pid == 0:
-        _put(client, f"{tag}/root/f", cand_feats)
-        _put(client, f"{tag}/root/g", cand_gidx)
-    root_feats = jnp.asarray(
-        _get(client, f"{tag}/root/f", (r_final, d), np.float32)
-    )
-    root_gidx = _get(client, f"{tag}/root/g", (r_final,), np.int64)
+        local_idx, local_w = leaf_round(feats_local, r_local, engine_cfg)
+        cand_feats = np.asarray(feats_local[local_idx], np.float32)
+        cand_w = np.asarray(local_w, np.float32)
+        cand_gidx = base + np.asarray(local_idx, np.int64)
 
-    # Exact global re-weighting: local partials combined in pid order
-    # (matches the host driver's leaf-order accumulation).
-    sqx = jnp.sum(feats_local * feats_local, axis=-1)
-    sqm = jnp.sum(root_feats * root_feats, axis=-1)
-    d2 = sqx[:, None] + sqm[None, :] - 2.0 * feats_local @ root_feats.T
-    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
-    assign = jnp.argmin(dist, axis=1)
-    local_counts = jnp.zeros((r_final,), jnp.float32).at[assign].add(1.0)
-    min_dist = jnp.min(dist, axis=1)
-    residual = jnp.square(min_dist) / 2.0 if squared_coverage else min_dist
-    partial = np.concatenate(
-        [np.asarray(local_counts, np.float32),
-         np.asarray(jnp.sum(residual), np.float32).reshape(1)]
-    )
-    _put(client, f"{tag}/rw/{pid}", partial)
-    counts = jnp.zeros((r_final,), jnp.float32)
-    coverage = jnp.zeros((), jnp.float32)
-    for p in range(nproc):
-        part = _get(client, f"{tag}/rw/{p}", (r_final + 1,), np.float32)
-        counts = counts + jnp.asarray(part[:r_final])
-        coverage = coverage + jnp.float32(part[r_final])
+        nr = dict(
+            topology=topology, r_local=r_local, r_node=r_node, r_final=r_final
+        )
+
+        # -- merge levels -------------------------------------------------
+        # Live node owners publish payload THEN their dead mask: the mask
+        # is the commit record, so a mask's arrival guarantees the payload
+        # is readable even if the publisher dies in between.
+        stride = 1
+        for level, fanout in enumerate(topology.fanouts):
+            if pid % stride == 0 and not dead[pid]:
+                node = pid // stride
+                key = f"{tag}/l{level}/{node}"
+                fault_point("tree.publish", pid=pid, level=level)
+                _put_payload(
+                    client, key, cand_feats, cand_w, cand_gidx, compress
+                )
+                _put_cell(client, key + "/dead", _encode_mask(dead))
+            parent_stride = stride * fanout
+            if pid % parent_stride == 0:
+                first_child = pid // stride
+                feats_l, w_l, gidx_l = [], [], []
+                for c in range(first_child, first_child + fanout):
+                    child_owner = c * stride
+                    sub = slice(child_owner, child_owner + stride)
+                    if c == first_child:
+                        child_mask = dead.copy()  # our own subtree: local view
+                    elif dead[sub].all():
+                        continue  # known-dead since the size exchange
+                    else:
+                        raw = _await_key(
+                            client, f"{tag}/l{level}/{c}/dead",
+                            deadline_s=deadline_s, poll_ms=poll_ms,
+                            monitor=monitors.get(child_owner),
+                        )
+                        if raw is None:
+                            # a dead owner loses its whole subtree (module
+                            # docstring): survivors below it get excluded
+                            dead[sub] = 1
+                            continue
+                        child_mask = _decode_mask(raw)
+                        dead = np.maximum(dead, child_mask)
+                    child_r = _node_r(level, c, child_mask, **nr)
+                    if child_r == 0:
+                        continue
+                    f, w, g = _get_payload(
+                        client, f"{tag}/l{level}/{c}", child_r, d, compress,
+                        pid=pid, level=level + 1, timeout_ms=deadline_ms,
+                    )
+                    feats_l.append(f)
+                    w_l.append(w)
+                    gidx_l.append(g)
+                missing = [int(p) for p in np.nonzero(dead)[0]]
+                group = slice(first_child * stride, (first_child + fanout) * stride)
+                group_leaves = (group.stop - group.start)
+                _require_quorum(
+                    group_leaves - int(dead[group].sum()), group_leaves,
+                    health.min_quorum,
+                    level=level + 1, node=pid // parent_stride,
+                    missing=missing,
+                )
+                union_feats = jnp.asarray(np.concatenate(feats_l))
+                union_w = jnp.asarray(np.concatenate(w_l))
+                union_gidx = np.concatenate(gidx_l)
+                nominal = _nominal_r(level + 1, topology, r_local, r_node, r_final)
+                budget = min(nominal, int(union_feats.shape[0]))
+                res = merge_round(union_feats, union_w, budget)
+                keep = np.asarray(res.indices)
+                cand_feats = np.asarray(union_feats, np.float32)[keep]
+                cand_w = np.asarray(res.weights, np.float32)
+                cand_gidx = union_gidx[keep]
+            stride = parent_stride
+
+        # -- root broadcast ----------------------------------------------
+        # Same commit ordering: medoids first, the authoritative final
+        # dead mask last.  Everyone keys every remaining shape off that
+        # mask, so survivors agree on r_root and on who re-weights.
+        if pid == 0:
+            fault_point("tree.publish", pid=pid, level=topology.depth)
+            _put(client, f"{tag}/root/f", cand_feats)
+            _put(client, f"{tag}/root/g", cand_gidx)
+            _put_cell(client, f"{tag}/root/dead", _encode_mask(dead))
+            root_mask = dead
+        else:
+            raw = _await_key(
+                client, f"{tag}/root/dead",
+                # pid 0 must finish every merge level first
+                deadline_s=deadline_s * (topology.depth + 1),
+                poll_ms=poll_ms, monitor=monitors[0],
+            )
+            if raw is None:
+                raise KVStoreError(
+                    f"KV get of key {tag + '/root/dead'!r} (final dead "
+                    f"mask) failed in pid {pid} at tree level "
+                    f"{topology.depth}: the root owner (pid 0) never "
+                    "published — pid 0 death is fatal by design"
+                )
+            root_mask = _decode_mask(raw)
+        if root_mask[pid]:
+            raise ShardExcludedError(
+                f"pid {pid} was excluded from the selection (its subtree's "
+                "owner died before publishing its candidates); this "
+                "shard's points are not represented in the survivors' "
+                "result"
+            )
+        missing = [int(p) for p in np.nonzero(root_mask)[0]]
+        r_root = _node_r(topology.depth, 0, root_mask, **nr)
+        root_feats = jnp.asarray(
+            _kv_get(
+                client, f"{tag}/root/f", (r_root, d), np.float32,
+                pid=pid, level=topology.depth, what="root medoid features",
+                timeout_ms=deadline_ms,
+            )
+        )
+        root_gidx = _kv_get(
+            client, f"{tag}/root/g", (r_root,), np.int64,
+            pid=pid, level=topology.depth, what="root medoid global ids",
+            timeout_ms=deadline_ms,
+        )
+
+        # -- exact re-weighting over surviving shards ---------------------
+        # Partials combined in pid order over the NON-excluded pids
+        # (matches the host driver's leaf-order accumulation); a survivor
+        # dying here is past the degradation point — fatal after the
+        # deadline, by design.
+        sqx = jnp.sum(feats_local * feats_local, axis=-1)
+        sqm = jnp.sum(root_feats * root_feats, axis=-1)
+        d2 = sqx[:, None] + sqm[None, :] - 2.0 * feats_local @ root_feats.T
+        dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+        assign = jnp.argmin(dist, axis=1)
+        local_counts = jnp.zeros((r_root,), jnp.float32).at[assign].add(1.0)
+        min_dist = jnp.min(dist, axis=1)
+        residual = jnp.square(min_dist) / 2.0 if squared_coverage else min_dist
+        partial = np.concatenate(
+            [np.asarray(local_counts, np.float32),
+             np.asarray(jnp.sum(residual), np.float32).reshape(1)]
+        )
+        _put(client, f"{tag}/rw/{pid}", partial)
+        counts = jnp.zeros((r_root,), jnp.float32)
+        coverage = jnp.zeros((), jnp.float32)
+        for p in range(nproc):
+            if root_mask[p]:
+                continue
+            part = _kv_get(
+                client, f"{tag}/rw/{p}", (r_root + 1,), np.float32,
+                pid=pid, level=topology.depth, what="re-weight partial",
+                timeout_ms=deadline_ms,
+            )
+            counts = counts + jnp.asarray(part[:r_root])
+            coverage = coverage + jnp.float32(part[r_root])
+    finally:
+        hb.close()
 
     wire = wire_bytes_plan(topology, r_local, r_node, d, compress)
+    health_rec = {
+        "degraded": bool(missing),
+        "missing_pids": missing,
+        "quorum": (nproc - len(missing)) / nproc,
+        "min_quorum": float(health.min_quorum),
+        "r_final": int(r_root),
+        "level_deadline_s": deadline_s,
+    }
     return TreeSelection(
-        jnp.asarray(root_gidx.astype(np.int32)), counts, coverage, wire
+        jnp.asarray(root_gidx.astype(np.int32)), counts, coverage, wire,
+        health_rec,
     )

@@ -163,15 +163,26 @@ class TreeSelectConfig(EngineConfig):
         gathers) or ``'none'`` (fp32 escape hatch).
       local: the resolved *leaf* engine's ``EngineConfig.to_dict()`` —
         nested verbatim so the full execution path is recorded.
+      degraded: True when the process driver completed under quorum
+        degradation (DESIGN.md §12) — one or more leaves died and the
+        selection covers only the surviving shards.
+      missing_pids: the dead leaves' process indices (empty when clean).
+      quorum: achieved surviving-leaf fraction (1.0 when clean).
     """
 
     name: ClassVar[str] = "tree"
     fanouts: tuple[int, ...] = (2,)
     compress: str = "int8"
     local: dict | None = None
+    degraded: bool = False
+    missing_pids: tuple[int, ...] = ()
+    quorum: float = 1.0
 
     def __post_init__(self):
         object.__setattr__(self, "fanouts", tuple(int(f) for f in self.fanouts))
+        object.__setattr__(
+            self, "missing_pids", tuple(int(p) for p in self.missing_pids)
+        )
         if self.compress not in WIRE_MODES:
             raise ValueError(
                 f"compress={self.compress!r} is not a wire mode; "
@@ -272,12 +283,18 @@ class TreeSelection(NamedTuple):
       weights: (r_final,) float32 — exact global γ, Σ == n.
       coverage: () float32 — exact global L(S) over the whole pool.
       wire: static bytes-on-wire accounting (:func:`wire_bytes_plan`).
+      health: degradation record from the process driver (DESIGN.md §12):
+        ``{'degraded', 'missing_pids', 'quorum', 'min_quorum', 'r_final',
+        'level_deadline_s'}``.  None from the host/mesh drivers (no
+        process failure domain), and under degradation ``r_final``/Σγ
+        cover the *surviving* shards only.
     """
 
     indices: jax.Array
     weights: jax.Array
     coverage: jax.Array
     wire: dict
+    health: dict | None = None
 
 
 # ---------------------------------------------------------------------------

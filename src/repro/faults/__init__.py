@@ -1,0 +1,42 @@
+"""Fault injection + failure policy (DESIGN.md §12).
+
+``repro.faults`` is the robustness seam of the codebase: a deterministic,
+seedable fault-injection registry (:class:`FaultPlan` consulted by the
+:func:`fault_point`/:func:`fault_value` hooks threaded through the refresh
+worker, the KV-store wire and feature extraction) plus the
+:class:`FailurePolicy` record that ``AsyncRefresher``, the trainer and the
+coreset service interpret when real work fails.  Pure stdlib + numpy — no
+JAX import, so launch bootstraps and the lint job load it freely.
+"""
+from repro.faults.plan import (
+    ENV_VAR,
+    FAULT_KINDS,
+    FaultInjected,
+    FaultPlan,
+    FaultSpec,
+    active_plan,
+    clear,
+    fault_point,
+    fault_value,
+    injected,
+    install,
+    install_from_env,
+)
+from repro.faults.policy import EXHAUSTION_MODES, FailurePolicy
+
+__all__ = [
+    "ENV_VAR",
+    "EXHAUSTION_MODES",
+    "FAULT_KINDS",
+    "FailurePolicy",
+    "FaultInjected",
+    "FaultPlan",
+    "FaultSpec",
+    "active_plan",
+    "clear",
+    "fault_point",
+    "fault_value",
+    "injected",
+    "install",
+    "install_from_env",
+]

@@ -42,8 +42,10 @@ def _serve_coreset(args, stdin=None, stdout=None) -> None:
     """JSON-lines loop over a CoresetService (sync mode: the response to a
     delta is only written once its drain has published)."""
     from repro.core.engines import StreamingConfig
+    from repro.faults import FailurePolicy, install_from_env
     from repro.serve import CoresetService
 
+    install_from_env()  # chaos tests arm the service via $REPRO_FAULT_PLAN
     stdin = sys.stdin if stdin is None else stdin
     stdout = sys.stdout if stdout is None else stdout
     svc = CoresetService(
@@ -54,6 +56,11 @@ def _serve_coreset(args, stdin=None, stdout=None) -> None:
         per_class=args.per_class,
         mode="sync",
         evict=args.evict,
+        failure_policy=FailurePolicy(
+            max_retries=args.ingest_retries,
+            backoff_base_s=args.ingest_backoff_s,
+            on_exhaustion=args.on_exhaustion,
+        ),
     )
 
     def reply(obj: dict) -> None:
@@ -69,7 +76,16 @@ def _serve_coreset(args, stdin=None, stdout=None) -> None:
             op = req.get("op")
             if op == "delta":
                 version = svc.submit_delta(req["feats"], req.get("labels"))
-                reply({"ok": True, "version": version, "n_seen": svc.n_seen})
+                failure = svc.pop_failure()
+                if failure is not None:
+                    # keep_stale abandonment: the drain was dropped, the
+                    # installed selection is unchanged — tell the client
+                    # explicitly instead of letting the version stall
+                    reply({"ok": False, "n_seen": svc.n_seen, **failure})
+                else:
+                    reply(
+                        {"ok": True, "version": version, "n_seen": svc.n_seen}
+                    )
             elif op == "coreset":
                 u = svc.coreset(block=True)
                 if u is None:
@@ -114,6 +130,16 @@ def main(argv=None) -> None:
     ap.add_argument("--evict", action="store_true",
                     help="bounded-memory mode: drop pool rows no sieve "
                          "references after every drain (O(L·k·d) state)")
+    ap.add_argument("--ingest-retries", type=int, default=0,
+                    help="retries per ingest drain before the exhaustion "
+                         "policy applies (DESIGN.md §12)")
+    ap.add_argument("--ingest-backoff-s", type=float, default=0.05,
+                    help="base of the exponential retry backoff")
+    ap.add_argument("--on-exhaustion", default="raise",
+                    choices=("raise", "keep_stale"),
+                    help="'raise' fails the request; 'keep_stale' keeps "
+                         "serving the installed selection and replies with "
+                         "a craig_refresh_failed event")
     args = ap.parse_args(argv)
 
     if args.coreset:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 __all__ = ["initialize_distributed", "make_tree_mesh", "main"]
 
@@ -82,7 +83,22 @@ def main(argv: list[str] | None = None) -> None:
     p.add_argument("--driver", default="processes",
                    choices=("processes", "mesh"))
     p.add_argument("--seed", type=int, default=0)
+    # liveness/degradation knobs (processes driver; DESIGN.md §12)
+    p.add_argument("--level-deadline-s", type=float, default=None,
+                   help="per-level wait before a child subtree is declared "
+                        "dead (default: $REPRO_KV_TIMEOUT_MS, 300 s)")
+    p.add_argument("--min-quorum", type=float, default=1.0,
+                   help="minimum surviving-leaf fraction; below it the "
+                        "selection fails instead of degrading")
+    p.add_argument("--heartbeat-interval-s", type=float, default=0.5)
+    p.add_argument("--heartbeat-grace-s", type=float, default=5.0)
     args = p.parse_args(argv)
+
+    # chaos lanes arm per-process faults via $REPRO_FAULT_PLAN — installed
+    # before any selection work so injected kills hit the intended site
+    from repro.faults import install_from_env
+
+    install_from_env()
 
     initialize_distributed(args.coordinator, args.num_processes, args.process_id)
 
@@ -103,13 +119,22 @@ def main(argv: list[str] | None = None) -> None:
             compress=args.compress,
         )
     else:
-        from repro.distributed.process_tree import tree_select_processes
+        from repro.distributed.process_tree import (
+            HealthConfig,
+            tree_select_processes,
+        )
 
         pid, nproc = jax.process_index(), jax.process_count()
         shard = np.array_split(np.arange(args.n), nproc)[pid]
         sel = tree_select_processes(
             feats[jnp.asarray(shard)], topology, args.r_local, args.r_final,
             compress=args.compress,
+            health=HealthConfig(
+                level_deadline_s=args.level_deadline_s,
+                min_quorum=args.min_quorum,
+                heartbeat_interval_s=args.heartbeat_interval_s,
+                heartbeat_grace_s=args.heartbeat_grace_s,
+            ),
         )
 
     record = {
@@ -118,12 +143,29 @@ def main(argv: list[str] | None = None) -> None:
         "fanouts": list(topology.fanouts),
         "compress": args.compress,
         "indices": np.asarray(sel.indices).tolist(),
+        "r_final": int(np.asarray(sel.indices).shape[0]),
         "weight_sum": float(jnp.sum(sel.weights)),
         "coverage": float(sel.coverage),
         "wire_bytes": sel.wire["gathered_feature_bytes"],
         "wire_reduction": round(sel.wire["reduction"], 3),
+        "health": sel.health,
     }
     print("TREE_SELECT_RESULT " + json.dumps(record), flush=True)
+
+    if record["health"] and record["health"].get("degraded"):
+        # the jax.distributed shutdown barrier needs EVERY task to check
+        # in, and a degraded run by definition has dead tasks — skip the
+        # barrier (and the eventual missed-heartbeat abort) instead of
+        # blocking the survivors on peers that can never arrive
+        if int(jax.process_index()) == 0:
+            # pid 0 hosts the coordination service; closing it while other
+            # survivors still run aborts their error-polling threads, so
+            # the leader exits last (survivors only have local printing
+            # left after the selection returns — seconds, not deadlines)
+            import time
+
+            time.sleep(5.0)
+        os._exit(0)
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.engines.streaming import StreamingConfig, StreamingSelector
 from repro.core.refresh import AsyncRefresher, RefreshResult
+from repro.faults import FailurePolicy, fault_point
 
 __all__ = ["CoresetService", "CoresetUpdate"]
 
@@ -77,6 +78,13 @@ class CoresetService:
         pool buffer (and the serialized snapshot) stays O(L·k·d) instead
         of O(n·d) for unbounded streams.  Published indices stay global
         arrival positions either way; γ then sums to ``n_live``.
+      failure_policy: retry/backoff/exhaustion for ingest drains
+        (DESIGN.md §12).  Drains are transactional — a failed attempt
+        restores the selector + pool to their pre-drain snapshot, so a
+        retry replays the same deltas against the same state.  Under
+        ``on_exhaustion='keep_stale'`` the failure is recorded
+        (:meth:`pop_failure`) instead of raising, and the service keeps
+        serving the previously installed selection.
     """
 
     def __init__(
@@ -89,6 +97,7 @@ class CoresetService:
         per_class: bool = False,
         mode: Literal["sync", "async"] = "sync",
         evict: bool = False,
+        failure_policy: FailurePolicy | None = None,
     ):
         self.budget = int(budget)
         self.dim = int(dim)
@@ -101,9 +110,11 @@ class CoresetService:
         self._lock = threading.Lock()
         self._staged: CoresetUpdate | None = None
         self._installed: CoresetUpdate | None = None
+        self._failures: list[dict] = []  # keep_stale abandonments (worker-fed)
         self.refresher = AsyncRefresher(
             _no_submit, mode=mode,
             ingest_fn=self._ingest_job, on_complete=self._stage,
+            failure_policy=failure_policy, on_failure=self._note_failure,
         )
 
     # -- lifecycle -----------------------------------------------------------
@@ -142,29 +153,65 @@ class CoresetService:
         """Pool size ingested so far (includes staged-but-not-installed)."""
         return self.selector.n_seen
 
+    def pop_failure(self) -> dict | None:
+        """Pop the oldest recorded keep_stale abandonment, if any.
+
+        The stdio server (``launch/serve.py``) checks this after every
+        delta so a client sees an explicit ``craig_refresh_failed`` event
+        instead of a silently unchanged version."""
+        with self._lock:
+            return self._failures.pop(0) if self._failures else None
+
     # -- worker side ---------------------------------------------------------
 
     def _ingest_job(self, deltas: list):
         """One coalesced drain: ingest every queued delta, (optionally)
-        evict dead pool rows, finalize once."""
-        for feats, labels in deltas:
-            self.selector.ingest(feats, labels=labels)
-            self._pool.append(feats)
-        pool = np.concatenate(self._pool, axis=0)
-        if self.evict:
-            keep = self.selector.compact()
-            pool = np.ascontiguousarray(pool[keep])
-            self._pool = [pool]
-        res = self.selector.result(pool)
-        indices = np.asarray(res.indices, np.int64)
-        if self.evict:  # live-pool positions → global arrival ids
-            indices = self.selector.live_ids[indices]
+        evict dead pool rows, finalize once.
+
+        Transactional: the selector state and pool buffer snapshot up
+        front and restore on ANY failure, so a retry (or the next drain
+        after a keep_stale abandonment) replays against unpoisoned state —
+        a half-applied delta can never leak into the sieve.
+        """
+        fault_point("service.ingest", n_deltas=len(deltas))
+        snap = self.selector.state_dict()
+        pool_snap = list(self._pool)
+        try:
+            for feats, labels in deltas:
+                self.selector.ingest(feats, labels=labels)
+                self._pool.append(feats)
+            pool = np.concatenate(self._pool, axis=0)
+            if self.evict:
+                keep = self.selector.compact()
+                pool = np.ascontiguousarray(pool[keep])
+                self._pool = [pool]
+            res = self.selector.result(pool)
+            indices = np.asarray(res.indices, np.int64)
+            if self.evict:  # live-pool positions → global arrival ids
+                indices = self.selector.live_ids[indices]
+        except BaseException:
+            self.selector.load_state_dict(snap)
+            self._pool = pool_snap
+            raise
         return (
             indices,
             np.asarray(res.weights, np.float32),
             float(res.coverage),
             self.selector.n_rows,
         )
+
+    def _note_failure(self, res: RefreshResult) -> None:
+        """on_failure hook (keep_stale): record the abandoned drain."""
+        err = res.error
+        with self._lock:
+            self._failures.append(
+                {
+                    "event": "craig_refresh_failed",
+                    "version": res.version,
+                    "attempts": res.attempts,
+                    "error": f"{type(err).__name__}: {err}",
+                }
+            )
 
     def _stage(self, res: RefreshResult) -> None:
         indices, weights, coverage, n_live = res.value

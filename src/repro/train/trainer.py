@@ -62,6 +62,7 @@ from repro.core.craig import CraigConfig, CraigSelector
 from repro.core.extract import ProxyExtractor
 from repro.core.refresh import AsyncRefresher, RefreshResult
 from repro.data.pipeline import CoresetSampler
+from repro.faults import FailurePolicy
 from repro.models.config import ModelConfig
 from repro.optim.optimizers import Optimizer
 from repro.train.train_step import make_select_step, make_train_step
@@ -99,6 +100,11 @@ class TrainerConfig:
     step_timeout_s: float | None = None  # straggler watchdog
     microbatches: int = 1
     seed: int = 0
+    # Supervision for the refresh worker (DESIGN.md §12): retry/backoff per
+    # job, then raise (default) / keep sampling the stale coreset
+    # ('keep_stale' — the failure is logged as a craig_refresh_failed event)
+    # / degrade to an inline synchronous refresh ('sync_fallback').
+    refresh_failure_policy: FailurePolicy | None = None
 
 
 class Trainer:
@@ -156,12 +162,16 @@ class Trainer:
                 mode=tcfg.refresh_mode,
                 on_complete=self._publish_stream,
                 ingest_fn=self._stream_ingest_job,
+                failure_policy=tcfg.refresh_failure_policy,
+                on_failure=self._refresh_failed,
             )
         else:
             self.refresher = AsyncRefresher(
                 self._refresh_work,
                 mode=tcfg.refresh_mode,
                 on_complete=self._publish_refresh,
+                failure_policy=tcfg.refresh_failure_policy,
+                on_failure=self._refresh_failed,
             )
         # Streaming-ingest state (streaming_ingest=True only): the selector
         # is built lazily at the first drain (budget = fraction × first
@@ -260,7 +270,26 @@ class Trainer:
                 # resolved EngineConfig dict (provenance; restorable via
                 # engines.EngineConfig.from_dict)
                 "engine": sel.engine,
+                # rows the validate_features='drop' guard removed (0 unless
+                # the guard fired — surfaced so degraded refreshes are
+                # visible in the metrics log, never silent)
+                "dropped_rows": sel.n_dropped,
             },
+        )
+
+    def _refresh_failed(self, result: RefreshResult) -> None:
+        """on_failure hook (``on_exhaustion='keep_stale'`` only): the job
+        was abandoned — nothing staged, training keeps sampling the
+        installed coreset.  Log it so the degradation is observable."""
+        err = result.error
+        self.metrics_log.append(
+            {
+                "event": "craig_refresh_failed",
+                "step": self.step,
+                "version": result.version,
+                "attempts": result.attempts,
+                "error": f"{type(err).__name__}: {err}",
+            }
         )
 
     # -- streaming ingest (DESIGN.md §10) --------------------------------------

@@ -1,0 +1,498 @@
+"""Fault injection + supervised failure handling (DESIGN.md §12).
+
+Covers the whole robustness seam without real chaos: the deterministic
+:class:`FaultPlan` registry (firing rules, serialization, env arming),
+:class:`FailurePolicy` (retry/backoff/exhaustion), every exhaustion route
+through ``AsyncRefresher``, the NaN/Inf feature guard on the selector
+path, the coreset service's transactional ingest, and the trainer-level
+guarantee that a *transient* refresh failure (failed once, retried,
+recovered) trains bit-identically to a clean run.  The process-killing
+faults run in the tier-2 chaos lane (tests/test_multiprocess_tree.py).
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.craig import CraigConfig, CraigSelector
+from repro.core.refresh import AsyncRefresher
+from repro.faults import (
+    ENV_VAR,
+    FailurePolicy,
+    FaultInjected,
+    FaultPlan,
+    FaultSpec,
+    active_plan,
+    clear,
+    fault_point,
+    fault_value,
+    injected,
+    install_from_env,
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    clear()
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultSpec
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_validates_fields():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(site="x", kind="explode")
+    with pytest.raises(ValueError, match="1-based"):
+        FaultSpec(site="x", kind="raise", on_calls=(0,))
+    with pytest.raises(ValueError, match="every"):
+        FaultSpec(site="x", kind="raise", every=0)
+    with pytest.raises(ValueError, match="p="):
+        FaultSpec(site="x", kind="raise", p=1.5)
+
+
+def test_on_calls_fires_on_exact_call_numbers():
+    plan = FaultPlan([FaultSpec(site="s", kind="raise", on_calls=(2,))])
+    with injected(plan):
+        fault_point("s")  # call 1: quiet
+        with pytest.raises(FaultInjected, match="call 2"):
+            fault_point("s")
+        fault_point("s")  # call 3: quiet
+    assert plan.calls("s") == 3
+
+
+def test_every_pattern_fires_on_first_of_each_period():
+    plan = FaultPlan([FaultSpec(site="s", kind="raise", every=2)])
+    fired = []
+    with injected(plan):
+        for i in range(1, 5):
+            try:
+                fault_point("s")
+                fired.append(False)
+            except FaultInjected:
+                fired.append(True)
+    assert fired == [True, False, True, False]
+
+
+def test_probabilistic_firing_is_seed_deterministic():
+    def sequence(seed):
+        plan = FaultPlan([FaultSpec(site="s", kind="raise", p=0.5)], seed=seed)
+        out = []
+        with injected(plan):
+            for _ in range(40):
+                try:
+                    fault_point("s")
+                    out.append(0)
+                except FaultInjected:
+                    out.append(1)
+        return out
+
+    assert sequence(7) == sequence(7)
+    assert 0 < sum(sequence(7)) < 40  # actually probabilistic, not constant
+
+
+def test_plan_json_roundtrip_and_env_install(monkeypatch):
+    plan = FaultPlan(
+        [FaultSpec(site="kv.get", kind="drop_key", key_pattern="sizes")],
+        seed=3,
+    )
+    monkeypatch.setenv(ENV_VAR, plan.to_json())
+    installed = install_from_env()
+    assert installed is active_plan()
+    assert installed.seed == 3
+    assert installed.specs == plan.specs
+    monkeypatch.delenv(ENV_VAR)
+    assert install_from_env() is None  # unset env: no-op, plan untouched
+    assert active_plan() is installed
+
+
+def test_drop_key_respects_key_pattern():
+    plan = FaultPlan(
+        [FaultSpec(site="kv.get", kind="drop_key", key_pattern="sizes")]
+    )
+    with injected(plan):
+        fault_point("kv.get", key="tree/0/n/1")  # no match: quiet
+        with pytest.raises(FaultInjected, match="tree/0/sizes"):
+            fault_point("kv.get", key="tree/0/sizes")
+
+
+def test_latency_fault_sleeps():
+    plan = FaultPlan([FaultSpec(site="s", kind="latency", latency_s=0.05)])
+    with injected(plan):
+        t0 = time.monotonic()
+        fault_point("s")
+        assert time.monotonic() - t0 >= 0.04
+
+
+def test_nan_fault_corrupts_leading_rows_preserving_array_family():
+    plan = FaultPlan([FaultSpec(site="v", kind="nan", rows=2)])
+    feats = np.ones((4, 3), np.float32)
+    with injected(plan):
+        out = plan.apply("v", feats)
+        assert isinstance(out, np.ndarray)
+        assert np.isnan(out[:2]).all() and np.isfinite(out[2:]).all()
+        jout = fault_value("v", jnp.ones((4, 3)))
+        assert isinstance(jout, jnp.ndarray)
+        assert bool(jnp.isnan(jout[0]).all())
+    # no plan installed → identity
+    same = fault_value("v", feats)
+    assert same is feats
+
+
+# ---------------------------------------------------------------------------
+# FailurePolicy
+# ---------------------------------------------------------------------------
+
+
+def test_failure_policy_validates():
+    with pytest.raises(ValueError, match="max_retries"):
+        FailurePolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff"):
+        FailurePolicy(backoff_base_s=-0.1)
+    with pytest.raises(ValueError, match="on_exhaustion"):
+        FailurePolicy(on_exhaustion="shrug")
+
+
+def test_backoff_doubles_and_caps():
+    p = FailurePolicy(max_retries=4, backoff_base_s=0.05, backoff_cap_s=0.15)
+    assert p.backoff_s(0) == pytest.approx(0.05)
+    assert p.backoff_s(1) == pytest.approx(0.10)
+    assert p.backoff_s(2) == pytest.approx(0.15)  # capped
+    assert p.backoff_s(3) == pytest.approx(0.15)
+
+
+# ---------------------------------------------------------------------------
+# AsyncRefresher supervision: every exhaustion route
+# ---------------------------------------------------------------------------
+
+
+def _flaky(fail_first_n):
+    """Work fn failing its first ``fail_first_n`` calls, succeeding after."""
+    calls = {"n": 0}
+
+    def work(_params):
+        calls["n"] += 1
+        if calls["n"] <= fail_first_n:
+            raise RuntimeError(f"transient #{calls['n']}")
+        return f"ok@{calls['n']}"
+
+    return work, calls
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_retry_recovers_and_records_attempts(mode):
+    work, calls = _flaky(1)
+    r = AsyncRefresher(
+        work, mode=mode,
+        failure_policy=FailurePolicy(max_retries=1, backoff_base_s=0.0),
+    )
+    r.submit(None)
+    res = r.collect(block=True)
+    assert res.attempts == 2 and not res.fell_back
+    assert res.value == "ok@2" and res.error is None
+    assert calls["n"] == 2
+
+
+def test_exhaustion_raise_surfaces_once_and_does_not_poison():
+    work, calls = _flaky(2)
+    r = AsyncRefresher(
+        work, mode="async",
+        failure_policy=FailurePolicy(max_retries=1, backoff_base_s=0.0),
+    )
+    r.submit(None)
+    with pytest.raises(RuntimeError, match=r"v1 failed after 2 attempt"):
+        r.wait()
+    r.wait()  # the failure was consumed: exactly-once surfacing
+    # failure is per JOB, not per refresher: the next submit runs clean
+    r.submit(None)
+    res = r.collect(block=True)
+    assert res.value == "ok@3" and res.attempts == 1
+
+
+def test_keep_stale_abandons_logs_once_and_stays_usable():
+    work, calls = _flaky(1)
+    failures = []
+    r = AsyncRefresher(
+        work, mode="async",
+        failure_policy=FailurePolicy(on_exhaustion="keep_stale"),
+        on_failure=failures.append,
+    )
+    r.submit(None)
+    r.wait()  # does NOT raise: the job was abandoned, not surfaced
+    assert len(failures) == 1
+    assert failures[0].version == 1 and failures[0].attempts == 1
+    assert "transient" in str(failures[0].error)
+    assert r.last_failure is failures[0]
+    assert r.collect() is None  # nothing published
+    r.submit(None)  # refresher fully usable after abandonment
+    res = r.collect(block=True)
+    assert res.value == "ok@2"
+    assert len(failures) == 1  # no spurious second report
+
+
+def test_sync_fallback_reruns_inline_at_next_touch_point():
+    work, calls = _flaky(2)  # both worker attempts fail, inline rerun works
+    r = AsyncRefresher(
+        work, mode="async",
+        failure_policy=FailurePolicy(
+            max_retries=1, backoff_base_s=0.0, on_exhaustion="sync_fallback"
+        ),
+    )
+    r.submit(None)
+    res = r.collect(block=True)  # wait() runs the fallback on THIS thread
+    assert res.fell_back and res.attempts == 3
+    assert res.value == "ok@3" and res.error is None
+
+
+def test_sync_fallback_second_failure_raises():
+    work, calls = _flaky(10)
+    r = AsyncRefresher(
+        work, mode="async",
+        failure_policy=FailurePolicy(
+            max_retries=0, backoff_base_s=0.0, on_exhaustion="sync_fallback"
+        ),
+    )
+    r.submit(None)
+    with pytest.raises(RuntimeError, match=r"v1 failed after 2 attempt"):
+        r.wait()
+    r.wait()  # consumed exactly once; refresher stays usable
+
+
+def test_publish_failure_is_never_retried():
+    work, calls = _flaky(0)
+
+    def bad_publish(_res):
+        raise RuntimeError("stage exploded")
+
+    r = AsyncRefresher(
+        work, mode="async", on_complete=bad_publish,
+        failure_policy=FailurePolicy(
+            max_retries=3, backoff_base_s=0.0, on_exhaustion="sync_fallback"
+        ),
+    )
+    r.submit(None)
+    with pytest.raises(RuntimeError, match="failed after 1 attempt"):
+        r.wait()
+    # the WORK succeeded on call 1 and must not be re-run: a publish
+    # failure re-running the work could stage the same version twice
+    assert calls["n"] == 1
+
+
+def test_injected_refresh_fault_rides_the_policy():
+    """The refresh.worker hook sits inside the retry loop: a plan that
+    fails every first attempt is healed by max_retries=1."""
+    plan = FaultPlan([FaultSpec(site="refresh.worker", kind="raise", every=2)])
+    r = AsyncRefresher(
+        lambda p: "selected", mode="sync",
+        failure_policy=FailurePolicy(max_retries=1, backoff_base_s=0.0),
+    )
+    with injected(plan):
+        r.submit(None)
+        res = r.collect()
+        assert res.attempts == 2 and res.value == "selected"
+
+
+# ---------------------------------------------------------------------------
+# validate_features guard (selector path)
+# ---------------------------------------------------------------------------
+
+
+def _pool_with_bad_rows(n=64, d=8, bad=(3, 7)):
+    rng = np.random.RandomState(0)
+    feats = rng.randn(n, d).astype(np.float32)
+    feats[bad[0], 0] = np.nan
+    feats[bad[1], 1] = np.inf
+    return feats
+
+
+def test_validate_features_raise_names_rows():
+    sel = CraigSelector(CraigConfig(fraction=0.25, per_class=False))
+    with pytest.raises(ValueError, match=r"2 of 64 .* \[3, 7\]"):
+        sel.select(_pool_with_bad_rows())
+
+
+def test_validate_features_drop_warns_remaps_and_counts():
+    sel = CraigSelector(
+        CraigConfig(fraction=0.25, per_class=False, validate_features="drop")
+    )
+    with pytest.warns(UserWarning, match="dropping 2"):
+        cs = sel.select(_pool_with_bad_rows())
+    assert cs.n_dropped == 2
+    idx = np.asarray(cs.indices)
+    assert 3 not in idx and 7 not in idx  # corrupted rows can't be medoids
+    assert idx.max() < 64  # indices are into the ORIGINAL pool
+    assert float(np.sum(cs.weights)) == pytest.approx(62.0)  # Σγ == n − dropped
+
+
+def test_validate_features_off_passes_through():
+    sel = CraigSelector(
+        CraigConfig(fraction=0.25, per_class=False, validate_features="off")
+    )
+    cs = sel.select(_pool_with_bad_rows())  # caller opted out of the guard
+    assert cs.n_dropped == 0 and len(np.asarray(cs.indices)) == 16
+
+
+def test_extract_nan_injection_is_caught_by_the_guard():
+    """End-to-end seam: a nan fault at extract.features produces exactly
+    the corruption validate_features exists to catch."""
+    plan = FaultPlan([FaultSpec(site="extract.features", kind="nan", rows=4)])
+    feats = np.abs(np.random.RandomState(1).randn(32, 8)).astype(np.float32)
+    with injected(plan):
+        corrupted = fault_value("extract.features", feats)
+    assert np.isnan(corrupted[:4]).all()
+    sel = CraigSelector(CraigConfig(fraction=0.25, per_class=False))
+    with pytest.raises(ValueError, match="4 of 32"):
+        sel.select(corrupted)
+
+
+# ---------------------------------------------------------------------------
+# CoresetService: transactional ingest + keep_stale replies
+# ---------------------------------------------------------------------------
+
+
+def _delta(seed, n=16, d=4):
+    return np.random.RandomState(seed).randn(n, d).astype(np.float32)
+
+
+def test_service_ingest_failure_is_atomic_and_recoverable():
+    from repro.serve import CoresetService
+
+    svc = CoresetService(8, 4, mode="sync")
+    plan = FaultPlan([FaultSpec(site="service.ingest", kind="raise", on_calls=(2,))])
+    with injected(plan):
+        svc.submit_delta(_delta(0))
+        assert svc.n_seen == 16
+        with pytest.raises(RuntimeError, match="failed after 1 attempt"):
+            svc.submit_delta(_delta(1))
+        # transactional: the poisoned drain rolled back wholesale
+        assert svc.n_seen == 16
+        svc.submit_delta(_delta(2))  # call 3: loop survives the failure
+    assert svc.n_seen == 32
+    u = svc.coreset()
+    assert u is not None and u.n_seen == 32
+    assert len(u.indices) == 8
+
+
+def test_service_keep_stale_records_failure_and_serves_stale():
+    from repro.serve import CoresetService
+
+    svc = CoresetService(
+        8, 4, mode="sync",
+        failure_policy=FailurePolicy(on_exhaustion="keep_stale"),
+    )
+    plan = FaultPlan([FaultSpec(site="service.ingest", kind="raise", on_calls=(2,))])
+    with injected(plan):
+        v1 = svc.submit_delta(_delta(0))
+        assert svc.pop_failure() is None
+        u1 = svc.coreset()
+        svc.submit_delta(_delta(1))  # abandoned, no raise
+        failure = svc.pop_failure()
+        assert failure is not None
+        assert failure["event"] == "craig_refresh_failed"
+        assert failure["attempts"] == 1 and "injected" in failure["error"]
+        assert svc.pop_failure() is None  # popped exactly once
+        # stale selection still served, state unpoisoned
+        assert svc.n_seen == 16
+        assert svc.coreset().version == u1.version == v1
+        svc.submit_delta(_delta(2))
+    assert svc.n_seen == 32 and svc.coreset().n_seen == 32
+
+
+def test_serve_loop_replies_error_event_and_survives(monkeypatch):
+    """The stdio protocol surfaces a keep_stale abandonment as an explicit
+    ok=false reply with the craig_refresh_failed event, then keeps serving."""
+    import io
+    import json as _json
+
+    from repro.launch.serve import _serve_coreset
+
+    plan = FaultPlan([FaultSpec(site="service.ingest", kind="raise", on_calls=(2,))])
+    monkeypatch.setenv(ENV_VAR, plan.to_json())
+
+    class Args:
+        budget, dim, metric, per_class = 8, 4, "l2", False
+        eps, levels, evict = 0.15, 0, False
+        ingest_retries, ingest_backoff_s = 0, 0.0
+        on_exhaustion = "keep_stale"
+
+    reqs = [
+        {"op": "delta", "feats": _delta(0).tolist()},
+        {"op": "delta", "feats": _delta(1).tolist()},
+        {"op": "coreset"},
+        {"op": "quit"},
+    ]
+    stdin = io.StringIO("\n".join(_json.dumps(r) for r in reqs) + "\n")
+    stdout = io.StringIO()
+    _serve_coreset(Args(), stdin=stdin, stdout=stdout)
+    r1, r2, r3, r4 = [
+        _json.loads(line) for line in stdout.getvalue().splitlines()
+    ]
+    assert r1["ok"] is True and r1["version"] == 1
+    assert r2["ok"] is False and r2["event"] == "craig_refresh_failed"
+    assert r2["n_seen"] == 16  # the failed delta rolled back
+    assert r3["ok"] is True and r3["version"] == 1  # stale but served
+    assert r4 == {"ok": True, "bye": True}
+
+
+# ---------------------------------------------------------------------------
+# Trainer: transient failure heals bit-identically; keep_stale degrades
+# ---------------------------------------------------------------------------
+
+
+def _train(n_steps=14, policy=None):
+    import jax
+
+    from repro.data.synthetic import TokenStream
+    from repro.models import ModelConfig, init_params
+    from repro.optim import adamw, constant
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = ModelConfig(
+        name="tiny", family="dense", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=64, vocab_size=128, logit_chunk=16,
+    )
+    ds = TokenStream(n_docs=48, seq_len=24, vocab_size=128, n_topics=6)
+    tcfg = TrainerConfig(
+        batch_size=8, select_every_epochs=2, refresh_mode="sync",
+        craig=CraigConfig(fraction=0.5, per_class=False),
+        refresh_failure_policy=policy,
+    )
+    t = Trainer(
+        cfg, tcfg, ds, adamw(constant(2e-3)),
+        lambda: init_params(jax.random.PRNGKey(0), cfg),
+    )
+    return t.run(n_steps)
+
+
+def test_trainer_transient_refresh_failure_trains_bit_identically():
+    clean = _train()
+    plan = FaultPlan([FaultSpec(site="refresh.worker", kind="raise", every=2)])
+    with injected(plan):
+        healed = _train(
+            policy=FailurePolicy(
+                max_retries=1, backoff_base_s=0.0, on_exhaustion="keep_stale"
+            )
+        )
+    clean_losses = [m["loss"] for m in clean if m["event"] == "step"]
+    healed_losses = [m["loss"] for m in healed if m["event"] == "step"]
+    assert clean_losses == healed_losses  # bit-identical, not approx
+    refreshes = [m for m in healed if m["event"] == "craig_refresh"]
+    assert refreshes, "the retried refreshes must still install"
+    assert not [m for m in healed if m["event"] == "craig_refresh_failed"]
+
+
+def test_trainer_keep_stale_logs_failures_and_completes():
+    plan = FaultPlan([FaultSpec(site="refresh.worker", kind="raise")])
+    with injected(plan):
+        log = _train(
+            policy=FailurePolicy(on_exhaustion="keep_stale")
+        )
+    steps = [m for m in log if m["event"] == "step"]
+    assert len(steps) == 14  # training survived every refresh failing
+    failed = [m for m in log if m["event"] == "craig_refresh_failed"]
+    assert failed and failed[0]["attempts"] == 1
+    assert "FaultInjected" in failed[0]["error"]
+    assert not [m for m in log if m["event"] == "craig_refresh"]

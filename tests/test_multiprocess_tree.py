@@ -14,6 +14,7 @@ import os
 import socket
 import subprocess
 import sys
+import time
 
 import numpy as np
 import pytest
@@ -97,3 +98,58 @@ def test_four_process_depth_two_tree_select():
     assert recs[0]["weight_sum"] == 256.0
     ref = _host_reference((2, 2), 256, 32, 8, 10, "int8")
     assert np.asarray(ref.indices).tolist() == recs[0]["indices"]
+
+
+def test_chaos_leaf_killed_mid_round_degrades_to_quorum():
+    """The chaos lane (DESIGN.md §12): 4 leaves, pid 3 SIGKILLed by an
+    injected fault right before publishing its candidates.  The three
+    survivors must finish within the configured deadline envelope (NOT
+    the legacy 300 s KV timeout), agree on one degraded selection with
+    correct provenance, and conserve Σγ over the surviving shards."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    victim_env = dict(env)
+    victim_env["REPRO_FAULT_PLAN"] = json.dumps(
+        {"seed": 0, "specs": [{"site": "tree.publish", "kind": "kill"}]}
+    )
+    common = [
+        "--coordinator", f"127.0.0.1:{_free_port()}",
+        "--num-processes", "4", "--fanouts", "4",
+        "--n", "256", "--d", "16", "--r-local", "8", "--r-final", "10",
+        "--compress", "int8",
+        "--level-deadline-s", "20", "--min-quorum", "0.75",
+        "--heartbeat-interval-s", "0.2", "--heartbeat-grace-s", "2.0",
+    ]
+    t0 = time.monotonic()
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.tree",
+             "--process-id", str(i)] + common,
+            env=victim_env if i == 3 else env,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        )
+        for i in range(4)
+    ]
+    outs = [p.communicate(timeout=_TIMEOUT) for p in procs]
+    elapsed = time.monotonic() - t0
+    # the victim died by its own injected SIGKILL
+    assert procs[3].returncode == -9, outs[3][1][-2000:]
+    records = []
+    for p, (out, err) in zip(procs[:3], outs[:3]):
+        assert p.returncode == 0, err[-3000:]
+        lines = [l for l in out.splitlines()
+                 if l.startswith("TREE_SELECT_RESULT ")]
+        assert lines, out
+        records.append(json.loads(lines[0].split(" ", 1)[1]))
+    # survivors finished inside the configured envelope, not 300 s
+    assert elapsed < 120, f"degraded run took {elapsed:.0f}s"
+    assert all(r["indices"] == records[0]["indices"] for r in records)
+    health = records[0]["health"]
+    assert health["degraded"] is True
+    assert health["missing_pids"] == [3]
+    assert health["quorum"] == pytest.approx(0.75)
+    # Σγ covers exactly the surviving shards (3 × 64 points) and no
+    # point of the dead shard (global ids 192..255) can be selected
+    assert records[0]["weight_sum"] == 192.0
+    assert max(records[0]["indices"]) < 192
+    assert len(set(records[0]["indices"])) == 10

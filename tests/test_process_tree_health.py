@@ -1,0 +1,265 @@
+"""Tier-1 unit tests for the process-tree fault model (DESIGN.md §12).
+
+The real multi-process lanes (bit-identity and the SIGKILL chaos case)
+live in tests/test_multiprocess_tree.py behind the tier2 marker; these
+tests exercise the health plumbing — the KV wire primitives, the env
+deadline knob, heartbeat monitoring, degraded candidate-count algebra and
+quorum math — against a dict-backed fake KV client, so the failure paths
+run on every PR without spawning processes.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.distributed.process_tree import (
+    KV_TIMEOUT_ENV,
+    HealthConfig,
+    KVStoreError,
+    QuorumError,
+    _await_key,
+    _decode_mask,
+    _encode_mask,
+    _HeartbeatMonitor,
+    _kv_get,
+    _node_r,
+    _nominal_r,
+    _poll_str,
+    _put_cell,
+    _require_quorum,
+    kv_timeout_ms,
+)
+from repro.distributed.tree_select import TreeTopology
+from repro.faults import FaultPlan, FaultSpec, clear, injected
+
+
+class FakeKV:
+    """Dict-backed stand-in for the jax.distributed coordination client,
+    implementing the four methods the wire layer uses."""
+
+    def __init__(self):
+        self.strings = {}
+        self.blobs = {}
+
+    def key_value_set(self, key, value):
+        self.strings[key] = value
+
+    def key_value_set_bytes(self, key, value):
+        self.blobs[key] = bytes(value)
+
+    def key_value_dir_get(self, key):
+        prefix = key + "/"
+        return [
+            (k, v) for k, v in sorted(self.strings.items())
+            if k.startswith(prefix)
+        ]
+
+    def blocking_key_value_get_bytes(self, key, timeout_ms):
+        if key in self.blobs:
+            return self.blobs[key]
+        raise RuntimeError(f"Deadline Exceeded waiting for {key}")
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    clear()
+
+
+# ---------------------------------------------------------------------------
+# env deadline knob
+# ---------------------------------------------------------------------------
+
+
+def test_kv_timeout_defaults_to_300s(monkeypatch):
+    monkeypatch.delenv(KV_TIMEOUT_ENV, raising=False)
+    assert kv_timeout_ms() == 300_000
+
+
+def test_kv_timeout_env_override(monkeypatch):
+    monkeypatch.setenv(KV_TIMEOUT_ENV, "1500")
+    assert kv_timeout_ms() == 1500
+
+
+@pytest.mark.parametrize("bad", ["soon", "1.5", "0", "-10"])
+def test_kv_timeout_rejects_bad_values(monkeypatch, bad):
+    monkeypatch.setenv(KV_TIMEOUT_ENV, bad)
+    with pytest.raises(ValueError, match=KV_TIMEOUT_ENV):
+        kv_timeout_ms()
+
+
+# ---------------------------------------------------------------------------
+# HealthConfig validation
+# ---------------------------------------------------------------------------
+
+
+def test_health_config_validates():
+    with pytest.raises(ValueError, match="level_deadline_s"):
+        HealthConfig(level_deadline_s=0)
+    with pytest.raises(ValueError, match="heartbeat_interval_s"):
+        HealthConfig(heartbeat_interval_s=0)
+    with pytest.raises(ValueError, match="2×"):
+        HealthConfig(heartbeat_interval_s=1.0, heartbeat_grace_s=1.5)
+    with pytest.raises(ValueError, match="poll_ms"):
+        HealthConfig(poll_ms=0)
+    with pytest.raises(ValueError, match="min_quorum"):
+        HealthConfig(min_quorum=0.0)
+    with pytest.raises(ValueError, match="min_quorum"):
+        HealthConfig(min_quorum=1.1)
+
+
+def test_health_config_deadline_falls_back_to_env(monkeypatch):
+    monkeypatch.setenv(KV_TIMEOUT_ENV, "2000")
+    assert HealthConfig().deadline_s() == pytest.approx(2.0)
+    assert HealthConfig(level_deadline_s=7.5).deadline_s() == 7.5
+
+
+# ---------------------------------------------------------------------------
+# wire primitives
+# ---------------------------------------------------------------------------
+
+
+def test_put_cell_poll_str_roundtrip():
+    kv = FakeKV()
+    assert _poll_str(kv, "t/sizes") is None
+    _put_cell(kv, "t/sizes", "64,64,-1,64")
+    assert _poll_str(kv, "t/sizes") == "64,64,-1,64"
+    # directory semantics: the value lives at {key}/v, never at {key}
+    assert "t/sizes/v" in kv.strings and "t/sizes" not in kv.strings
+    # sibling cells don't bleed into each other
+    _put_cell(kv, "t/sizes2", "1")
+    assert _poll_str(kv, "t/sizes") == "64,64,-1,64"
+
+
+def test_mask_roundtrip():
+    mask = np.array([0, 1, 1, 0], np.int8)
+    s = _encode_mask(mask)
+    assert s == "0110"
+    np.testing.assert_array_equal(_decode_mask(s), mask)
+
+
+def test_kv_get_error_names_key_pid_level_and_timeout():
+    kv = FakeKV()
+    with pytest.raises(KVStoreError) as ei:
+        _kv_get(kv, "t/0/f", (4, 2), np.float32,
+                pid=3, level=1, what="child features", timeout_ms=50)
+    msg = str(ei.value)
+    assert "'t/0/f'" in msg and "pid 3" in msg
+    assert "level 1" in msg and "50 ms" in msg and "child features" in msg
+
+
+def test_kv_get_roundtrips_bytes():
+    kv = FakeKV()
+    arr = np.arange(8, dtype=np.float32).reshape(4, 2)
+    kv.key_value_set_bytes("t/0/f", arr.tobytes())
+    out = _kv_get(kv, "t/0/f", (4, 2), np.float32,
+                  pid=0, level=1, what="child features", timeout_ms=50)
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_drop_key_fault_surfaces_as_kv_store_error():
+    kv = FakeKV()
+    kv.key_value_set_bytes("t/0/f", b"\x00" * 4)
+    plan = FaultPlan(
+        [FaultSpec(site="kv.get", kind="drop_key", key_pattern="t/0/f")]
+    )
+    with injected(plan):
+        with pytest.raises(KVStoreError, match="FaultInjected"):
+            _kv_get(kv, "t/0/f", (1,), np.float32,
+                    pid=0, level=1, what="child features", timeout_ms=50)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat monitor + deadline waits
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_alive_while_beats_arrive_dead_after_silence():
+    kv = FakeKV()
+    mon = _HeartbeatMonitor(kv, "t", 1, grace_s=0.15)
+    assert mon.alive()  # creation counts as a beat
+    kv.key_value_set("t/hb/1/0", "1")
+    assert mon.alive()
+    time.sleep(0.1)
+    kv.key_value_set("t/hb/1/1", "1")  # fresh beat resets the clock
+    assert mon.alive()
+    time.sleep(0.2)  # silence past the grace window
+    assert not mon.alive()
+
+
+def test_await_key_returns_value_published_late():
+    kv = FakeKV()
+    _put_cell(kv, "t/k", "ready")
+    assert _await_key(kv, "t/k", deadline_s=0.5, poll_ms=10) == "ready"
+
+
+def test_await_key_deadline_expiry_returns_none():
+    kv = FakeKV()
+    t0 = time.monotonic()
+    assert _await_key(kv, "t/k", deadline_s=0.2, poll_ms=10) is None
+    assert 0.15 <= time.monotonic() - t0 < 2.0
+
+
+def test_await_key_dead_publisher_short_circuits_with_final_probe():
+    kv = FakeKV()
+    mon = _HeartbeatMonitor(kv, "t", 1, grace_s=0.05)
+    time.sleep(0.1)  # publisher already silent past grace
+    t0 = time.monotonic()
+    assert _await_key(kv, "t/k", deadline_s=30.0, poll_ms=10,
+                      monitor=mon) is None
+    assert time.monotonic() - t0 < 5.0  # nowhere near the 30 s deadline
+    # publish-then-die: a committed publish is honored by the final probe
+    _put_cell(kv, "t/k2", "committed")
+    mon2 = _HeartbeatMonitor(kv, "t", 2, grace_s=0.05)
+    time.sleep(0.1)
+    assert _await_key(kv, "t/k2", deadline_s=30.0, poll_ms=10,
+                      monitor=mon2) == "committed"
+
+
+# ---------------------------------------------------------------------------
+# degraded candidate-count algebra + quorum
+# ---------------------------------------------------------------------------
+
+
+def test_node_r_matches_nominal_when_clean():
+    topo = TreeTopology((4, 2))
+    dead = np.zeros(8, np.int8)
+    for level in range(topo.depth + 1):
+        nodes = int(np.prod(topo.fanouts[level:])) if level < topo.depth else 1
+        for node in range(nodes):
+            assert _node_r(level, node, dead, topo, 8, 16, 10) == _nominal_r(
+                level, topo, 8, 16, 10
+            )
+
+
+def test_node_r_degrades_to_surviving_union():
+    topo = TreeTopology((4,))
+    dead = np.array([0, 0, 0, 1], np.int8)
+    # 3 surviving leaves × r_local=8 = 24 ≥ r_final=10 → budget holds
+    assert _node_r(1, 0, dead, topo, 8, 16, 10) == 10
+    # 1 survivor: union 8 < r_final 10 → shrink to what exists
+    dead3 = np.array([1, 1, 1, 0], np.int8)
+    assert _node_r(1, 0, dead3, topo, 8, 16, 10) == 8
+    # whole subtree dead → 0
+    assert _node_r(1, 0, np.ones(4, np.int8), topo, 8, 16, 10) == 0
+    # dead leaf level-0 base case
+    assert _node_r(0, 3, dead, topo, 8, 16, 10) == 0
+    assert _node_r(0, 0, dead, topo, 8, 16, 10) == 8
+
+
+def test_node_r_composes_up_a_two_level_tree():
+    topo = TreeTopology((2, 2))
+    dead = np.array([1, 0, 0, 0], np.int8)  # leaf 0 of 4 dead
+    # node 0 at level 1 keeps only leaf 1's candidates: min(r_node, 8) = 8
+    assert _node_r(1, 0, dead, topo, 8, 12, 10) == 8
+    assert _node_r(1, 1, dead, topo, 8, 12, 10) == 12  # clean: min(12, 16)
+    # root sees union 8 + 12 = 20 ≥ r_final
+    assert _node_r(2, 0, dead, topo, 8, 12, 10) == 10
+
+
+def test_require_quorum_boundary_and_failure():
+    _require_quorum(3, 4, 0.75, level=1, node=0, missing=[3])  # exactly at
+    with pytest.raises(QuorumError) as ei:
+        _require_quorum(2, 4, 0.75, level=1, node=0, missing=[3, 1])
+    msg = str(ei.value)
+    assert "2/4" in msg and "min_quorum=0.75" in msg and "[1, 3]" in msg

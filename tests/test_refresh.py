@@ -98,6 +98,52 @@ def test_refresher_propagates_worker_error():
         r2.submit({}, snapshot=False)
 
 
+def test_refresher_wait_timeout_is_a_total_deadline():
+    """Regression: wait(timeout=) used to pass the timeout to EVERY
+    internal join, so a worker sleeping past it in short naps could keep
+    wait() blocked for many multiples of the requested deadline.  It must
+    be a single total deadline, raise TimeoutError, and leave the
+    refresher fully usable (the job keeps running; a later untimed wait
+    collects it)."""
+    release = threading.Event()
+
+    def slow(params):
+        release.wait(5.0)
+        return "done"
+
+    r = AsyncRefresher(slow, mode="async")
+    r.submit({}, snapshot=False)
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError, match="still running after 0.05"):
+        r.wait(timeout=0.05)
+    assert time.monotonic() - t0 < 1.0  # honored the deadline, not 5 s
+    assert r.busy  # the job was NOT cancelled or abandoned
+    release.set()
+    r.wait()  # untimed wait after a timed-out one still drains
+    res = r.collect()
+    assert res is not None and res.value == "done"
+
+
+def test_refresher_wait_timeout_then_failure_surfaces_once():
+    release = threading.Event()
+
+    def slow_boom(params):
+        release.wait(5.0)
+        raise ValueError("late failure")
+
+    r = AsyncRefresher(slow_boom, mode="async")
+    r.submit({}, snapshot=False)
+    with pytest.raises(TimeoutError):
+        r.wait(timeout=0.05)
+    release.set()
+    with pytest.raises(RuntimeError, match="refresh v1 failed"):
+        r.wait()
+    r.wait()  # consumed exactly once
+    r.submit({}, snapshot=False)  # and the refresher stays usable
+    with pytest.raises(RuntimeError, match="refresh v2 failed"):
+        r.wait()
+
+
 def test_refresher_captures_on_complete_failure():
     """A publish (on_complete) failure must surface at wait() in async mode
     just like it raises at submit() in sync mode — never vanish on the

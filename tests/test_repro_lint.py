@@ -304,6 +304,45 @@ def test_concurrency_clean_worker_stays_quiet(tmp_path):
     assert not conc, conc
 
 
+def test_concurrency_bare_blocking_kv_get_flagged(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        def fetch(client, key):
+            return client.blocking_key_value_get_bytes(key, 300_000)
+        ''',
+    )
+    findings = _by_rule(result, "kv-deadline")
+    assert len(findings) == 1, findings
+    assert findings[0].line == 3
+    assert "_kv_get" in findings[0].message
+
+
+def test_concurrency_kv_get_inside_wrapper_stays_quiet(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        def _raw_get_bytes(client, key, timeout_ms):
+            return client.blocking_key_value_get_bytes(key, int(timeout_ms))
+        ''',
+    )
+    assert not _by_rule(result, "kv-deadline")
+
+
+def test_concurrency_kv_get_suppressible_with_reason(tmp_path):
+    result = _lint(
+        tmp_path,
+        '''
+        def probe(client, key):
+            return client.blocking_key_value_get(key, 5)  # repro-lint: disable=kv-deadline  # fixture
+        ''',
+    )
+    assert not _by_rule(result, "kv-deadline")
+    assert any(
+        f.rule_id == "kv-deadline" for f in result.suppressed
+    ), "suppression should still be reported"
+
+
 # ---------------------------------------------------------------------------
 # pass 4: api hygiene
 # ---------------------------------------------------------------------------
